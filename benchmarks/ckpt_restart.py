@@ -1,0 +1,64 @@
+"""Fig. 5 reproduction: checkpoint/restart times and image sizes vs scale.
+
+Paper: ckpt/restart times for Rodinia + HPGMG/HYPRE at 8-32 ranks; image
+size per rank; buffer-cache effects. Here: one host scales state size
+(the per-rank image in the paper shrinks as ranks grow — we sweep the
+same per-host image sizes directly) and reports save / restore / verify.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.checkpoint import ChunkStore
+from repro.core import ForkedCheckpointer, RestoreManager
+
+
+def run() -> None:
+    for mb in (16, 64, 256):
+        n = (mb << 20) // 4
+        rng = np.random.default_rng(0)
+        state = {
+            "device": {"w": jnp.asarray(rng.standard_normal(n), jnp.float32)},
+            "host": {"step": np.int64(1)},
+        }
+        jax.block_until_ready(state["device"]["w"])
+        with tempfile.TemporaryDirectory() as d:
+            ck = ForkedCheckpointer(
+                ChunkStore(d), codec="zstd1", chunk_bytes=8 << 20,
+                incremental=False, digest_on_device=False,
+            )
+            t0 = time.perf_counter()
+            r = ck.save_async(1, state)
+            blocking = time.perf_counter() - t0
+            r.wait()
+            total = blocking + r.persist_s
+            ck.close()
+
+            t1 = time.perf_counter()
+            rm = RestoreManager(ChunkStore(d))
+            restored, _ = rm.restore()
+            restart = time.perf_counter() - t1
+
+            t2 = time.perf_counter()
+            rm.restore(verify=True)
+            verify = time.perf_counter() - t2
+
+        row(
+            f"fig5_ckpt_restart_{mb}mb",
+            total * 1e6,
+            blocking_ms=round(blocking * 1e3, 1),
+            persist_ms=round(r.persist_s * 1e3, 1),
+            restart_ms=round(restart * 1e3, 1),
+            verify_ms=round(verify * 1e3, 1),
+            image_mb=round(r.bytes_written / 2**20, 1),
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Shared benchmark helpers. All benchmarks print CSV:
+
+    name,us_per_call,derived
+
+``derived`` carries the table-specific figure (overhead %, speedup x,
+bytes, ...) as `key=value` pairs joined by ';'.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, build
+from repro.optim import get_optimizer
+
+
+def row(name: str, us_per_call: float, **derived) -> str:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    line = f"{name},{us_per_call:.1f},{d}"
+    print(line, flush=True)
+    return line
+
+
+def bench_cfg(n_layers=4, d_model=256, vocab=8192) -> ModelConfig:
+    """~10M-param dense model: big enough to time, small enough for CPU."""
+    return ModelConfig(
+        name="bench", family="dense", num_layers=n_layers, d_model=d_model,
+        vocab_size=vocab, num_heads=8, num_kv_heads=4, head_dim=d_model // 8,
+        d_ff=4 * d_model, param_dtype="float32", compute_dtype="float32",
+        ce_chunk_tokens=0,
+    )
+
+
+def make_train_setup(cfg, batch=8, seq=128, seed=0):
+    model = build(cfg)
+    opt = get_optimizer("adamw", 1e-3)
+    params = model.init(jax.random.key(seed))
+
+    @jax.jit
+    def step_fn(dstate, batch):
+        (l, _), g = jax.value_and_grad(model.loss, has_aux=True)(
+            dstate["params"], batch
+        )
+        p2, o2 = opt.update(g, dstate["opt"], dstate["params"], dstate["step"])
+        return {"params": p2, "opt": o2, "step": dstate["step"] + 1}, l
+
+    state = {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+    rng = np.random.default_rng(seed)
+    b = {
+        "inputs": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+    }
+    return model, step_fn, state, b
+
+
+def timeit(fn, *, warmup=1, iters=5) -> float:
+    """Median seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

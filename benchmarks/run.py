@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run overhead   # one
+
+Output: ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import ckpt_restart, incremental, overhead, roofline
+from benchmarks import strategies_real, strategies_synthetic
+
+ALL = {
+    "overhead": overhead.run,                    # Fig. 4
+    "ckpt_restart": ckpt_restart.run,            # Fig. 5
+    "strategies_synthetic": strategies_synthetic.run,  # Table 2
+    "strategies_real": strategies_real.run,      # Table 3
+    "incremental": incremental.run,              # beyond-paper
+    "roofline": roofline.run,                    # §Roofline emitter
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for n in names:
+        ALL[n]()
+
+
+if __name__ == "__main__":
+    main()

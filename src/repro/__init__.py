@@ -1,0 +1,2 @@
+"""repro — CRUM on TPU: checkpoint-restart for unified device/host state in JAX."""
+__version__ = "0.1.0"

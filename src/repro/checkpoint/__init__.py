@@ -1,0 +1,47 @@
+from repro.checkpoint.codecs import Codec, get_codec, list_codecs
+from repro.checkpoint.chunking import (
+    ChunkKey,
+    chunk_digest_np,
+    iter_chunks,
+    join_chunks,
+    split_into_chunks,
+    DEFAULT_CHUNK_BYTES,
+)
+from repro.checkpoint.manifest import (
+    ChunkRecord,
+    LeafRecord,
+    Manifest,
+    atomic_write,
+    commit_manifest,
+    latest_committed_step,
+    load_manifest,
+)
+from repro.checkpoint.store import ChunkStore
+from repro.checkpoint.sharded import (
+    restore_pytree,
+    restore_pytree_elastic,
+    save_pytree,
+)
+
+__all__ = [
+    "Codec",
+    "get_codec",
+    "list_codecs",
+    "ChunkKey",
+    "chunk_digest_np",
+    "iter_chunks",
+    "join_chunks",
+    "split_into_chunks",
+    "DEFAULT_CHUNK_BYTES",
+    "ChunkRecord",
+    "LeafRecord",
+    "Manifest",
+    "atomic_write",
+    "commit_manifest",
+    "latest_committed_step",
+    "load_manifest",
+    "ChunkStore",
+    "save_pytree",
+    "restore_pytree",
+    "restore_pytree_elastic",
+]

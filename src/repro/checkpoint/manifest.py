@@ -1,0 +1,248 @@
+"""Checkpoint manifests + atomic commit protocol.
+
+Layout of a checkpoint directory (one per step)::
+
+    <root>/step_00000042/
+        data-h0000.bin            per-host chunk payload files
+        hostmeta-h0000.msgpack    per-host leaf/chunk records
+        MANIFEST.msgpack          merged manifest (written by coordinator)
+        COMMIT                    commit marker (last thing written)
+
+A checkpoint exists iff COMMIT exists; everything before that is invisible
+to restore. This mirrors CRUM's requirement that a crash mid-checkpoint must
+leave the previous image restorable (the forked child writing the image can
+die without corrupting anything).
+
+The manifest is *topology-independent*: leaves are keyed by path and chunk
+data is keyed by global index ranges (shard domains), so restore can target
+any mesh — the analogue of CRUM's "checkpoint on one CUDA version, restart
+on another".
+
+Delta (incremental) manifests: a chunk record may carry a ``file`` that
+lives in an earlier step's directory. Restore chases these references, so an
+incremental checkpoint only persists digest-dirty chunks.
+"""
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass, field, asdict
+from typing import Any
+
+import msgpack
+import numpy as np
+
+FORMAT_VERSION = 2
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+@dataclass
+class ChunkRecord:
+    index: int          # chunk ordinal within its shard
+    raw_len: int        # uncompressed byte length
+    digest: int         # u64 content digest (chunking.chunk_digest_np)
+    codec: str          # codec name used on disk
+    file: str           # path relative to checkpoint ROOT (enables deltas)
+    file_offset: int
+    comp_len: int
+
+
+@dataclass
+class ShardRecord:
+    start: list[int]    # global index-range start (per dim)
+    stop: list[int]     # global index-range stop (per dim)
+    chunks: list[ChunkRecord] = field(default_factory=list)
+
+
+@dataclass
+class LeafRecord:
+    path: str
+    shape: list[int]
+    dtype: str
+    shards: list[ShardRecord] = field(default_factory=list)
+
+
+@dataclass
+class Manifest:
+    step: int
+    format_version: int = FORMAT_VERSION
+    leaves: dict[str, LeafRecord] = field(default_factory=dict)
+    skeleton: Any = None       # nested dict/list/tuple structure w/ leaf paths
+    meta: dict = field(default_factory=dict)  # free-form (mesh, config, ...)
+
+    # -- (de)serialization -------------------------------------------------
+    def to_bytes(self) -> bytes:
+        payload = {
+            "step": self.step,
+            "format_version": self.format_version,
+            "leaves": {k: asdict(v) for k, v in self.leaves.items()},
+            "skeleton": _encode_skeleton(self.skeleton),
+            "meta": self.meta,
+        }
+        return msgpack.packb(payload, use_bin_type=True)
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "Manifest":
+        p = msgpack.unpackb(data, raw=False, strict_map_key=False)
+        if p["format_version"] > FORMAT_VERSION:
+            raise ValueError(
+                f"manifest format {p['format_version']} newer than supported "
+                f"{FORMAT_VERSION}"
+            )
+        leaves = {}
+        for k, lv in p["leaves"].items():
+            shards = [
+                ShardRecord(
+                    start=s["start"],
+                    stop=s["stop"],
+                    chunks=[ChunkRecord(**c) for c in s["chunks"]],
+                )
+                for s in lv["shards"]
+            ]
+            leaves[k] = LeafRecord(lv["path"], lv["shape"], lv["dtype"], shards)
+        return Manifest(
+            step=p["step"],
+            format_version=p["format_version"],
+            leaves=leaves,
+            skeleton=_decode_skeleton(p["skeleton"]),
+            meta=p.get("meta", {}),
+        )
+
+    def total_bytes(self, *, compressed: bool = True) -> int:
+        return sum(
+            (c.comp_len if compressed else c.raw_len)
+            for lv in self.leaves.values()
+            for s in lv.shards
+            for c in s.chunks
+        )
+
+
+# -- tree skeleton -----------------------------------------------------------
+# Checkpointable state must be a pytree of dict / list / tuple containers
+# with array leaves. The skeleton encodes the container structure with leaf
+# paths at the leaf positions, so restore is pickle-free and version-robust.
+
+def _encode_skeleton(node: Any) -> Any:
+    if isinstance(node, dict):
+        return {"t": "d", "k": list(node.keys()),
+                "v": [_encode_skeleton(v) for v in node.values()]}
+    if isinstance(node, tuple):
+        return {"t": "t", "v": [_encode_skeleton(v) for v in node]}
+    if isinstance(node, list):
+        return {"t": "l", "v": [_encode_skeleton(v) for v in node]}
+    if node is None:
+        return {"t": "n"}
+    if isinstance(node, str):  # leaf path reference
+        return {"t": "p", "v": node}
+    raise TypeError(f"unsupported skeleton node {type(node)}")
+
+
+def _decode_skeleton(enc: Any) -> Any:
+    if enc is None:
+        return None
+    t = enc["t"]
+    if t == "d":
+        return {k: _decode_skeleton(v) for k, v in zip(enc["k"], enc["v"])}
+    if t == "t":
+        return tuple(_decode_skeleton(v) for v in enc["v"])
+    if t == "l":
+        return [_decode_skeleton(v) for v in enc["v"]]
+    if t == "n":
+        return None
+    if t == "p":
+        return enc["v"]
+    raise TypeError(f"bad skeleton tag {t}")
+
+
+def build_skeleton(tree: Any, prefix: str = "") -> Any:
+    """Replace every leaf of a dict/list/tuple pytree with its path string."""
+    if isinstance(tree, dict):
+        return {k: build_skeleton(v, f"{prefix}{k}/") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        seq = [build_skeleton(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+        return tuple(seq) if isinstance(tree, tuple) else seq
+    if tree is None:
+        return None
+    return prefix[:-1]  # strip trailing '/'
+
+
+def skeleton_fill(skeleton: Any, leaves: dict[str, Any]) -> Any:
+    """Rebuild the original pytree from a skeleton + {path: leaf} map."""
+    if isinstance(skeleton, dict):
+        return {k: skeleton_fill(v, leaves) for k, v in skeleton.items()}
+    if isinstance(skeleton, tuple):
+        return tuple(skeleton_fill(v, leaves) for v in skeleton)
+    if isinstance(skeleton, list):
+        return [skeleton_fill(v, leaves) for v in skeleton]
+    if skeleton is None:
+        return None
+    return leaves[skeleton]
+
+
+def skeleton_paths(skeleton: Any) -> list[str]:
+    out: list[str] = []
+
+    def rec(node: Any) -> None:
+        if isinstance(node, dict):
+            for v in node.values():
+                rec(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                rec(v)
+        elif isinstance(node, str):
+            out.append(node)
+
+    rec(skeleton)
+    return out
+
+
+# -- atomic filesystem protocol ----------------------------------------------
+
+def atomic_write(path: str, data: bytes) -> None:
+    """tmp + fsync + rename: the write is all-or-nothing."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def commit_manifest(root: str, manifest: Manifest) -> str:
+    """Write MANIFEST then the COMMIT marker (the commit point)."""
+    d = step_dir(root, manifest.step)
+    os.makedirs(d, exist_ok=True)
+    atomic_write(os.path.join(d, "MANIFEST.msgpack"), manifest.to_bytes())
+    atomic_write(os.path.join(d, "COMMIT"), b"ok")
+    return d
+
+
+def is_committed(root: str, step: int) -> bool:
+    return os.path.exists(os.path.join(step_dir(root, step), "COMMIT"))
+
+
+def committed_steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    steps = []
+    for name in os.listdir(root):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(root, name, "COMMIT")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_committed_step(root: str) -> int | None:
+    steps = committed_steps(root)
+    return steps[-1] if steps else None
+
+
+def load_manifest(root: str, step: int) -> Manifest:
+    if not is_committed(root, step):
+        raise FileNotFoundError(f"step {step} not committed under {root}")
+    with open(os.path.join(step_dir(root, step), "MANIFEST.msgpack"), "rb") as f:
+        return Manifest.from_bytes(f.read())

@@ -1,0 +1,113 @@
+"""ChunkStore — per-host chunk payload files + read path + GC.
+
+Each host appends its compressed chunks to a single ``data-h<host>.bin``
+per checkpoint step (one sequential stream per host: the I/O pattern the
+paper's forked child produces). Reads are random-access by (file, offset,
+comp_len) from the manifest, with a small decompression cache so elastic
+restore does not decompress a chunk once per overlapping target shard.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from collections import OrderedDict
+
+from repro.checkpoint.codecs import get_codec
+from repro.checkpoint.manifest import ChunkRecord, step_dir
+
+
+def host_data_file(step: int, host: int) -> str:
+    """Path of a host's payload file, relative to the checkpoint root."""
+    return os.path.join(f"step_{step:08d}", f"data-h{host:04d}.bin")
+
+
+class ChunkStore:
+    def __init__(self, root: str, *, cache_chunks: int = 256):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._cache: OrderedDict[tuple, bytes] = OrderedDict()
+        self._cache_max = cache_chunks
+        self._lock = threading.Lock()
+        self.bytes_read = 0
+        self.chunks_read = 0
+
+    # -- write path ---------------------------------------------------------
+    class Writer:
+        """Sequential appender for one host's payload file."""
+
+        def __init__(self, store: "ChunkStore", step: int, host: int):
+            self.relpath = host_data_file(step, host)
+            abspath = os.path.join(store.root, self.relpath)
+            os.makedirs(os.path.dirname(abspath), exist_ok=True)
+            self._f = open(abspath, "wb")
+            self._off = 0
+
+        def append(self, raw: bytes, codec_name: str, *, index: int,
+                   digest: int) -> ChunkRecord:
+            comp = get_codec(codec_name).compress(raw)
+            rec = ChunkRecord(
+                index=index, raw_len=len(raw), digest=digest,
+                codec=codec_name, file=self.relpath,
+                file_offset=self._off, comp_len=len(comp),
+            )
+            self._f.write(comp)
+            self._off += len(comp)
+            return rec
+
+        def close(self, *, fsync: bool = True) -> None:
+            self._f.flush()
+            if fsync:
+                os.fsync(self._f.fileno())
+            self._f.close()
+
+    def writer(self, step: int, host: int = 0) -> "ChunkStore.Writer":
+        return ChunkStore.Writer(self, step, host)
+
+    # -- read path ------------------------------------------------------------
+    def read_chunk(self, rec: ChunkRecord) -> bytes:
+        key = (rec.file, rec.file_offset, rec.comp_len)
+        with self._lock:
+            if key in self._cache:
+                self._cache.move_to_end(key)
+                return self._cache[key]
+        with open(os.path.join(self.root, rec.file), "rb") as f:
+            f.seek(rec.file_offset)
+            comp = f.read(rec.comp_len)
+        if len(comp) != rec.comp_len:
+            raise IOError(
+                f"short read for {rec.file}@{rec.file_offset}: "
+                f"{len(comp)} < {rec.comp_len}"
+            )
+        raw = get_codec(rec.codec).decompress(comp)
+        if len(raw) != rec.raw_len:
+            raise IOError(f"decompressed length mismatch for {rec.file}")
+        with self._lock:
+            self.bytes_read += len(raw)
+            self.chunks_read += 1
+            self._cache[key] = raw
+            while len(self._cache) > self._cache_max:
+                self._cache.popitem(last=False)
+        return raw
+
+    # -- garbage collection ----------------------------------------------------
+    def gc(self, keep_steps: list[int]) -> list[int]:
+        """Delete committed step dirs not in ``keep_steps``.
+
+        Never deletes a step that a kept delta manifest references: callers
+        pass the transitive closure (see policy.referenced_steps).
+        """
+        from repro.checkpoint.manifest import committed_steps
+        removed = []
+        keep = set(keep_steps)
+        for s in committed_steps(self.root):
+            if s in keep:
+                continue
+            d = step_dir(self.root, s)
+            # remove COMMIT first so a crash mid-GC leaves an uncommitted
+            # (hence invisible) directory rather than a corrupt one.
+            os.remove(os.path.join(d, "COMMIT"))
+            for name in os.listdir(d):
+                os.remove(os.path.join(d, name))
+            os.rmdir(d)
+            removed.append(s)
+        return removed

@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` ids exactly as assigned."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, reduced_for_smoke
+
+_MODULES = {
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "granite-8b": "repro.configs.granite_8b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+}
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str, *, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {list_archs()}")
+    cfg = importlib.import_module(_MODULES[name]).ARCH
+    return reduced_for_smoke(cfg) if smoke else cfg
+
+
+__all__ = ["get_config", "list_archs", "ModelConfig", "reduced_for_smoke"]

@@ -1,0 +1,17 @@
+"""CRUM core — the paper's contribution, adapted to TPU/JAX (see DESIGN.md)."""
+from repro.core.shadow import ShadowStateManager, ChunkState, SyncStats
+from repro.core.forked import ForkedCheckpointer, CheckpointResult
+from repro.core.restore import RestoreManager, LazyLeaves
+from repro.core.drain import drain
+from repro.core.policy import CheckpointPolicy, referenced_steps
+from repro.core.failure import HeartbeatMonitor, StragglerPolicy, PreemptionHandler
+from repro.core.trainer import CheckpointedTrainer
+
+__all__ = [
+    "ShadowStateManager", "ChunkState", "SyncStats",
+    "ForkedCheckpointer", "CheckpointResult",
+    "RestoreManager", "LazyLeaves", "drain",
+    "CheckpointPolicy", "referenced_steps",
+    "HeartbeatMonitor", "StragglerPolicy", "PreemptionHandler",
+    "CheckpointedTrainer",
+]

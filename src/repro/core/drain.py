@@ -1,0 +1,27 @@
+"""Quiesce the device before a snapshot (paper §3.4: cudaDeviceSynchronize +
+MPI network drain).
+
+JAX's dispatch is asynchronous — the Python train loop runs ahead of the
+device exactly like CRUM's pipelined proxy calls run ahead of the GPU.
+``drain`` is the pipeline flush: block until every in-flight computation
+contributing to ``state`` has landed, then (multi-host) barrier so no host
+snapshots while a peer still has collectives in flight.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.utils.timing import Timer
+
+
+def drain(state: Any, *, barrier: bool = True) -> float:
+    """Returns seconds spent draining."""
+    with Timer() as t:
+        jax.block_until_ready(state)
+        if barrier and jax.process_count() > 1:  # pragma: no cover (multi-host)
+            from jax.experimental import multihost_utils
+
+            multihost_utils.sync_global_devices("crum-drain")
+    return t.elapsed

@@ -1,0 +1,76 @@
+"""Checkpoint cadence + retention policy.
+
+The paper motivates cadence from DUE rates (§2.2): more failures => more
+frequent checkpoints => blocking time matters more. The policy layer decides
+*when* (steps / wall-clock / preemption signal) and *what to keep*
+(keep_last N, keep_every K), including the transitive closure of delta
+references so GC never strands an incremental checkpoint's base chunks.
+"""
+from __future__ import annotations
+
+import re
+import time
+from dataclasses import dataclass, field
+
+from repro.checkpoint.manifest import Manifest
+
+_STEP_FILE_RE = re.compile(r"^step_(\d{8})/")
+
+
+def referenced_steps(manifest: Manifest) -> set[int]:
+    """Steps whose payload files this (possibly delta) manifest references."""
+    out: set[int] = set()
+    for lv in manifest.leaves.values():
+        for s in lv.shards:
+            for c in s.chunks:
+                m = _STEP_FILE_RE.match(c.file.replace("\\", "/"))
+                if m:
+                    out.add(int(m.group(1)))
+    return out
+
+
+@dataclass
+class CheckpointPolicy:
+    interval_steps: int = 0          # 0 = disabled
+    interval_secs: float = 0.0       # 0 = disabled
+    keep_last: int = 2
+    keep_every: int = 0              # additionally keep every K-th step
+    _last_time: float = field(default_factory=time.monotonic)
+    _preempt: bool = False
+
+    def should_checkpoint(self, step: int) -> bool:
+        if self._preempt:
+            return True
+        if self.interval_steps and step > 0 and step % self.interval_steps == 0:
+            return True
+        if self.interval_secs and (time.monotonic() - self._last_time) >= self.interval_secs:
+            return True
+        return False
+
+    def notify_checkpointed(self, step: int) -> None:
+        self._last_time = time.monotonic()
+        self._preempt = False
+
+    def request_preempt_checkpoint(self) -> None:
+        """Hook for SIGTERM/preemption notice: checkpoint at the next step."""
+        self._preempt = True
+
+    def gc_keep(self, committed: list[int], manifests: dict[int, Manifest]) -> list[int]:
+        """Which steps to keep: keep_last + keep_every + delta closure."""
+        keep: set[int] = set()
+        for s in sorted(committed)[-self.keep_last :] if self.keep_last else []:
+            keep.add(s)
+        if self.keep_every:
+            keep.update(s for s in committed if s % self.keep_every == 0)
+        # transitive closure over delta references
+        frontier = list(keep)
+        while frontier:
+            s = frontier.pop()
+            m = manifests.get(s)
+            if m is None:
+                continue
+            for ref in referenced_steps(m):
+                if ref not in keep and ref in committed:
+                    keep.add(ref)
+                    frontier.append(ref)
+        return sorted(keep)

@@ -1,0 +1,173 @@
+"""RestoreManager — restart protocol (paper §3.4) + lazy restore (§4.2).
+
+Eager mode re-creates the full state: read manifest, assemble each leaf's
+global array from stored shards (any source topology -> any target
+topology), place with the target sharding. This is the paper's "replay the
+allocations, transfer the data back through the proxy".
+
+Lazy mode returns a mapping that materializes leaves on first access and
+prefetches ahead in manifest order with an exponentially growing window —
+the paper's read-fault heuristic: the first fault reads one page, each
+subsequent fault on the same region doubles the read-ahead. Serving
+restarts benefit: embedding tables materialize on demand rather than
+stalling the whole restore.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint.manifest import Manifest, latest_committed_step, load_manifest
+from repro.checkpoint.sharded import _LeafAssembler, restore_leaf
+from repro.checkpoint.store import ChunkStore
+from repro.checkpoint.manifest import skeleton_fill, skeleton_paths
+from repro.utils.timing import Timings
+
+ShardingFor = Callable[[str, tuple[int, ...]], jax.sharding.Sharding | None]
+
+
+class LazyLeaves:
+    """Dict-like view over a manifest; leaves materialize on first read.
+
+    Exponential read-ahead: after ``k`` consecutive accesses that hit the
+    prefetch frontier, the window grows as 1, 2, 4, ... up to
+    ``max_readahead`` leaves submitted to a background reader.
+    """
+
+    def __init__(
+        self,
+        store: ChunkStore,
+        manifest: Manifest,
+        sharding_for: ShardingFor | None,
+        *,
+        max_readahead: int = 32,
+        timings: Timings | None = None,
+    ):
+        self._store = store
+        self._manifest = manifest
+        self._sharding_for = sharding_for or (lambda p, s: None)
+        self._order = list(manifest.leaves.keys())
+        self._pos = {p: i for i, p in enumerate(self._order)}
+        self._cache: dict[str, Any] = {}
+        self._futures: dict[str, cf.Future] = {}
+        self._window = 1
+        self._max_window = max_readahead
+        self._frontier = 0
+        self._last_idx = -1
+        self._lock = threading.Lock()
+        self._pool = cf.ThreadPoolExecutor(max_workers=4, thread_name_prefix="crum-read")
+        self.timings = timings or Timings()
+        self.loads = 0
+
+    def keys(self) -> list[str]:
+        return list(self._order)
+
+    def _materialize(self, path: str) -> Any:
+        lrec = self._manifest.leaves[path]
+        with self.timings.measure("restore/leaf"):
+            leaf = restore_leaf(
+                self._store, lrec, self._sharding_for(path, tuple(lrec.shape))
+            )
+        return leaf
+
+    def __getitem__(self, path: str) -> Any:
+        with self._lock:
+            if path in self._cache:
+                return self._cache[path]
+            fut = self._futures.pop(path, None)
+        if fut is None:
+            self.loads += 1
+            leaf = self._materialize(path)
+        else:
+            leaf = fut.result()
+        with self._lock:
+            self._cache[path] = leaf
+        self._read_ahead(path)
+        return leaf
+
+    def _read_ahead(self, touched: str) -> None:
+        """Grow and schedule the prefetch window past the touched leaf."""
+        with self._lock:
+            i = self._pos[touched]
+            if i >= self._last_idx:
+                # forward progress: double the window (paper's heuristic)
+                self._window = min(self._window * 2, self._max_window)
+            else:  # backward jump: new region, reset the stride
+                self._window = 1
+                self._frontier = 0
+            self._last_idx = i
+            lo = max(self._frontier, i + 1)
+            hi = min(len(self._order), i + 1 + self._window)
+            to_fetch = [
+                p
+                for p in self._order[lo:hi]
+                if p not in self._cache and p not in self._futures
+            ]
+            for p in to_fetch:
+                self._futures[p] = self._pool.submit(self._materialize, p)
+                self.loads += 1
+            self._frontier = max(self._frontier, hi)
+
+    def as_tree(self) -> Any:
+        """Force everything and return the full pytree."""
+        leaves = {p: self[p] for p in self._order}
+        return skeleton_fill(self._manifest.skeleton, leaves)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+class RestoreManager:
+    def __init__(self, store: ChunkStore, *, timings: Timings | None = None):
+        self.store = store
+        self.timings = timings or Timings()
+
+    def available_steps(self) -> list[int]:
+        from repro.checkpoint.manifest import committed_steps
+
+        return committed_steps(self.store.root)
+
+    def restore(
+        self,
+        *,
+        step: int | None = None,
+        sharding_for: ShardingFor | None = None,
+        lazy: bool = False,
+        verify: bool = False,
+    ) -> tuple[Any, Manifest]:
+        """Restore the newest (or given) committed checkpoint.
+
+        Returns (state, manifest); in lazy mode state is a LazyLeaves whose
+        ``as_tree()`` gives the pytree.
+        """
+        if step is None:
+            step = latest_committed_step(self.store.root)
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint under {self.store.root}")
+        manifest = load_manifest(self.store.root, step)
+        if verify:
+            from repro.checkpoint.sharded import verify_manifest
+
+            with self.timings.measure("restore/verify"):
+                verify_manifest(self.store, manifest)
+        if lazy:
+            return (
+                LazyLeaves(
+                    self.store, manifest, sharding_for, timings=self.timings
+                ),
+                manifest,
+            )
+        with self.timings.measure("restore/eager"):
+            leaves = {
+                path: restore_leaf(
+                    self.store,
+                    lrec,
+                    (sharding_for or (lambda p, s: None))(path, tuple(lrec.shape)),
+                )
+                for path, lrec in manifest.leaves.items()
+            }
+            state = skeleton_fill(manifest.skeleton, leaves)
+        return state, manifest

@@ -1,0 +1,306 @@
+"""ShadowStateManager — Algorithm 1 adapted to TPU/JAX.
+
+CRUM's shadow UVM pages keep an application-side copy of device memory in
+sync lazily, driven by page faults. On TPU there are no page faults to hook,
+but the structure of the algorithm survives intact once "page" becomes
+"chunk" and "fault" becomes "digest mismatch at a sync point":
+
+    paper (Algorithm 1)                 here
+    -----------------------------       ------------------------------------
+    CUDA kernel launch marks pages      train step marks all chunks
+    writable-by-device                  DEVICE_DIRTY (conservative)
+    read fault on a shadow page ->      sync(): device-side digest compare;
+    ReadDataFromRealPage()              only mismatching chunks are fetched
+    write fault -> MarkPageAsDirty()    host mutation marks HOST_DIRTY
+    CUDA call -> SendDataToRealPages()  upload(): HOST_DIRTY chunks pushed
+                                        back to device (restore path)
+
+The digest compare runs *on device* (Pallas ``chunk_digest`` kernel on TPU,
+jnp fallback elsewhere): only the (n_chunks, 2)-u32 digest tensor crosses
+the wire before any data does, so clean chunks cost nothing to skip — the
+same economy CRUM gets from not faulting untouched pages.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.checkpoint.chunking import (
+    DEFAULT_CHUNK_BYTES,
+    chunk_digest_np,
+    num_chunks,
+)
+from repro.utils.timing import Timings
+from repro.utils.tree import flatten_with_paths
+
+
+class ChunkState(enum.Enum):
+    CLEAN = "clean"              # shadow == device
+    DEVICE_DIRTY = "device_dirty"  # device may have advanced; shadow stale
+    HOST_DIRTY = "host_dirty"    # shadow mutated on host; device stale
+
+
+@dataclass
+class _ShardStream:
+    """One owned shard of one leaf, viewed as a byte stream of chunks."""
+
+    path: str
+    shard_ordinal: int
+    start: list[int]
+    stop: list[int]
+    nbytes: int
+    n_chunks: int
+    states: list[ChunkState]
+    digests: list[int]                    # digest of current *shadow* content
+    buffer: np.ndarray | None = None      # host shadow bytes (u8), lazily alloc'd
+
+
+@dataclass
+class SyncStats:
+    chunks_total: int = 0
+    chunks_fetched: int = 0
+    bytes_total: int = 0
+    bytes_fetched: int = 0
+    leaves: int = 0
+
+    def merge(self, other: "SyncStats") -> None:
+        self.chunks_total += other.chunks_total
+        self.chunks_fetched += other.chunks_fetched
+        self.bytes_total += other.bytes_total
+        self.bytes_fetched += other.bytes_fetched
+        self.leaves += other.leaves
+
+
+def _owned_host_shards(leaf: Any):
+    """(ordinal, start, stop, np_data) for shards this host owns."""
+    if isinstance(leaf, jax.Array):
+        out = []
+        ordinal = 0
+        for sh in leaf.addressable_shards:
+            if sh.replica_id != 0:
+                continue
+            start, stop = [], []
+            for sl, dim in zip(sh.index, leaf.shape):
+                start.append(0 if sl.start is None else int(sl.start))
+                stop.append(dim if sl.stop is None else int(sl.stop))
+            out.append((ordinal, start, stop, sh.data))
+            ordinal += 1
+        return out
+    arr = np.asarray(leaf)
+    return [(0, [0] * arr.ndim, list(arr.shape), arr)]
+
+
+class ShadowStateManager:
+    """Maintains a host shadow of an on-device state pytree.
+
+    One manager owns one shadow buffer set. The forked checkpointer holds
+    two managers (double buffering) so persisting snapshot A never blocks
+    filling snapshot B.
+    """
+
+    def __init__(
+        self,
+        *,
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        digest_on_device: bool = True,
+        defer_first_digests: bool = False,
+        timings: Timings | None = None,
+    ):
+        self.chunk_bytes = int(chunk_bytes)
+        self.digest_on_device = digest_on_device
+        # True: first sync skips the digest pass (a persist phase will
+        # backfill via set_digests) — used by ForkedCheckpointer
+        self.defer_first_digests = defer_first_digests
+        self.timings = timings or Timings()
+        self._streams: dict[tuple[str, int], _ShardStream] = {}
+        self._registered = False
+
+    # -- registration ---------------------------------------------------------
+    def register(self, state: Any) -> None:
+        """Learn the chunk layout of ``state``; all chunks start DEVICE_DIRTY."""
+        flat, _ = flatten_with_paths(state)
+        self._streams.clear()
+        for path, leaf in flat.items():
+            for ordinal, start, stop, data in _owned_host_shards(leaf):
+                nbytes = int(np.asarray(data).nbytes) if not isinstance(
+                    data, jax.Array
+                ) else int(np.prod(data.shape, dtype=np.int64)) * data.dtype.itemsize
+                nc = num_chunks(nbytes, self.chunk_bytes)
+                self._streams[(path, ordinal)] = _ShardStream(
+                    path=path,
+                    shard_ordinal=ordinal,
+                    start=start,
+                    stop=stop,
+                    nbytes=nbytes,
+                    n_chunks=nc,
+                    states=[ChunkState.DEVICE_DIRTY] * nc,
+                    digests=[-1] * nc,
+                )
+        self._registered = True
+
+    # -- Algorithm-1 events -----------------------------------------------------
+    def mark_device_step(self) -> None:
+        """Paper: a CUDA call may mutate real pages -> mark shadows stale."""
+        for s in self._streams.values():
+            for i, st in enumerate(s.states):
+                if st is ChunkState.CLEAN:
+                    s.states[i] = ChunkState.DEVICE_DIRTY
+
+    def mark_host_write(self, path: str) -> None:
+        """Paper: write fault on a shadow page -> HOST_DIRTY."""
+        for (p, _), s in self._streams.items():
+            if p == path:
+                s.states = [ChunkState.HOST_DIRTY] * s.n_chunks
+
+    # -- sync (the read-fault path, batched) ------------------------------------
+    def sync(self, state: Any) -> SyncStats:
+        """Bring the shadow up to date with the device; returns transfer stats.
+
+        Only chunks whose device digest differs from the shadow digest are
+        materialized on host — CRUM's read-fault economy at chunk scale.
+        """
+        if not self._registered:
+            self.register(state)
+        flat, _ = flatten_with_paths(state)
+        stats = SyncStats()
+        for path, leaf in flat.items():
+            for ordinal, start, stop, data in _owned_host_shards(leaf):
+                stream = self._streams.get((path, ordinal))
+                if stream is None:  # new leaf appeared: register on the fly
+                    self.register(state)
+                    stream = self._streams[(path, ordinal)]
+                st = self._sync_stream(stream, data)
+                stats.merge(st)
+            stats.leaves += 1
+        return stats
+
+    def _sync_stream(self, stream: _ShardStream, data: Any) -> SyncStats:
+        stats = SyncStats(
+            chunks_total=stream.n_chunks, bytes_total=stream.nbytes
+        )
+        if stream.buffer is None:
+            # first sync: everything must move regardless — bulk copy; the
+            # digest pass is skipped when a persist phase will backfill it
+            with self.timings.measure("shadow/fetch"):
+                stream.buffer = np.empty(stream.nbytes, np.uint8)
+                host = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+                np.copyto(stream.buffer, host)
+                stream.states = [ChunkState.CLEAN] * stream.n_chunks
+                stats.chunks_fetched = stream.n_chunks
+                stats.bytes_fetched = stream.nbytes
+            if self.defer_first_digests:
+                stream.digests = [-2] * stream.n_chunks  # pending backfill
+            else:
+                with self.timings.measure("shadow/digest"):
+                    stream.digests = self._device_digests(data, stream)
+            return stats
+        dirty = [
+            i for i, st in enumerate(stream.states)
+            if st is ChunkState.DEVICE_DIRTY
+        ]
+        if not dirty:
+            return stats
+
+        with self.timings.measure("shadow/digest"):
+            dev_digests = self._device_digests(data, stream)
+
+        changed = [
+            i for i in dirty if dev_digests[i] != stream.digests[i]
+        ]
+        # unchanged-but-marked chunks are clean after the compare
+        for i in dirty:
+            if i not in changed:
+                stream.states[i] = ChunkState.CLEAN
+
+        if not changed:
+            return stats
+
+        with self.timings.measure("shadow/fetch"):
+            if stream.buffer is None:
+                stream.buffer = np.empty(stream.nbytes, np.uint8)
+            cb = self.chunk_bytes
+            if len(changed) == stream.n_chunks:
+                # everything dirty (first sync / full update): one bulk copy
+                host = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+                np.copyto(stream.buffer, host)
+                stream.digests = list(dev_digests)
+                stream.states = [ChunkState.CLEAN] * stream.n_chunks
+                stats.chunks_fetched = stream.n_chunks
+                stats.bytes_fetched = stream.nbytes
+                return stats
+            fetch = self._make_chunk_fetcher(data, stream, changed)
+            for i in changed:
+                lo, hi = i * cb, min(stream.nbytes, (i + 1) * cb)
+                stream.buffer[lo:hi] = fetch(i, lo, hi)
+                stream.digests[i] = dev_digests[i]
+                stream.states[i] = ChunkState.CLEAN
+                stats.chunks_fetched += 1
+                stats.bytes_fetched += hi - lo
+        return stats
+
+    def _make_chunk_fetcher(self, data: Any, stream: _ShardStream, changed: list[int]):
+        """Per-chunk device->host fetch: only dirty bytes cross the wire.
+
+        When most chunks changed a single bulk fetch is cheaper than many
+        small DMAs (the paper's exponential read-ahead argument, degenerated
+        to its endpoint); below that threshold, chunks are fetched
+        individually via on-device slices.
+        """
+        if (
+            isinstance(data, jax.Array)
+            and stream.n_chunks > 1
+            and len(changed) <= stream.n_chunks // 2
+        ):
+            itemsize = np.dtype(data.dtype).itemsize
+            flat = data.reshape(-1)
+
+            def fetch(i: int, lo: int, hi: int) -> np.ndarray:
+                piece = jax.device_get(flat[lo // itemsize : -(-hi // itemsize)])
+                return piece.reshape(-1).view(np.uint8)[: hi - lo]
+
+            return fetch
+        host = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+        return lambda i, lo, hi: host[lo:hi]
+
+    def _device_digests(self, data: Any, stream: _ShardStream) -> list[int]:
+        if self.digest_on_device and isinstance(data, jax.Array):
+            from repro.kernels.ops import chunk_digests
+
+            d = np.asarray(chunk_digests(data, self.chunk_bytes))
+            return [int((np.uint64(h) << np.uint64(32)) | np.uint64(l))
+                    for h, l in zip(d[:, 0], d[:, 1])]
+        host = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+        cb = self.chunk_bytes
+        return [
+            chunk_digest_np(host[i * cb : min(stream.nbytes, (i + 1) * cb)])
+            for i in range(stream.n_chunks)
+        ]
+
+    # -- snapshot access ----------------------------------------------------------
+    def snapshot(self) -> dict[tuple[str, int], dict]:
+        """The current shadow: {(path, ordinal): {start, stop, bytes}}."""
+        out = {}
+        for key, s in self._streams.items():
+            if s.buffer is None:
+                raise RuntimeError(f"stream {key} never synced")
+            out[key] = {"start": s.start, "stop": s.stop, "data": s.buffer}
+        return out
+
+    def chunk_states(self) -> dict[tuple[str, int], list[ChunkState]]:
+        return {k: list(s.states) for k, s in self._streams.items()}
+
+    def set_digests(self, key: tuple[str, int], digests: list[int]) -> None:
+        """Backfill digests computed during persist (phase 2)."""
+        s = self._streams.get(key)
+        if s is not None and len(digests) == s.n_chunks:
+            s.digests = list(digests)
+
+    def invalidate(self) -> None:
+        """Drop all shadow content (e.g., after restoring different weights)."""
+        for s in self._streams.values():
+            s.states = [ChunkState.DEVICE_DIRTY] * s.n_chunks
+            s.digests = [-1] * s.n_chunks

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticBatches
+
+__all__ = ["SyntheticBatches"]

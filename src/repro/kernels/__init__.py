@@ -1,0 +1,3 @@
+from repro.kernels.ops import chunk_digests, digests_to_u64, flash_attention
+
+__all__ = ["chunk_digests", "digests_to_u64", "flash_attention"]

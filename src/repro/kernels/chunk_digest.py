@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: per-chunk content digests.
+
+The checkpoint hot path of this framework (DESIGN §2): dirty-chunk
+detection runs *on device*, so only a (n_chunks, 2) u32 digest tensor —
+not the data — crosses HBM->host before a sync. This kernel is the TPU
+adaptation of CRUM's page-fault tracking: the VPU scans HBM-resident state
+at memory bandwidth and emits one digest per 4 MiB chunk.
+
+Layout: the caller reshapes the leaf's byte stream to u32 words padded to
+(n_chunks, chunk_words). Grid = (n_chunks, n_sub); the sub-block axis is
+the innermost (sequential on TPU) axis, accumulating partial mixes into the
+(1, 2) output block, which Pallas keeps resident in VMEM across the
+sequential axis because its index map ignores ``j``.
+
+Both mixes are associative, so sub-block partials combine exactly:
+    lo = wrapping-sum of (w ^ (idx * PRIME))
+    hi = xor of (w * ((idx << 1) | 1)), finally xored with SEED
+Padding words are masked by comparing idx to the chunk's real word count
+(computed from static sizes), so device digests equal host digests
+bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import DIGEST_PRIME, DIGEST_SEED
+
+# 64K words = 256 KiB per sub-block: 8 lanes * 128 sublanes tiles cleanly
+# and leaves VMEM headroom for double buffering of the input stream.
+SUB_WORDS = 64 * 1024
+
+
+def _digest_kernel(x_ref, o_ref, *, chunk_words: int, sub_words: int, total_words: int):
+    i = pl.program_id(0)  # chunk ordinal
+    j = pl.program_id(1)  # sub-block ordinal within the chunk
+
+    w = x_ref[0, :]  # (sub_words,) u32
+    base = j * sub_words
+    # word index within the chunk, 1-based (u32; sizes < 2**32 words)
+    idx = (jax.lax.broadcasted_iota(jnp.uint32, (1, sub_words), 1)[0]
+           + jnp.uint32(base) + jnp.uint32(1))
+    # real (unpadded) words in this chunk, from static sizes. i32 is safe:
+    # a single shard stream is < 2**31 words (8 GiB) on 16 GiB-HBM parts.
+    real = jnp.clip(
+        jnp.int32(total_words) - i * jnp.int32(chunk_words), 0, chunk_words
+    ).astype(jnp.uint32)
+    mask = idx <= real
+
+    lo_terms = jnp.where(mask, w ^ (idx * jnp.uint32(DIGEST_PRIME)), jnp.uint32(0))
+    lo_part = lo_terms.sum(dtype=jnp.uint32)
+    hi_terms = jnp.where(
+        mask, w * ((idx << jnp.uint32(1)) | jnp.uint32(1)), jnp.uint32(0)
+    )
+    hi_part = jax.lax.reduce(
+        hi_terms, np.uint32(0), lambda a, b: jax.lax.bitwise_xor(a, b), (0,)
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0, 0] = hi_part ^ jnp.uint32(DIGEST_SEED)
+        o_ref[0, 1] = lo_part
+
+    @pl.when(j != 0)
+    def _accum():
+        o_ref[0, 0] = o_ref[0, 0] ^ hi_part
+        o_ref[0, 1] = o_ref[0, 1] + lo_part
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words", "total_words", "interpret"))
+def digest_words(
+    words2d: jax.Array,
+    *,
+    chunk_words: int,
+    total_words: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Digest a (n_chunks, chunk_words_padded) u32 array -> (n_chunks, 2) u32.
+
+    ``chunk_words`` is the *logical* chunk length; the padded row length
+    must be a multiple of SUB_WORDS (or equal to a single smaller tile).
+    """
+    n_chunks, row = words2d.shape
+    sub = min(SUB_WORDS, row)
+    if row % sub:
+        raise ValueError(f"padded row {row} not a multiple of sub-block {sub}")
+    n_sub = row // sub
+    kernel = functools.partial(
+        _digest_kernel,
+        chunk_words=chunk_words,
+        sub_words=sub,
+        total_words=total_words,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks, n_sub),
+        in_specs=[pl.BlockSpec((1, sub), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 2), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, 2), jnp.uint32),
+        interpret=interpret,
+    )(words2d)

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: block-wise causal FlashAttention with GQA.
+
+Used by the prefill path (32k-sequence cells) where attention is the
+compute hot spot. TPU-native adaptation choices:
+
+  - Block shapes are MXU-aligned: (bq, D) x (bk, D) tiles with D the head
+    dim (128-multiples preferred) so the systolic array runs dense.
+  - The KV axis is the innermost grid axis -> sequential on TPU; online
+    softmax statistics (m, l) and the accumulator live in VMEM scratch and
+    persist across that axis (no HBM round-trips per block).
+  - GQA is expressed in the BlockSpec index map (kv head = q head // group),
+    so grouped heads share KV tiles without materializing repeats.
+
+Numerics: dots in f32 (preferred_element_type), masked logits use -1e30
+(not -inf) so fully-masked tiles cannot produce NaNs; output cast back to
+the query dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, block_q: int, block_k: int,
+    seq_q: int, seq_k: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :]  # (bq, D)
+    k = k_ref[0, 0, :, :]  # (bk, D)
+    v = v_ref[0, 0, :, :]  # (bk, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    if causal:
+        # decode/cache alignment: query row r attends keys <= r + (Sk - Sq)
+        offset = seq_k - seq_q
+        rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(cols <= rows + offset, s, _NEG_INF)
+
+    m_prev = m_ref[...]                      # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                   # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)          # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros, not NaNs
+        o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). Returns (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} must be a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        raise ValueError(f"seq lengths ({Sq},{Sk}) not divisible by blocks ({bq},{bk})")
+    scale_f = float(scale if scale is not None else 1.0 / np.sqrt(D))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale_f, causal=causal,
+        block_q=bq, block_k=bk, seq_q=Sq, seq_k=Sk,
+    )
+    grid = (B, Hq, Sq // bq, Sk // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,112 @@
+"""Public jit'd wrappers for the kernels package.
+
+Dispatch policy (``use_pallas``):
+  - ``"auto"``  — Pallas on TPU backends, jnp reference elsewhere (this
+                  container is CPU-only, so auto == reference here; the
+                  dry-run/roofline path intentionally lowers the jnp path).
+  - ``"interpret"`` — Pallas kernel body executed by the interpreter (CPU
+                  correctness validation; used by tests/kernels/).
+  - ``"pallas"`` / ``"ref"`` — forced.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.chunking import num_chunks
+from repro.kernels import ref as _ref
+from repro.kernels.chunk_digest import SUB_WORDS, digest_words
+from repro.kernels.flash_attention import flash_attention_pallas
+
+Dispatch = Literal["auto", "interpret", "pallas", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas: Dispatch) -> str:
+    if use_pallas == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return use_pallas
+
+
+# ---------------------------------------------------------------------------
+# chunk digests
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk_bytes", "mode"))
+def _chunk_digests_jit(x: jax.Array, chunk_bytes: int, mode: str) -> jax.Array:
+    if mode == "ref":
+        return _ref.chunk_digests_jnp(x, chunk_bytes)
+    words = _ref.to_u32_words(x)
+    total_words = words.shape[0]
+    cw = chunk_bytes // 4
+    n = num_chunks(total_words * 4, chunk_bytes)
+    sub = min(SUB_WORDS, cw)
+    row = -(-cw // sub) * sub  # pad row length to sub-block multiple
+    padded = n * row
+    if padded != total_words:
+        words = jnp.concatenate(
+            [words, jnp.zeros((padded - total_words,), jnp.uint32)]
+        )
+    words2d = words.reshape(n, row)
+    return digest_words(
+        words2d,
+        chunk_words=cw,
+        total_words=total_words,
+        interpret=(mode == "interpret"),
+    )
+
+
+def chunk_digests(
+    x: jax.Array, chunk_bytes: int, *, use_pallas: Dispatch = "auto"
+) -> jax.Array:
+    """Per-chunk digests of an array's byte stream -> (n_chunks, 2) u32 [hi, lo].
+
+    Bit-identical to ``checkpoint.chunking.chunk_digest_np`` over the same
+    chunk bytes (the shadow manager compares them directly).
+    """
+    if chunk_bytes % 4:
+        raise ValueError("chunk_bytes must be a multiple of 4")
+    mode = _resolve(use_pallas)
+    if mode == "ref":
+        return _chunk_digests_jit(x, chunk_bytes, "ref")
+    return _chunk_digests_jit(x, chunk_bytes, mode)
+
+
+def digests_to_u64(d: jax.Array | np.ndarray) -> np.ndarray:
+    """(n, 2) u32 [hi, lo] -> (n,) python-int-compatible u64 digests."""
+    d = np.asarray(d)
+    return (d[:, 0].astype(np.uint64) << np.uint64(32)) | d[:, 1].astype(np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: Dispatch = "auto",
+) -> jax.Array:
+    """Causal GQA attention. q: (B,Hq,Sq,D); k,v: (B,Hkv,Sk,D)."""
+    mode = _resolve(use_pallas)
+    if mode == "ref":
+        return _ref.mha_reference(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(
+        q, k, v,
+        causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=(mode == "interpret"),
+    )

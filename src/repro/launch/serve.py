@@ -1,0 +1,130 @@
+"""Serving driver: prefill + batched decode with CRUM lazy restore.
+
+Demonstrates the paper's read-fault economics on the restore path: with
+``--lazy``, parameters materialize on first use with exponential
+read-ahead, so time-to-first-token beats a full eager restore.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --ckpt-dir /tmp/ckpt --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.core import RestoreManager
+from repro.checkpoint import ChunkStore
+from repro.launch.mesh import make_host_mesh
+from repro.models import build
+from repro.utils.tree import flatten_with_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_archs(), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None, help="restore params from here")
+    ap.add_argument("--lazy", action="store_true", help="lazy restore w/ read-ahead")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build(cfg)
+    mesh = make_host_mesh((jax.device_count(),), ("data",))
+
+    with jax.sharding.set_mesh(mesh):
+        t0 = time.perf_counter()
+        if args.ckpt_dir:
+            rm = RestoreManager(ChunkStore(args.ckpt_dir))
+            if args.lazy:
+                lazy, manifest = rm.restore(lazy=True)
+                # materialize exactly the params subtree, leaf by leaf
+                flat = {
+                    p[len("device/params/"):]: lazy[p]
+                    for p in lazy.keys()
+                    if p.startswith("device/params/")
+                }
+                params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+                flat_shape, treedef = flatten_with_paths(params_shape)
+                from repro.utils.tree import unflatten_from_paths
+
+                params = unflatten_from_paths(
+                    treedef, {k: jnp.asarray(v) for k, v in flat.items()}
+                )
+                lazy.close()
+            else:
+                state, manifest = rm.restore()
+                params = jax.tree.map(jnp.asarray, state["device"]["params"])
+            print(f"[serve] restored step {manifest.step} in "
+                  f"{time.perf_counter()-t0:.3f}s (lazy={args.lazy})")
+        else:
+            params = model.init(jax.random.key(0))
+            print(f"[serve] fresh init in {time.perf_counter()-t0:.3f}s")
+
+        B, P, G = args.batch, args.prompt_len, args.gen
+        cache_len = P + G
+        rng = np.random.default_rng(0)
+        if cfg.frontend == "audio":
+            prompt = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, P, cfg.audio_codebooks)), jnp.int32
+            )
+            batch = {"inputs": prompt}
+        elif cfg.frontend == "vision":
+            batch = {
+                "patches": jnp.asarray(
+                    rng.standard_normal((B, cfg.num_patches, cfg.d_model)),
+                    jnp.bfloat16,
+                ),
+                "inputs": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32
+                ),
+            }
+        else:
+            batch = {
+                "inputs": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32
+                )
+            }
+
+        t1 = time.perf_counter()
+        if model.prefill is not None:
+            logits, cache = model.prefill(params, batch, cache_len)
+        else:
+            # SSM/hybrid: prefill by decoding the prompt token-by-token
+            cache = model.init_cache(B, cache_len)
+            for t in range(P):
+                tok = batch["inputs"][:, t]
+                logits, cache = model.decode(params, cache, tok)
+        jax.block_until_ready(logits)
+        ttft = time.perf_counter() - t1
+        print(f"[serve] prefill({P} tokens) -> first logits in {ttft:.3f}s")
+
+        def sample(lg):
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+        toks = sample(logits if logits.ndim == 2 else logits[:, -1])
+        t2 = time.perf_counter()
+        out = [toks]
+        for _ in range(G - 1):
+            logits, cache = model.decode(params, cache, toks)
+            toks = sample(logits)
+            out.append(toks)
+        jax.block_until_ready(toks)
+        dt = time.perf_counter() - t2
+        print(f"[serve] generated {G-1} steps in {dt:.3f}s "
+              f"({(G-1)*B/max(dt,1e-9):.1f} tok/s)")
+        first = np.asarray(out[0]).reshape(B, -1)[:, 0]
+        print(f"[serve] sample tokens: {first.tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

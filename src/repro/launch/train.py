@@ -1,0 +1,141 @@
+"""End-to-end training driver with CRUM fault tolerance.
+
+Runs on anything from 1 CPU device (--smoke) to the production mesh; the
+CheckpointedTrainer provides forked checkpointing, incremental persistence
+and restart (examples/train_restart.py kills and resumes this loop).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+        --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.core import CheckpointedTrainer, CheckpointPolicy, PreemptionHandler
+from repro.data import SyntheticBatches
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build
+from repro.optim import get_optimizer, warmup_cosine
+from repro.runtime.sharding import ShardingRules
+from repro.runtime.steps import make_train_step
+from repro.utils.tree import flatten_with_paths, unflatten_from_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_archs(), required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--codec", default="zstd1")
+    ap.add_argument("--no-incremental", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build(cfg)
+    mesh = (
+        make_production_mesh()
+        if args.production_mesh
+        else make_host_mesh((jax.device_count(),), ("data",))
+    )
+    rules = ShardingRules(cfg=cfg, mesh=mesh)
+    optimizer = get_optimizer(
+        cfg.optimizer, warmup_cosine(args.lr, 10, args.steps)
+    )
+
+    trainer = CheckpointedTrainer(
+        None,  # set below (needs the mesh context)
+        store_root=args.ckpt_dir,
+        policy=CheckpointPolicy(interval_steps=args.ckpt_every, keep_last=2),
+        codec=args.codec,
+        incremental=not args.no_incremental,
+        chunk_bytes=1 << 20,
+    )
+    preempt = PreemptionHandler(trainer.policy).install()
+
+    with jax.sharding.set_mesh(mesh):
+        step_fn, state_shardings, batch_sh = make_train_step(
+            model, rules, optimizer, donate=False
+        )
+        trainer.train_step = step_fn
+
+        def init_state():
+            params = model.init(jax.random.key(0))
+            return {
+                "device": {
+                    "params": params,
+                    "opt": optimizer.init(params),
+                    "step": jnp.zeros((), jnp.int32),
+                },
+                "host": {
+                    "step": np.int64(0),
+                    "data": SyntheticBatches(
+                        cfg, batch=args.batch, seq_len=args.seq
+                    ).state(),
+                },
+            }
+
+        def sharding_for(path, shape):
+            flat_sh, _ = flatten_with_paths(
+                {"device": state_shardings, "host": None}
+            )
+            return flat_sh.get(path)
+
+        state, start = trainer.resume_or(init_state, sharding_for=sharding_for)
+        data = SyntheticBatches.from_state(
+            cfg, batch=args.batch, seq_len=args.seq, state=state["host"]["data"]
+        )
+        print(f"[train] arch={cfg.name} start_step={start} mesh={dict(mesh.shape)}")
+
+        step = start
+        for _ in range(args.steps - start):
+            batch = jax.tree.map(jnp.asarray, next(data))
+            state["device"], metrics = step_fn(state["device"], batch)
+            step += 1
+            state["host"]["step"] = np.int64(step)
+            state["host"]["data"] = data.state()
+            if step % args.log_every == 0 or step == args.steps:
+                print(
+                    f"[train] step={step} loss={float(metrics['loss']):.4f} "
+                    f"grad_norm={float(metrics['grad_norm']):.3f}",
+                    flush=True,
+                )
+            if trainer.policy.should_checkpoint(step):
+                r = trainer.checkpoint_now(step, state)
+                print(
+                    f"[ckpt] step={step} blocking={r.blocking_s*1e3:.1f}ms "
+                    f"(persist continues in background)",
+                    flush=True,
+                )
+            if preempt.received.is_set():
+                print("[train] preemption: checkpointing and exiting")
+                trainer.checkpoint_now(step, state)
+                break
+
+        done = trainer.finish()
+        for r in done:
+            print(
+                f"[ckpt-done] step={r.step} blocking={r.blocking_s*1e3:.1f}ms "
+                f"persist={r.persist_s*1e3:.1f}ms written={r.chunks_written} "
+                f"reused={r.chunks_reused}"
+            )
+    preempt.uninstall()
+    print(json.dumps({"final_step": step, "timings": trainer.timings.summary()}, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig, reduced_for_smoke
+from repro.models.zoo import Model, SHAPES, build, shape_applicable, softmax_xent
+
+__all__ = ["ModelConfig", "reduced_for_smoke", "Model", "SHAPES", "build", "shape_applicable", "softmax_xent"]

@@ -1,0 +1,256 @@
+"""Shared neural-net layers (pure functions over param pytrees).
+
+Conventions:
+  - activations (B, S, D); attention tensors (B, H, S, Dh);
+  - params bf16 (config.param_dtype), accumulation/normalization in f32;
+  - attention has three lowerings: dense (short S), chunked flash-style
+    (long S: online softmax over KV blocks inside lax.scan — bounded
+    memory, the pure-JAX analogue of kernels/flash_attention.py), and
+    decode (one query token against a cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def gated_rmsnorm(x: jax.Array, z: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Mamba2's norm: RMSNorm(x * silu(z))."""
+    return rmsnorm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), w, eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (half-split convention)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim // 2, dtype=np.float32) * 2 / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, Dh); positions: (S,) or scalar broadcast over S."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta))               # (Dh/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (S, Dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_apply(params: dict, x: jax.Array, mlp_type: str) -> jax.Array:
+    if mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_type == "swiglu" else functools.partial(
+            jax.nn.gelu, approximate=True
+        )
+        h = act(x @ params["wg"]) * (x @ params["wi"])
+        return h @ params["wo"]
+    h = jax.nn.gelu(x @ params["wi"], approximate=True)
+    return h @ params["wo"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / np.sqrt(d_model)
+    scale_out = 1.0 / np.sqrt(d_ff)
+    p = {
+        "wi": (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+    if mlp_type in ("swiglu", "geglu"):
+        p["wg"] = (jax.random.normal(k2, (d_model, d_ff)) * scale_in).astype(dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, dtype) -> dict:
+    D, Q, KV = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(D)
+    p = {
+        "wq": (jax.random.normal(ks[0], (D, Q)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (D, KV)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (D, KV)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (Q, D)) / np.sqrt(Q)).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Q,), dtype)
+        p["bk"] = jnp.zeros((KV,), dtype)
+        p["bv"] = jnp.zeros((KV,), dtype)
+    return p
+
+
+def _dense_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool, prefix_len: int | jax.Array, scale: float,
+) -> jax.Array:
+    """Materialized-scores path for short sequences. GQA without kv repeat."""
+    B, Hq, Sq, Dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, Sq, Dh)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        offset = Sk - Sq
+        rows = jnp.arange(Sq)[:, None] + offset
+        cols = jnp.arange(Sk)[None, :]
+        ok = cols <= rows
+        if prefix_len is not None:
+            ok = ok | (cols < prefix_len)
+        s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, Dh).astype(q.dtype)
+
+
+def _chunked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool, prefix_len: int | jax.Array, scale: float,
+    block_q: int, block_k: int,
+) -> jax.Array:
+    """Flash-style blocked attention in pure JAX (bounded memory).
+
+    Online-softmax over KV blocks inside a lax.scan; a second scan walks
+    query blocks. Peak live logits: (B, Hkv, G, bq, bk) — independent of S.
+    """
+    B, Hq, Sq, Dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        raise ValueError(f"S ({Sq},{Sk}) must divide blocks ({bq},{bk})")
+    nq, nk = Sq // bq, Sk // bk
+    offset = Sk - Sq
+    qg = q.reshape(B, Hkv, g, nq, bq, Dh)
+    kb = k.reshape(B, Hkv, nk, bk, Dh)
+    vb = v.reshape(B, Hkv, nk, bk, Dh)
+
+    def q_block(iq):
+        qi = qg[:, :, :, iq].astype(jnp.float32)  # (B,Hkv,G,bq,Dh)
+
+        def kv_step(carry, ik):
+            acc, m, l = carry
+            kj = kb[:, :, ik].astype(jnp.float32)   # (B,Hkv,bk,Dh)
+            vj = vb[:, :, ik].astype(jnp.float32)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, kj) * scale
+            if causal:
+                rows = iq * bq + jnp.arange(bq)[:, None] + offset
+                cols = ik * bk + jnp.arange(bk)[None, :]
+                ok = cols <= rows
+                if prefix_len is not None:
+                    ok = ok | (cols < prefix_len)
+                s = jnp.where(ok[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vj)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, Hkv, g, bq, Dh), jnp.float32)
+        m0 = jnp.full((B, Hkv, g, bq, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, bq, 1), jnp.float32)
+        # remat the kv step: without it the backward saves the (bq, bk)
+        # score tile per (iq, ik) pair — 32 GiB/device at 4k seq (§Perf)
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (acc0, m0, l0), jnp.arange(nk)
+        )
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l).astype(q.dtype)  # (B,Hkv,G,bq,Dh)
+
+    _, blocks = jax.lax.scan(
+        lambda _, iq: (None, q_block(iq)), None, jnp.arange(nq)
+    )  # (nq, B, Hkv, G, bq, Dh)
+    out = jnp.moveaxis(blocks, 0, 3).reshape(B, Hkv, g, Sq, Dh)
+    return out.reshape(B, Hq, Sq, Dh)
+
+
+def multihead_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True,
+    prefix_len: int | jax.Array | None = None,
+    scale: float | None = None,
+    chunked_threshold: int = 4096,
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jax.Array:
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(q.shape[-1]))
+    if q.shape[2] >= chunked_threshold and q.shape[2] % min(block_q, q.shape[2]) == 0 \
+            and k.shape[2] % min(block_k, k.shape[2]) == 0:
+        return _chunked_attention(
+            q, k, v, causal=causal, prefix_len=prefix_len, scale=scale,
+            block_q=block_q, block_k=block_k,
+        )
+    return _dense_attention(q, k, v, causal=causal, prefix_len=prefix_len, scale=scale)
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array, *,
+    scale: float | None = None,
+) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B, Hq, 1, Dh); caches: (B, Hkv, S, Dh); pos: scalar i32 — the index
+    of the token being generated (attends to cache[: pos+1]).
+    """
+    B, Hq, _, Dh = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(Dh))
+    qg = q.reshape(B, Hkv, g, Dh)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    ok = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0)
+
+
+def logits_from_embed(table: jax.Array, x: jax.Array) -> jax.Array:
+    from repro.runtime.sharding import constrain
+
+    out = jnp.einsum("bsd,vd->bsv", x, table).astype(jnp.float32)
+    # anchor the vocab dim to the model axis: the CE loss reduces over it
+    # locally (one-hot contraction), so the full logits never re-replicate
+    return constrain(out, (("pod", "data"), None, "model"))

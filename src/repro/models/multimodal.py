@@ -1,0 +1,174 @@
+"""Multimodal backbones with stub frontends (per assignment rules).
+
+paligemma-3b [vlm]: the SigLIP tower is a stub — ``input_specs()`` provides
+precomputed patch embeddings (B, P, D_vis=d_model); a learned projection
+maps them into the gemma backbone's residual stream; image tokens form a
+bidirectional *prefix* (PaliGemma's prefix-LM attention), text is causal.
+
+musicgen-medium [audio]: EnCodec is a stub — the backbone consumes K=4
+codebook token streams (B, S, K), embeds them with K tables (summed), and
+predicts K vocab-2048 heads per position. The delay-pattern interleaving is
+data preparation, out of scope.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import dtype_of, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# vision-language (paligemma)
+# ---------------------------------------------------------------------------
+
+def vlm_init(cfg: ModelConfig, key: jax.Array) -> dict:
+    k1, k2 = jax.random.split(key)
+    params = tfm.init_params(cfg, k1)
+    params["vision_proj"] = (
+        jax.random.normal(k2, (cfg.d_model, cfg.d_model)) / np.sqrt(cfg.d_model)
+    ).astype(dtype_of(cfg.param_dtype))
+    return params
+
+
+def vlm_hidden(cfg: ModelConfig, params: dict, patches: jax.Array, tokens: jax.Array):
+    """patches: (B, P, D) stub embeddings; tokens: (B, S_text).
+
+    Returns (text hidden (B, S_text, D), aux)."""
+    x_img = patches.astype(dtype_of(cfg.param_dtype)) @ params["vision_proj"]
+    x_txt = tfm.embed_tokens(cfg, params, tokens)
+    x = jnp.concatenate([x_img, x_txt], axis=1)
+    P = patches.shape[1]
+    h, _, aux = tfm.forward(cfg, params, x, prefix_len=P)
+    return h[:, P:, :], aux
+
+
+def vlm_forward(cfg: ModelConfig, params: dict, patches: jax.Array, tokens: jax.Array):
+    """Returns (text logits (B, S_text, V) f32, aux)."""
+    h, aux = vlm_hidden(cfg, params, patches, tokens)
+    return tfm.lm_logits(cfg, params, h), aux
+
+
+def vlm_prefill(cfg: ModelConfig, params: dict, patches: jax.Array,
+                tokens: jax.Array, cache_len: int):
+    x_img = patches.astype(dtype_of(cfg.param_dtype)) @ params["vision_proj"]
+    x_txt = tfm.embed_tokens(cfg, params, tokens)
+    x = jnp.concatenate([x_img, x_txt], axis=1)
+    P = patches.shape[1]
+    S = x.shape[1]
+    h, cache, _ = tfm.forward(cfg, params, x, prefix_len=P, return_cache=True)
+    k, v = cache["k"], cache["v"]
+    if cache_len > S:
+        pad = [(0, 0), (0, 0), (0, 0), (0, cache_len - S), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    logits = tfm.lm_logits(cfg, params, h[:, -1:, :])
+    return logits, {"k": k, "v": v, "pos": jnp.asarray(S, jnp.int32)}
+
+
+# vlm decode == transformer decode (image lives in the cache prefix)
+vlm_decode_step = tfm.decode_step
+
+
+# ---------------------------------------------------------------------------
+# audio LM over codebooks (musicgen)
+# ---------------------------------------------------------------------------
+
+def audio_init(cfg: ModelConfig, key: jax.Array) -> dict:
+    K = cfg.audio_codebooks
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = tfm.init_params(cfg.with_overrides(tie_embeddings=True), k1)
+    del params["embed"]  # replaced by per-codebook tables
+    dt = dtype_of(cfg.param_dtype)
+    params["codebook_embed"] = (
+        jax.random.normal(k2, (K, cfg.vocab_size, cfg.d_model)) * 0.02
+    ).astype(dt)
+    params["codebook_head"] = (
+        jax.random.normal(k3, (K, cfg.vocab_size, cfg.d_model)) * 0.02
+    ).astype(dt)
+    return params
+
+
+def _audio_embed(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """tokens (B, S, K) -> summed codebook embeddings (B, S, D)."""
+    # one_hot-free gather per codebook, summed
+    embeds = params["codebook_embed"]  # (K, V, D)
+    xs = [jnp.take(embeds[k], tokens[..., k], axis=0) for k in range(cfg.audio_codebooks)]
+    return sum(xs)
+
+
+def _audio_logits(cfg: ModelConfig, params: dict, h: jax.Array) -> jax.Array:
+    """h (B, S, D) -> (B, S, K, V) f32 (vocab anchored to the model axis)."""
+    from repro.runtime.sharding import constrain
+
+    out = jnp.einsum("bsd,kvd->bskv", h, params["codebook_head"]).astype(jnp.float32)
+    return constrain(out, (("pod", "data"), None, None, "model"))
+
+
+def audio_hidden(cfg: ModelConfig, params: dict, tokens: jax.Array):
+    """tokens (B, S, K) -> (hidden (B, S, D), aux)."""
+    x = _audio_embed(cfg, params, tokens)
+    h, _, aux = tfm.forward(cfg, params, x)
+    return h, aux
+
+
+def audio_forward(cfg: ModelConfig, params: dict, tokens: jax.Array):
+    """tokens (B, S, K) -> (logits (B, S, K, V) f32, aux)."""
+    h, aux = audio_hidden(cfg, params, tokens)
+    return _audio_logits(cfg, params, h), aux
+
+
+def audio_prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, cache_len: int):
+    B, S, _ = tokens.shape
+    x = _audio_embed(cfg, params, tokens)
+    h, cache, _ = tfm.forward(cfg, params, x, return_cache=True)
+    k, v = cache["k"], cache["v"]
+    if cache_len > S:
+        pad = [(0, 0), (0, 0), (0, 0), (0, cache_len - S), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    logits = _audio_logits(cfg, params, h[:, -1:, :])
+    return logits, {"k": k, "v": v, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def audio_decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array):
+    """tokens (B, K) one frame -> (logits (B, K, V) f32, cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = _audio_embed(cfg, params, tokens[:, None, :])  # (B, 1, D)
+    positions = pos[None]
+    # same per-layer cache scan as transformer.decode_step, but with the
+    # codebook embedding/head instead of a single tied table
+    logits_h, new_cache = _audio_decode_core(cfg, params, cache, x, positions)
+    logits = _audio_logits(cfg, params, logits_h)[:, 0]
+    return logits, new_cache
+
+
+def _audio_decode_core(cfg, params, cache, x, positions):
+    from repro.models.transformer import _qkv
+    from repro.models.layers import apply_rope, decode_attention, mlp_apply
+
+    B = x.shape[0]
+    pos = cache["pos"]
+
+    def body(x, scanned):
+        block, k_c, v_c = scanned
+        h = rmsnorm(x, block["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, block["attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, 0, pos, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype), (0, 0, pos, 0))
+        a = decode_attention(q, k_c, v_c, pos)
+        a = a.transpose(0, 2, 1, 3).reshape(B, 1, cfg.q_dim) @ block["attn"]["wo"]
+        x = x + a
+        h2 = rmsnorm(x, block["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(block["mlp"], h2, cfg.mlp_type)
+        return x, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"])
+    )
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return h, {"k": k_new, "v": v_new, "pos": pos + 1}

@@ -1,0 +1,284 @@
+"""Dense decoder-only transformer (the LM backbone for 8 of 10 archs).
+
+Layer params are stacked along a leading L axis and the forward pass is a
+``lax.scan`` over layers: HLO stays one-layer-sized (fast compile at 512
+devices), checkpoint chunk keys are stable, and the remat policy wraps the
+scan body. MoE archs swap the MLP for models/moe.py inside the same block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    attention_init,
+    decode_attention,
+    dtype_of,
+    embed_init,
+    embed_lookup,
+    logits_from_embed,
+    mlp_apply,
+    mlp_init,
+    multihead_attention,
+    rmsnorm,
+)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, dtype) -> dict:
+    k_attn, k_mlp = jax.random.split(key)
+    block = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attention_init(k_attn, cfg, dtype),
+    }
+    if cfg.family == "moe":
+        from repro.models.moe import moe_init
+
+        block["moe"] = moe_init(k_mlp, cfg, dtype)
+        if not cfg.parallel_block:
+            block["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    else:
+        block["mlp"] = mlp_init(k_mlp, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+        if not cfg.parallel_block:
+            block["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    return block
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(k_head, cfg.vocab_size, cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _qkv(cfg: ModelConfig, attn: dict, h: jax.Array):
+    B, S, _ = h.shape
+    q = h @ attn["wq"]
+    k = h @ attn["wk"]
+    v = h @ attn["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + attn["bq"], k + attn["bk"], v + attn["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _block_apply(
+    cfg: ModelConfig,
+    block: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    prefix_len: int | jax.Array | None,
+):
+    """Returns (x_out, (k, v), aux_loss)."""
+    from repro.runtime.sharding import constrain
+
+    B, S, _ = x.shape
+    # pin the carry's batch sharding: GSPMD otherwise may replicate the
+    # scan carry and all-gather the global batch inside every layer
+    x = constrain(x, (cfg.batch_axes, None, None))
+    h = rmsnorm(x, block["ln1"], cfg.norm_eps)
+    if cfg.attn_over_model:
+        # heads don't divide the model axis: reshard the batch over the
+        # FULL mesh for the attention region (one all-to-all in, one out)
+        h = constrain(h, (("pod", "data", "model"), None, None))
+    q, k, v = _qkv(cfg, block["attn"], h)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    attn_out = multihead_attention(
+        q, k, v,
+        causal=True, prefix_len=prefix_len,
+        chunked_threshold=cfg.attn_chunked_threshold,
+        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+    )
+    attn_out = attn_out.transpose(0, 2, 1, 3).reshape(B, S, cfg.q_dim)
+    attn_out = attn_out @ block["attn"]["wo"]
+    if cfg.attn_over_model:
+        attn_out = constrain(attn_out, (cfg.batch_axes, None, None))
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        if cfg.family == "moe":
+            from repro.models.moe import moe_apply
+
+            mlp_out, aux = moe_apply(cfg, block["moe"], h)
+        else:
+            mlp_out = mlp_apply(block["mlp"], h, cfg.mlp_type)
+        x = x + attn_out + mlp_out
+    else:
+        x = x + attn_out
+        h2 = rmsnorm(x, block["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            from repro.models.moe import moe_apply
+
+            mlp_out, aux = moe_apply(cfg, block["moe"], h2)
+        else:
+            mlp_out = mlp_apply(block["mlp"], h2, cfg.mlp_type)
+        x = x + mlp_out
+    return x, (k, v), aux
+
+
+def _remat(cfg: ModelConfig, fn: Callable) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array | None = None,
+    prefix_len: int | jax.Array | None = None,
+    return_cache: bool = False,
+):
+    """x: (B, S, D) embedded inputs -> (hidden, cache?, aux_loss)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+
+    def body(carry, block):
+        xc, aux = carry
+        x_new, kv, a = _block_apply(cfg, block, xc, positions, prefix_len)
+        ys = kv if return_cache else None
+        return (x_new, aux + a), ys
+
+    body = _remat(cfg, body)
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    cache = None
+    if return_cache:
+        cache = {"k": kvs[0], "v": kvs[1]}  # (L, B, Hkv, S, Dh)
+    return x, cache, aux
+
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def lm_logits(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return logits_from_embed(table, hidden)
+
+
+def lm_forward(cfg: ModelConfig, params: dict, tokens: jax.Array, **kw):
+    """tokens (B, S) -> (logits (B, S, V) f32, aux)."""
+    x = embed_tokens(cfg, params, tokens)
+    h, _, aux = forward(cfg, params, x, **kw)
+    return lm_logits(cfg, params, h), aux
+
+
+def prefill(
+    cfg: ModelConfig, params: dict, tokens: jax.Array, cache_len: int | None = None,
+    prefix_len: int | jax.Array | None = None,
+):
+    """Build a KV cache of size ``cache_len`` (>= S); returns (logits, cache)."""
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = embed_tokens(cfg, params, tokens)
+    h, cache, _ = forward(
+        cfg, params, x, prefix_len=prefix_len, return_cache=True
+    )
+    k, v = cache["k"], cache["v"]
+    if cache_len > S:
+        pad = [(0, 0), (0, 0), (0, 0), (0, cache_len - S), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    logits = lm_logits(cfg, params, h[:, -1:, :])
+    return logits, {"k": k, "v": v, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(
+    cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array
+):
+    """One decode step. tokens: (B,) int32; cache k/v: (L, B, Hkv, Smax, Dh).
+
+    Returns (logits (B, V) f32, new cache).
+    """
+    B = tokens.shape[0]
+    pos = cache["pos"]  # scalar i32: index where the new token is written
+    x = embed_tokens(cfg, params, tokens[:, None])  # (B, 1, D)
+    positions = pos[None]
+
+    def body(x, scanned):
+        block, k_c, v_c = scanned
+        h = rmsnorm(x, block["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, block["attn"], h)          # (B, H, 1, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, 0, pos, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype), (0, 0, pos, 0))
+        attn_out = decode_attention(q, k_c, v_c, pos)
+        attn_out = attn_out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.q_dim)
+        attn_out = attn_out @ block["attn"]["wo"]
+        if cfg.parallel_block:
+            if cfg.family == "moe":
+                from repro.models.moe import moe_apply
+
+                mlp_out, _ = moe_apply(cfg, block["moe"], h)
+            else:
+                mlp_out = mlp_apply(block["mlp"], h, cfg.mlp_type)
+            x = x + attn_out + mlp_out
+        else:
+            x = x + attn_out
+            h2 = rmsnorm(x, block["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                from repro.models.moe import moe_apply
+
+                mlp_out, _ = moe_apply(cfg, block["moe"], h2)
+            else:
+                mlp_out = mlp_apply(block["mlp"], h2, cfg.mlp_type)
+            x = x + mlp_out
+        return x, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"])
+    )
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params, h)[:, 0, :]
+    return logits, {"k": k_new, "v": v_new, "pos": pos + 1}
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, cache_len: int, dtype=None
+) -> dict:
+    dtype = dtype or dtype_of(cfg.param_dtype)
+    shape = (cfg.num_layers, batch, cfg.num_kv_heads, cache_len, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.asarray(0, jnp.int32),
+    }

@@ -1,0 +1,312 @@
+"""Model zoo: one API over all families.
+
+``build(cfg)`` returns a ``Model`` whose functions close over the config:
+
+    init(key)                      -> params
+    loss(params, batch)            -> (scalar f32 loss, metrics dict)
+    forward(params, batch)         -> logits
+    prefill(params, batch, cache_len) -> (logits, cache)
+    decode(params, cache, tokens)  -> (logits, cache)
+    init_cache(batch, cache_len)   -> cache
+    input_specs(shape)             -> ShapeDtypeStructs for jit lowering
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import hybrid as hyb
+from repro.models import multimodal as mm
+from repro.models import transformer as tfm
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, targets: jax.Array, *, z_weight: float = 1e-4):
+    """logits (..., V) f32; targets (...) i32 -> mean CE (+ z-loss).
+
+    The gold logit is extracted with a one-hot contraction rather than
+    take_along_axis: with the vocab dim sharded over `model`, the one-hot
+    product reduces locally and all-reduces a scalar per token, whereas a
+    gather along a sharded axis forces GSPMD to all-gather the logits
+    (observed: ~400 GB/device of temp at 151k vocab).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    ce = jnp.mean(lse - gold)
+    z = jnp.mean(lse**2) * z_weight
+    return ce + z, ce
+
+
+def chunked_lm_xent(
+    hidden: jax.Array,
+    table: jax.Array,
+    targets: jax.Array,
+    *,
+    chunk_tokens: int,
+    batch_axes: tuple = ("pod", "data"),
+    z_weight: float = 1e-4,
+):
+    """CE without materializing the full (tokens, vocab) logits.
+
+    hidden (B, S, D), table (V, D), targets (B, S). A remat'd lax.scan over
+    sequence chunks keeps at most (B*chunk, V) logits live — at 150k+ vocab
+    this is the difference between ~40 GB and ~300 MB of activations (the
+    full-logits buffer was the dominant temp in the baseline dry-run).
+    """
+    B, S, D = hidden.shape
+    V = table.shape[0]
+    # chunk along S only: chunk_tokens is a per-sequence window, so the
+    # loop count stays small (each iteration all-reduces the table grad —
+    # 1000s of tiny chunks would multiply that collective 1000-fold)
+    per_b = max(1, min(S, chunk_tokens))
+    while S % per_b:
+        per_b -= 1
+    n = S // per_b
+    hs = hidden.reshape(B, n, per_b, D).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, per_b).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        from repro.runtime.sharding import constrain
+
+        ce_sum, z_sum = carry
+        h, t = xs
+        h = constrain(h, (batch_axes, None, None))  # (B, chunk, D)
+        logits = jnp.einsum("bsd,vd->bsv", h, table).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(t, V, dtype=jnp.float32)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        return (ce_sum + jnp.sum(lse - gold), z_sum + jnp.sum(lse**2)), None
+
+    (ce_sum, z_sum), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.zeros((), jnp.float32),) * 2, (hs, ts)
+    )
+    ntok = B * S
+    ce = ce_sum / ntok
+    return ce + z_weight * z_sum / ntok, ce
+
+
+# ---------------------------------------------------------------------------
+# input shape sets (per assignment)
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """long_500k only runs for sub-quadratic archs (DESIGN §6)."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "full quadratic attention: a 500k-token context needs "
+            "sub-quadratic attention (skip noted in DESIGN.md §6)"
+        )
+    return True, ""
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    prefill: Callable | None
+    decode: Callable | None
+    init_cache: Callable | None
+
+    # -- shape-set plumbing ----------------------------------------------------
+    def input_specs(self, shape: str, *, batch_override: int | None = None) -> dict:
+        """ShapeDtypeStruct stand-ins for jit lowering (no allocation)."""
+        cfg = self.cfg
+        info = SHAPES[shape]
+        B = batch_override or info["global_batch"]
+        S = info["seq_len"]
+        i32 = jnp.int32
+        if info["kind"] == "train":
+            if cfg.frontend == "vision":
+                return {
+                    "patches": jax.ShapeDtypeStruct(
+                        (B, cfg.num_patches, cfg.d_model), jnp.bfloat16
+                    ),
+                    "inputs": jax.ShapeDtypeStruct((B, S), i32),
+                    "targets": jax.ShapeDtypeStruct((B, S), i32),
+                }
+            if cfg.frontend == "audio":
+                K = cfg.audio_codebooks
+                return {
+                    "inputs": jax.ShapeDtypeStruct((B, S, K), i32),
+                    "targets": jax.ShapeDtypeStruct((B, S, K), i32),
+                }
+            return {
+                "inputs": jax.ShapeDtypeStruct((B, S), i32),
+                "targets": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if info["kind"] == "prefill":
+            if cfg.frontend == "vision":
+                return {
+                    "patches": jax.ShapeDtypeStruct(
+                        (B, cfg.num_patches, cfg.d_model), jnp.bfloat16
+                    ),
+                    "inputs": jax.ShapeDtypeStruct((B, S - cfg.num_patches), i32),
+                }
+            if cfg.frontend == "audio":
+                return {
+                    "inputs": jax.ShapeDtypeStruct((B, S, cfg.audio_codebooks), i32)
+                }
+            return {"inputs": jax.ShapeDtypeStruct((B, S), i32)}
+        # decode: one new token against a cache of size S
+        if cfg.frontend == "audio":
+            tok = jax.ShapeDtypeStruct((B, cfg.audio_codebooks), i32)
+        else:
+            tok = jax.ShapeDtypeStruct((B,), i32)
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        return {"tokens": tok, "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# family builders
+# ---------------------------------------------------------------------------
+
+def _lm_table(cfg: ModelConfig, params: dict) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def _hidden_xent(cfg: ModelConfig, params, hidden, targets):
+    if cfg.ce_chunk_tokens:
+        return chunked_lm_xent(
+            hidden, _lm_table(cfg, params), targets,
+            chunk_tokens=cfg.ce_chunk_tokens, batch_axes=cfg.batch_axes,
+        )
+    logits = tfm.lm_logits(cfg, params, hidden)
+    return softmax_xent(logits, targets)
+
+
+def _build_dense_or_moe(cfg: ModelConfig) -> Model:
+    def loss(params, batch):
+        x = tfm.embed_tokens(cfg, params, batch["inputs"])
+        h, _, aux = tfm.forward(cfg, params, x)
+        l, ce = _hidden_xent(cfg, params, h, batch["targets"])
+        return l + aux, {"loss": l, "ce": ce, "aux": aux}
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: tfm.init_params(cfg, key),
+        loss=loss,
+        forward=lambda params, batch: tfm.lm_forward(cfg, params, batch["inputs"])[0],
+        prefill=lambda params, batch, cache_len: tfm.prefill(
+            cfg, params, batch["inputs"], cache_len
+        ),
+        decode=lambda params, cache, tokens: tfm.decode_step(cfg, params, cache, tokens),
+        init_cache=lambda batch, cache_len: tfm.init_cache(cfg, batch, cache_len),
+    )
+
+
+def _build_ssm_or_hybrid(cfg: ModelConfig) -> Model:
+    def loss(params, batch):
+        h, aux = hyb.hidden_forward(cfg, params, batch["inputs"])
+        if cfg.ce_chunk_tokens:
+            l, ce = chunked_lm_xent(
+                h, params["embed"], batch["targets"],
+                chunk_tokens=cfg.ce_chunk_tokens, batch_axes=cfg.batch_axes,
+            )
+        else:
+            from repro.models.layers import logits_from_embed
+
+            l, ce = softmax_xent(
+                logits_from_embed(params["embed"], h), batch["targets"]
+            )
+        return l + aux, {"loss": l, "ce": ce, "aux": aux}
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: hyb.init_params(cfg, key),
+        loss=loss,
+        forward=lambda params, batch: hyb.lm_forward(cfg, params, batch["inputs"])[0],
+        prefill=lambda params, batch, cache_len: hyb.prefill(
+            cfg, params, batch["inputs"], cache_len
+        ),
+        decode=lambda params, cache, tokens: hyb.decode_step(cfg, params, cache, tokens),
+        init_cache=lambda batch, cache_len: hyb.init_cache(cfg, batch, cache_len),
+    )
+
+
+def _build_vlm(cfg: ModelConfig) -> Model:
+    def loss(params, batch):
+        h, aux = mm.vlm_hidden(cfg, params, batch["patches"], batch["inputs"])
+        l, ce = _hidden_xent(cfg, params, h, batch["targets"])
+        return l + aux, {"loss": l, "ce": ce, "aux": aux}
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: mm.vlm_init(cfg, key),
+        loss=loss,
+        forward=lambda params, batch: mm.vlm_forward(
+            cfg, params, batch["patches"], batch["inputs"]
+        )[0],
+        prefill=lambda params, batch, cache_len: mm.vlm_prefill(
+            cfg, params, batch["patches"], batch["inputs"], cache_len
+        ),
+        decode=lambda params, cache, tokens: mm.vlm_decode_step(
+            cfg, params, cache, tokens
+        ),
+        init_cache=lambda batch, cache_len: tfm.init_cache(cfg, batch, cache_len),
+    )
+
+
+def _build_audio(cfg: ModelConfig) -> Model:
+    def loss(params, batch):
+        h, aux = mm.audio_hidden(cfg, params, batch["inputs"])
+        if cfg.ce_chunk_tokens:
+            K = cfg.audio_codebooks
+            ls, ces = [], []
+            for k in range(K):
+                lk, cek = chunked_lm_xent(
+                    h, params["codebook_head"][k], batch["targets"][..., k],
+                    chunk_tokens=cfg.ce_chunk_tokens, batch_axes=cfg.batch_axes,
+                )
+                ls.append(lk)
+                ces.append(cek)
+            l, ce = sum(ls) / K, sum(ces) / K
+        else:
+            logits = mm._audio_logits(cfg, params, h)
+            l, ce = softmax_xent(logits, batch["targets"])
+        return l + aux, {"loss": l, "ce": ce, "aux": aux}
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: mm.audio_init(cfg, key),
+        loss=loss,
+        forward=lambda params, batch: mm.audio_forward(cfg, params, batch["inputs"])[0],
+        prefill=lambda params, batch, cache_len: mm.audio_prefill(
+            cfg, params, batch["inputs"], cache_len
+        ),
+        decode=lambda params, cache, tokens: mm.audio_decode_step(
+            cfg, params, cache, tokens
+        ),
+        init_cache=lambda batch, cache_len: tfm.init_cache(cfg, batch, cache_len),
+    )
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.frontend == "vision":
+        return _build_vlm(cfg)
+    if cfg.frontend == "audio":
+        return _build_audio(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        return _build_ssm_or_hybrid(cfg)
+    if cfg.family in ("dense", "moe"):
+        return _build_dense_or_moe(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    q8adam,
+    get_optimizer,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "q8adam",
+    "get_optimizer",
+    "global_norm",
+    "clip_by_global_norm",
+    "warmup_cosine",
+]

@@ -1,0 +1,249 @@
+"""Optimizers (self-contained; optax is not available offline).
+
+Three state-memory design points (DESIGN §6 — required to *fit* the ≥100B
+configs on a 16 GiB/chip pod):
+
+  - adamw      : m, v in f32            (10 bytes/param with bf16 params)
+  - adafactor  : factored second moment (~2 bytes/param + O(rows+cols))
+  - q8adam     : m, v int8 + per-block f32 scales (~4.03 bytes/param)
+
+All optimizer states are dict pytrees of arrays — checkpointable by the
+CRUM core like everything else, and shardable with the same rules as their
+parameters (ZeRO-style when FSDP is on).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    """update(grads, state, params, step) -> (new_params, new_state)"""
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(
+    lr: float | Callable = 1e-3,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    max_grad_norm: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t3: t3[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t3: t3[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t3: t3[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no momentum)
+# ---------------------------------------------------------------------------
+
+def adafactor(
+    lr: float | Callable = 1e-3,
+    *,
+    eps: float = 1e-30,
+    weight_decay: float = 0.0,
+    max_grad_norm: float = 1.0,
+    decay: float = 0.8,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(per_leaf, params)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (
+                    vr[..., None]
+                    * vc[..., None, :]
+                    / jnp.clip(vr.mean(axis=-1)[..., None, None], 1e-30)
+                )
+                u = g / jnp.sqrt(denom + eps)
+                s_new = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps)
+                s_new = {"v": v}
+            # update-norm clipping (adafactor's d=1.0 rule, simplified)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), s_new
+
+        pairs = jax.tree.map(
+            upd, params, grads, state["f"],
+            is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x),
+        )
+        is_pair = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t2: t2[0], pairs, is_leaf=is_pair)
+        new_f = jax.tree.map(lambda t2: t2[1], pairs, is_leaf=is_pair)
+        return new_params, {"f": new_f}
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit Adam (block-quantized moments)
+# ---------------------------------------------------------------------------
+
+_Q8_BLOCK = 256
+
+
+def _q8_encode(x: jax.Array) -> dict:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _Q8_BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blocks = flat.reshape(-1, _Q8_BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _q8_decode(enc: dict, shape) -> jax.Array:
+    x = (enc["q"].astype(jnp.float32) * enc["s"][:, None]).reshape(-1)
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    return x[:n].reshape(shape)
+
+
+def q8adam(
+    lr: float | Callable = 1e-3,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    max_grad_norm: float = 1.0,
+) -> Optimizer:
+    """Quantized-state Adam: ~3 bytes/param of optimizer state.
+
+    m: int8 blocks + per-block f32 scales (symmetric linear quantization is
+    fine for the first moment). v: bf16 — the second moment spans too many
+    decades for linear int8 (small entries snap to 0 and the rsqrt update
+    explodes; observed divergence), while bf16's f32-range exponent keeps
+    the ratio error at ~0.4%.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "m": jax.tree.map(
+                lambda p: _q8_encode(jnp.zeros(p.shape, jnp.float32)), params
+            ),
+            "v": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params
+            ),
+        }
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1, bc2 = 1.0 - b1**t, 1.0 - b2**t
+
+        def upd(p, g, m_enc, v_bf):
+            g = g.astype(jnp.float32)
+            m = b1 * _q8_decode(m_enc, p.shape) + (1 - b1) * g
+            v = b2 * v_bf.astype(jnp.float32) + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+                _q8_encode(m),
+                v.astype(jnp.bfloat16),
+            )
+
+        is_enc = lambda x: isinstance(x, dict) and "q" in x
+        triples = jax.tree.map(
+            upd, params, grads, state["m"], state["v"], is_leaf=is_enc
+        )
+        is_tri = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t3: t3[0], triples, is_leaf=is_tri)
+        new_m = jax.tree.map(lambda t3: t3[1], triples, is_leaf=is_tri)
+        new_v = jax.tree.map(lambda t3: t3[2], triples, is_leaf=is_tri)
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init=init, update=update)
+
+
+def get_optimizer(name: str, lr: float | Callable = 1e-3, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    if name == "q8adam":
+        return q8adam(lr, **kw)
+    raise KeyError(f"unknown optimizer {name!r}")

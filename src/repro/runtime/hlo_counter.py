@@ -1,0 +1,305 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` visits every op exactly once — a scan-based
+model (layers, microbatches, attention blocks) under-reports FLOPs,
+bytes and collectives by the loop trip counts. This module re-derives the
+three roofline inputs directly from ``compiled.as_text()``:
+
+  - splits the module into computations,
+  - counts per-computation dot FLOPs (2 * prod(out) * contraction size),
+    fusion I/O bytes, and collective payload bytes,
+  - multiplies while-loop bodies by their ``known_trip_count`` (annotated
+    by XLA for counted loops; falls back to 1 with a warning flag),
+  - counts ``conditional`` branches at the cost of the *most expensive*
+    branch (upper bound; hybrid archs apply their shared block this way),
+  - counts async collective start/done pairs once.
+
+All shapes in SPMD HLO are partition-local, so totals are per-device;
+callers multiply by chip count for whole-program numbers.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_FACTORS = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d+(?:e\d+m\d+(?:fn)?)?|pred)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+# type group is lazy `.+?`: tuple types contain `/*index=N*/` comments (with
+# '='!) and nested brackets; the first `word(` after whitespace is the opcode
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*?)\)(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"(?:branch_computations|true_computation|false_computation)=\{?%?([\w.\-,%\s]+)\}?")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0           # wire-weighted
+    coll_by_kind: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def add(self, other: "Cost", times: float = 1.0) -> None:
+        self.flops += other.flops * times
+        self.hbm_bytes += other.hbm_bytes * times
+        self.collective_bytes += other.collective_bytes * times
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0) + v * times
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * times
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+
+
+def _parse_computations(text: str) -> dict[str, list[_Op]]:
+    comps: dict[str, list[_Op]] = {}
+    cur: list[_Op] | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and line.strip().endswith("{"):
+            cur = comps.setdefault(hdr.group(1), [])
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, args, attrs = m.groups()
+        operands = [a.strip().lstrip("%") for a in args.split(",") if a.strip().startswith("%")]
+        cur.append(_Op(name, type_str, opcode, operands, attrs))
+    return comps
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = _parse_computations(text)
+        # op names are only unique WITHIN a computation (%param_0.1 etc.
+        # repeat across fused computations) — resolve types per-comp first
+        self.types_by_comp: dict[str, dict[str, str]] = {}
+        self.types: dict[str, str] = {}
+        for cname, ops in self.comps.items():
+            tmap = self.types_by_comp.setdefault(cname, {})
+            for op in ops:
+                tmap[op.name] = op.type_str
+                self.types[op.name] = op.type_str
+        self._memo: dict[str, Cost] = {}
+        self.entry = self._find_entry(text)
+
+    def _type_of(self, comp: str, name: str) -> str:
+        t = self.types_by_comp.get(comp, {}).get(name)
+        return t if t is not None else self.types.get(name, "")
+
+    @staticmethod
+    def _find_entry(text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        if not m:
+            raise ValueError("no ENTRY computation found")
+        return m.group(1)
+
+    # -- per-op costs ---------------------------------------------------------
+    def _dot_flops(self, op: _Op, comp: str) -> float:
+        out_dims = _shape_dims(op.type_str)
+        lhs_type = self._type_of(comp, op.operands[0]) if op.operands else ""
+        lhs_dims = _shape_dims(lhs_type)
+        m = _LHS_CDIMS_RE.search(op.attrs)
+        contract = 1
+        if m and m.group(1):
+            for d in m.group(1).split(","):
+                i = int(d)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+        n_out = 1
+        for d in out_dims:
+            n_out *= d
+        return 2.0 * n_out * contract
+
+    def _op_bytes(self, op: _Op, comp: str) -> float:
+        if op.opcode in ("parameter", "constant", "get-tuple-element", "bitcast",
+                         "tuple", "after-all"):
+            return 0.0
+        total = float(_type_bytes(op.type_str))
+        for o in op.operands:
+            total += _type_bytes(self._type_of(comp, o))
+        return total
+
+    def _fusion_bytes(self, op: _Op, called: str, comp: str) -> float:
+        """HBM traffic of a fusion, slice-aware.
+
+        A fusion that merely dynamic-slices / gathers from a big operand
+        reads only the slice; one whose root dynamic-update-slices into a
+        big (aliased, in-place) buffer writes only the update. Counting
+        full buffers per loop iteration overstated HBM traffic ~80x on
+        scan-heavy models.
+        """
+        ops = self.comps.get(called)
+        if ops is None:
+            return self._op_bytes(op, comp)
+        try:
+            consumers: dict[str, list[_Op]] = {}
+            root = ops[-1] if ops else None
+            for o in ops:
+                if o.opcode == "parameter":
+                    continue
+                for src in o.operands:
+                    consumers.setdefault(src, []).append(o)
+            # XLA prints parameters in index order -> positional operand map
+            params_in_order = [o for o in ops if o.opcode == "parameter"]
+            total = 0.0
+            # result: if the fusion root is a DUS, the write is update-sized
+            if root is not None and root.opcode == "dynamic-update-slice" and len(root.operands) >= 2:
+                total += _type_bytes(self._type_of(called, root.operands[1]))
+            else:
+                total += _type_bytes(op.type_str)
+            for i, operand in enumerate(op.operands):
+                full = _type_bytes(self._type_of(comp, operand))
+                if i < len(params_in_order):
+                    pname = params_in_order[i].name
+                    use = consumers.get(pname, [])
+                    if use and all(
+                        u.opcode in ("dynamic-slice", "gather", "dynamic-update-slice")
+                        for u in use
+                    ):
+                        sliced = 0
+                        for u in use:
+                            if u.opcode == "dynamic-update-slice":
+                                sliced += _type_bytes(
+                                    self._type_of(called, u.operands[1])
+                                ) if len(u.operands) >= 2 else full
+                            else:
+                                sliced += _type_bytes(u.type_str)
+                        total += min(full, sliced)
+                        continue
+                total += full
+            return total
+        except Exception:
+            return self._op_bytes(op, comp)
+
+    # -- computation traversal ----------------------------------------------------
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = Cost()  # cycle guard
+        c = Cost()
+        for op in self.comps.get(comp_name, []):
+            kind = op.opcode.replace("-start", "")
+            if op.opcode == "dot":
+                c.flops += self._dot_flops(op, comp_name)
+                c.hbm_bytes += self._op_bytes(op, comp_name)
+            elif kind in _COLLECTIVE_FACTORS and not op.opcode.endswith("-done"):
+                b = _type_bytes(op.type_str)
+                c.collective_bytes += b * _COLLECTIVE_FACTORS[kind]
+                c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0) + b
+                c.coll_counts[kind] = c.coll_counts.get(kind, 0) + 1
+                c.hbm_bytes += self._op_bytes(op, comp_name)
+            elif op.opcode == "fusion":
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    c.hbm_bytes += self._fusion_bytes(op, m.group(1), comp_name)
+                    sub = self.cost_of(m.group(1))
+                    c.flops += sub.flops
+                    c.collective_bytes += sub.collective_bytes
+                else:
+                    c.hbm_bytes += self._op_bytes(op, comp_name)
+            elif op.opcode == "while":
+                body = _BODY_RE.search(op.attrs)
+                trip_m = _TRIP_RE.search(op.attrs)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if not trip_m:
+                    c.unknown_trip_loops += 1
+                if body:
+                    c.add(self.cost_of(body.group(1)), times=trip)
+            elif op.opcode == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", op.attrs)
+                branch_costs = [
+                    self.cost_of(b) for b in branches if b in self.comps
+                ]
+                if branch_costs:
+                    best = max(branch_costs, key=lambda x: x.flops + x.hbm_bytes)
+                    c.add(best)
+                c.hbm_bytes += self._op_bytes(op, comp_name)
+            elif op.opcode in ("call", "async-start"):
+                for target in _CALLS_RE.findall(op.attrs) + re.findall(
+                    r"to_apply=%?([\w.\-]+)", op.attrs
+                ):
+                    if target in self.comps:
+                        c.add(self.cost_of(target))
+            elif op.opcode in ("dynamic-slice", "gather"):
+                # read the slice, not the buffer
+                c.hbm_bytes += 2.0 * _type_bytes(op.type_str)
+            elif op.opcode == "dynamic-update-slice":
+                upd = (
+                    _type_bytes(self._type_of(comp_name, op.operands[1]))
+                    if len(op.operands) >= 2
+                    else _type_bytes(op.type_str)
+                )
+                c.hbm_bytes += 2.0 * upd
+            elif op.opcode in ("custom-call", "convolution", "reduce", "sort",
+                               "scatter", "copy", "transpose", "reshape",
+                               "broadcast", "iota", "convert", "select",
+                               "compare", "add", "multiply", "subtract",
+                               "divide", "exponential", "pad", "slice",
+                               "concatenate", "reduce-window", "rng",
+                               "dynamic-reshape", "clamp", "maximum", "minimum"):
+                c.hbm_bytes += self._op_bytes(op, comp_name)
+        self._memo[comp_name] = c
+        return c
+
+    def total(self) -> Cost:
+        return self.cost_of(self.entry)
+
+
+def loop_aware_cost(compiled_text: str) -> Cost:
+    return HloCostModel(compiled_text).total()

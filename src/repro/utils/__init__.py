@@ -1,0 +1,18 @@
+from repro.utils.tree import (
+    flatten_with_paths,
+    unflatten_from_paths,
+    path_str,
+    tree_equal,
+    map_with_paths,
+)
+from repro.utils.timing import Timer, Timings
+
+__all__ = [
+    "flatten_with_paths",
+    "unflatten_from_paths",
+    "path_str",
+    "tree_equal",
+    "map_with_paths",
+    "Timer",
+    "Timings",
+]

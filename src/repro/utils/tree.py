@@ -1,0 +1,93 @@
+"""Pytree path utilities.
+
+Checkpoint state is addressed by *path strings* — stable, human-readable keys
+derived from the pytree structure (e.g. ``params/layers/attn/wq``). All
+checkpoint formats key chunks by (path, global offset), never by flatten
+order, so adding/removing leaves does not invalidate unrelated chunks.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.tree_util import (
+    DictKey,
+    FlattenedIndexKey,
+    GetAttrKey,
+    SequenceKey,
+    tree_flatten_with_path,
+    tree_unflatten,
+)
+
+
+def path_str(path: tuple) -> str:
+    """Render a jax key-path as a stable '/'-joined string."""
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, GetAttrKey):
+            parts.append(str(k.name))
+        elif isinstance(k, FlattenedIndexKey):
+            parts.append(str(k.key))
+        else:  # pragma: no cover - future key types
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def flatten_with_paths(tree: Any) -> tuple[dict[str, Any], Any]:
+    """Flatten ``tree`` to an ordered {path_str: leaf} dict + treedef."""
+    leaves, treedef = tree_flatten_with_path(tree)
+    out: dict[str, Any] = {}
+    for path, leaf in leaves:
+        key = path_str(path)
+        if key in out:
+            raise ValueError(f"duplicate path key {key!r} in pytree")
+        out[key] = leaf
+    return out, treedef
+
+
+def unflatten_from_paths(treedef: Any, flat: dict[str, Any]) -> Any:
+    """Inverse of :func:`flatten_with_paths` for the same treedef."""
+    # tree_unflatten consumes leaves in flatten order; re-derive that order
+    # from the treedef itself so dict insertion order never matters.
+    dummy = tree_unflatten(treedef, list(range(treedef.num_leaves)))
+    keyed, _ = tree_flatten_with_path(dummy)
+    ordered = []
+    for path, _ in keyed:
+        key = path_str(path)
+        if key not in flat:
+            raise KeyError(f"missing leaf {key!r} during unflatten")
+        ordered.append(flat[key])
+    return tree_unflatten(treedef, ordered)
+
+
+def map_with_paths(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where ``fn`` receives (path_str, leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fn(path_str(p), x), tree
+    )
+
+
+def tree_equal(a: Any, b: Any) -> bool:
+    """Structural + bitwise equality of two pytrees of arrays."""
+    fa, da = flatten_with_paths(a)
+    fb, db = flatten_with_paths(b)
+    if da != db or fa.keys() != fb.keys():
+        return False
+    for k in fa:
+        x, y = np.asarray(fa[k]), np.asarray(fb[k])
+        if x.shape != y.shape or x.dtype != y.dtype:
+            return False
+        if x.dtype == np.dtype(object):  # pragma: no cover
+            if not (x == y).all():
+                return False
+        elif not np.array_equal(
+            x.view(np.uint8) if x.dtype.kind == "f" else x,
+            y.view(np.uint8) if y.dtype.kind == "f" else y,
+        ):
+            return False
+    return True

@@ -1,0 +1,68 @@
+"""Elastic restore: save under one sharding, restore under another.
+
+Runs in a subprocess with 8 forced host devices so real multi-device
+shardings exist (the main pytest process keeps 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, json, tempfile
+    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from repro.checkpoint import ChunkStore, save_pytree, restore_pytree
+
+    root = tempfile.mkdtemp()
+    store = ChunkStore(root)
+
+    mesh_a = jax.make_mesh((4, 2), ("x", "y"), axis_types=(AxisType.Auto,)*2)
+    sh_a = NamedSharding(mesh_a, P("x", "y"))
+    w = jnp.arange(64 * 16, dtype=jnp.float32).reshape(64, 16)
+    state = {
+        "w": jax.device_put(w, sh_a),
+        "r": jax.device_put(jnp.arange(8.0), NamedSharding(mesh_a, P())),  # replicated
+        "host": np.int64(5),
+    }
+    save_pytree(state, store, 1, chunk_bytes=256)
+
+    # restore on a DIFFERENT mesh & layout
+    mesh_b = jax.make_mesh((8,), ("z",), axis_types=(AxisType.Auto,))
+    sh_b = {
+        "w": NamedSharding(mesh_b, P(None, "z")),
+        "r": NamedSharding(mesh_b, P("z")),
+        "host": None,
+    }
+    restored, m = restore_pytree(store, 1, sh_b, verify_digests=True)
+    ok_w = bool(jnp.array_equal(jnp.asarray(restored["w"]), w))
+    ok_r = bool(jnp.array_equal(jnp.asarray(restored["r"]), jnp.arange(8.0)))
+    ok_h = int(restored["host"]) == 5
+    ok_sh = restored["w"].sharding.is_equivalent_to(sh_b["w"], 2)
+    # host-only restore (no shardings at all)
+    full_np, _ = restore_pytree(store, 1)
+    ok_np = bool(np.array_equal(full_np["w"], np.asarray(w)))
+    print(json.dumps({"ok": ok_w and ok_r and ok_h and ok_sh and ok_np}))
+    """
+)
+
+
+@pytest.mark.slow
+def test_elastic_reshard_across_meshes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        ),
+        timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    result = json.loads(out.stdout.strip().splitlines()[-1])
+    assert result["ok"]

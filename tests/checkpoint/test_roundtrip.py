@@ -1,0 +1,153 @@
+"""Checkpoint substrate: roundtrips, codecs, atomic commit, deltas, GC."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (
+    ChunkStore,
+    get_codec,
+    latest_committed_step,
+    list_codecs,
+    load_manifest,
+    restore_pytree,
+    save_pytree,
+)
+from repro.checkpoint.manifest import committed_steps, is_committed, step_dir
+from repro.utils.tree import tree_equal
+
+
+def _state():
+    return {
+        "params": {
+            "w": jnp.arange(1000, dtype=jnp.bfloat16).reshape(10, 100),
+            "b": jnp.ones((7,), jnp.float32),
+        },
+        "step": np.int64(42),
+        "nested": [jnp.zeros((3, 3), jnp.int32), (jnp.ones(5),)],
+    }
+
+
+def test_roundtrip_mixed_dtypes(tmp_store):
+    state = _state()
+    save_pytree(state, tmp_store, 1, chunk_bytes=128)
+    restored, m = restore_pytree(tmp_store, 1, verify_digests=True)
+    assert tree_equal(jax.tree.map(np.asarray, state), restored)
+    assert m.step == 1
+
+
+@pytest.mark.parametrize("codec", list_codecs())
+def test_all_codecs_roundtrip(tmp_store, codec, rng):
+    state = {"x": jnp.asarray(rng.standard_normal((512, 64)), jnp.float32)}
+    save_pytree(state, tmp_store, 2, codec=codec, chunk_bytes=4096)
+    restored, _ = restore_pytree(tmp_store, 2, verify_digests=True)
+    assert tree_equal(jax.tree.map(np.asarray, state), restored)
+
+
+@pytest.mark.parametrize("codec", list_codecs())
+def test_codec_inverse_property(codec, rng):
+    c = get_codec(codec)
+    for n in (0, 1, 100, 1 << 16, (1 << 20) + 13):
+        data = rng.integers(0, 256, n).astype(np.uint8).tobytes()
+        assert c.decompress(c.compress(data)) == data
+
+
+def test_incremental_delta_reuses_clean_chunks(tmp_store):
+    state = _state()
+    m1 = save_pytree(state, tmp_store, 1, chunk_bytes=128)
+    state2 = dict(state)
+    state2["params"] = dict(state["params"])
+    state2["params"]["b"] = state["params"]["b"] + 1
+    m2 = save_pytree(state2, tmp_store, 2, chunk_bytes=128, prev_manifest=m1)
+    assert m2.meta["chunks_reused"] > 0
+    assert m2.meta["chunks_written"] < m1.meta["chunks_written"]
+    restored, _ = restore_pytree(tmp_store, 2, verify_digests=True)
+    assert tree_equal(jax.tree.map(np.asarray, state2), restored)
+
+
+def test_uncommitted_checkpoint_is_invisible(tmp_store):
+    state = _state()
+    save_pytree(state, tmp_store, 1)
+    save_pytree(state, tmp_store, 2, commit=False)
+    assert latest_committed_step(tmp_store.root) == 1
+    with pytest.raises(FileNotFoundError):
+        load_manifest(tmp_store.root, 2)
+
+
+def test_crash_mid_write_preserves_previous(tmp_store):
+    """Simulate the forked child dying: truncate step-2 payload pre-commit."""
+    state = _state()
+    save_pytree(state, tmp_store, 1)
+    save_pytree(state, tmp_store, 2, commit=False)
+    # corrupt the in-flight step's data file, as a crash would
+    d = step_dir(tmp_store.root, 2)
+    for name in os.listdir(d):
+        with open(os.path.join(d, name), "r+b") as f:
+            f.truncate(3)
+    # restore still lands on step 1, bit-exact
+    restored, m = restore_pytree(tmp_store, latest_committed_step(tmp_store.root))
+    assert m.step == 1
+    assert tree_equal(jax.tree.map(np.asarray, state), restored)
+
+
+def test_digest_verification_catches_corruption(tmp_store):
+    state = _state()
+    save_pytree(state, tmp_store, 1, codec="none")
+    d = step_dir(tmp_store.root, 1)
+    data_file = [n for n in os.listdir(d) if n.startswith("data-")][0]
+    with open(os.path.join(d, data_file), "r+b") as f:
+        f.seek(10)
+        b = f.read(1)
+        f.seek(10)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(IOError, match="digest mismatch"):
+        restore_pytree(tmp_store, 1, verify_digests=True)
+
+
+def test_gc_keeps_delta_closure(tmp_store):
+    from repro.core.policy import CheckpointPolicy
+
+    state = _state()
+    m1 = save_pytree(state, tmp_store, 1, chunk_bytes=128)
+    m2 = save_pytree(state, tmp_store, 2, chunk_bytes=128, prev_manifest=m1)
+    m3 = save_pytree(state, tmp_store, 3, chunk_bytes=128, prev_manifest=m2)
+    policy = CheckpointPolicy(keep_last=1)
+    committed = committed_steps(tmp_store.root)
+    manifests = {s: load_manifest(tmp_store.root, s) for s in committed}
+    keep = policy.gc_keep(committed, manifests)
+    # delta chains flatten: step 3's reused chunks point straight at step 1's
+    # payload (not step 2), so GC keeps {3} + its closure {1} and step 2 dies
+    assert keep == [1, 3]
+    removed = tmp_store.gc(keep)
+    assert removed == [2]
+    restored, _ = restore_pytree(tmp_store, 3, verify_digests=True)
+    assert tree_equal(jax.tree.map(np.asarray, state), restored)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.tuples(st.integers(1, 20), st.integers(1, 20)),
+    dtype=st.sampled_from(["float32", "int32", "uint8", "bfloat16", "bool"]),
+    chunk_bytes=st.sampled_from([16, 128, 4096]),
+    seed=st.integers(0, 2**31),
+)
+def test_property_roundtrip_any_leaf(tmp_path_factory, shape, dtype, chunk_bytes, seed):
+    import ml_dtypes
+
+    tmp = tmp_path_factory.mktemp("prop")
+    store = ChunkStore(str(tmp))
+    r = np.random.default_rng(seed)
+    dt = np.dtype(ml_dtypes.bfloat16) if dtype == "bfloat16" else np.dtype(dtype)
+    if dt.kind == "b":
+        arr = r.integers(0, 2, shape).astype(bool)
+    elif dt.kind in "fV" or dtype == "bfloat16":
+        arr = r.standard_normal(shape).astype(np.float32).astype(dt)
+    else:
+        arr = r.integers(0, 100, shape).astype(dt)
+    state = {"leaf": arr, "meta": np.int64(seed)}
+    save_pytree(state, store, 7, chunk_bytes=chunk_bytes)
+    restored, _ = restore_pytree(store, 7, verify_digests=True)
+    assert tree_equal(state, restored)

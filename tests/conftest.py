@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def tmp_store(tmp_path):
+    from repro.checkpoint import ChunkStore
+
+    return ChunkStore(str(tmp_path / "ckpt"))

@@ -1,0 +1,107 @@
+"""ShadowStateManager: Algorithm-1 FSM behaviour + digest-gated fetches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ChunkState, ShadowStateManager
+
+
+def _state(n=4096):
+    return {"w": jnp.arange(n, dtype=jnp.float32), "b": jnp.ones((16,), jnp.float32)}
+
+
+def test_first_sync_fetches_everything():
+    s = _state()
+    sh = ShadowStateManager(chunk_bytes=1024)
+    sh.register(s)
+    st1 = sh.sync(s)
+    assert st1.chunks_fetched == st1.chunks_total
+
+
+def test_clean_sync_fetches_nothing():
+    s = _state()
+    sh = ShadowStateManager(chunk_bytes=1024)
+    sh.register(s)
+    sh.sync(s)
+    sh.mark_device_step()
+    st2 = sh.sync(s)
+    assert st2.chunks_fetched == 0
+    # and all chunks are CLEAN afterwards
+    for states in sh.chunk_states().values():
+        assert all(c is ChunkState.CLEAN for c in states)
+
+
+def test_single_element_change_fetches_one_chunk():
+    s = _state()
+    sh = ShadowStateManager(chunk_bytes=1024)
+    sh.register(s)
+    sh.sync(s)
+    s2 = dict(s)
+    s2["w"] = s["w"].at[300].set(-1.0)  # chunk 1 of w (256 f32 per chunk)
+    sh.mark_device_step()
+    st3 = sh.sync(s2)
+    assert st3.chunks_fetched == 1
+    # shadow content matches the new device state
+    snap = sh.snapshot()
+    w_bytes = snap[("w", 0)]["data"]
+    w_restored = w_bytes.view(np.float32)
+    assert np.array_equal(w_restored, np.asarray(s2["w"]))
+
+
+def test_without_mark_no_refetch_even_if_changed():
+    """FSM honesty: CLEAN chunks are trusted (the paper's protocol requires
+    the device-step event to invalidate)."""
+    s = _state()
+    sh = ShadowStateManager(chunk_bytes=1024)
+    sh.register(s)
+    sh.sync(s)
+    s2 = dict(s)
+    s2["w"] = s["w"].at[0].set(123.0)
+    st2 = sh.sync(s2)  # no mark_device_step
+    assert st2.chunks_fetched == 0
+
+
+def test_invalidate_forces_full_resync():
+    s = _state()
+    sh = ShadowStateManager(chunk_bytes=1024)
+    sh.register(s)
+    sh.sync(s)
+    sh.invalidate()
+    st2 = sh.sync(s)
+    assert st2.chunks_fetched == st2.chunks_total
+
+
+def test_digest_on_device_and_host_agree():
+    s = _state()
+    a = ShadowStateManager(chunk_bytes=512, digest_on_device=True)
+    b = ShadowStateManager(chunk_bytes=512, digest_on_device=False)
+    a.register(s), b.register(s)
+    a.sync(s), b.sync(s)
+    da = {k: v.digests for k, v in a._streams.items()}
+    db = {k: v.digests for k, v in b._streams.items()}
+    assert da == db
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    edits=st.lists(st.integers(0, 4095), min_size=0, max_size=8),
+    chunk=st.sampled_from([256, 1024]),
+)
+def test_property_fetched_chunks_exactly_cover_edits(edits, chunk):
+    """Fetch set == union of chunks containing an edited element."""
+    s = _state()
+    sh = ShadowStateManager(chunk_bytes=chunk)
+    sh.register(s)
+    sh.sync(s)
+    w = s["w"]
+    for i in edits:
+        w = w.at[i].set(w[i] + 1.0)
+    s2 = dict(s)
+    s2["w"] = w
+    sh.mark_device_step()
+    stats = sh.sync(s2)
+    per_chunk_elems = chunk // 4
+    expected = {i // per_chunk_elems for i in edits}
+    assert stats.chunks_fetched == len(expected)

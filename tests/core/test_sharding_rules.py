@@ -1,0 +1,87 @@
+"""ShardingRules: param spec resolution, FSDP divisibility, cache specs."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AxisType, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build
+from repro.runtime.sharding import ShardingRules, fit_spec
+
+
+def _amesh(shape, axes):
+    """AbstractMesh: spec logic needs only shape+names, not real devices."""
+    return jax.sharding.AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return _amesh((1, 1), ("data", "model"))
+
+
+def test_fit_spec_drops_nondivisible(mesh):
+    m4 = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    assert fit_spec(m4, P("data"), (7,)) == P("data")  # size-1 axis divides
+    assert fit_spec(m4, P("nope"), (8,)) == P(None)
+    assert fit_spec(m4, P("data", "data"), (4,)) == P("data")
+
+
+def test_param_rules_cover_all_archs(mesh):
+    for arch in ("command-r-plus-104b", "arctic-480b", "zamba2-1.2b",
+                 "musicgen-medium", "paligemma-3b"):
+        cfg = get_config(arch, smoke=True)
+        model = build(cfg)
+        rules = ShardingRules(cfg=cfg, mesh=mesh)
+        shapes = jax.eval_shape(lambda m=model: m.init(jax.random.key(0)))
+        specs = rules.params_specs(shapes)
+        n_spec = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+        n_leaf = len(jax.tree.leaves(shapes))
+        assert n_spec == n_leaf
+
+
+def test_tp_rules_shard_expected_dims():
+    mesh = _amesh((1, 2), ("data", "model"))
+    cfg = get_config("granite-8b")  # tp=True, kv=8 not divisible by 2? 8%2=0
+    rules = ShardingRules(cfg=cfg, mesh=mesh)
+    spec = rules.spec_for("blocks/attn/wq", (36, 4096, 4096))
+    assert spec[2] == "model"
+    spec_o = rules.spec_for("blocks/attn/wo", (36, 4096, 4096))
+    assert spec_o[1] == "model"
+    spec_e = rules.spec_for("embed", (49152, 4096))
+    assert spec_e[0] == "model"
+    moe_cfg = get_config("arctic-480b")
+    moe_rules = ShardingRules(cfg=moe_cfg, mesh=mesh)
+    spec_moe = moe_rules.spec_for("blocks/moe/wi", (35, 128, 7168, 4864))
+    assert spec_moe[1] == "model"  # experts over model
+
+
+def test_no_tp_means_model_axis_joins_batch():
+    mesh = _amesh((1, 2), ("data", "model"))
+    cfg = get_config("gemma-2b")  # tensor_parallel=False
+    rules = ShardingRules(cfg=cfg, mesh=mesh)
+    assert rules.model_axis is None
+    assert "model" in rules.data_axes
+    # batch shards over both axes when divisible
+    sh = rules.batch_sharding_for((4, 128))
+    assert sh.spec[0] == ("data", "model")
+
+
+def test_cache_spec_head_dim_fallback():
+    mesh = _amesh((1, 2), ("data", "model"))
+    # command-r: kv=8 divisible by 2 -> heads sharded
+    r1 = ShardingRules(cfg=get_config("command-r-plus-104b"), mesh=mesh)
+    assert r1.cache_spec()[2] == "model"
+    # qwen2 kv=2, but tp=False -> no model axis at all
+    r2 = ShardingRules(cfg=get_config("qwen2-0.5b"), mesh=mesh)
+    assert r2.cache_spec()[4] is None
+
+
+def test_layer_axis_never_sharded(mesh):
+    cfg = get_config("granite-8b")
+    rules = ShardingRules(cfg=cfg, mesh=mesh)
+    for path, shape in [
+        ("blocks/attn/wq", (36, 4096, 4096)),
+        ("blocks/mlp/wi", (36, 4096, 14336)),
+        ("blocks/moe/wi", (36, 8, 4096, 1408)),
+    ]:
+        assert rules.spec_for(path, shape)[0] is None

@@ -1,0 +1,121 @@
+"""Per-arch smoke: reduced config, one forward + one train step on CPU.
+
+Covers all 10 assigned architectures (reduced same-family configs); full
+configs are exercised via the dry-run only (ShapeDtypeStruct, no alloc).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.data import SyntheticBatches
+from repro.models import build
+from repro.optim import get_optimizer
+
+
+def _batch(cfg, B=2, S=32):
+    data = SyntheticBatches(cfg, batch=B, seq_len=S)
+    return jax.tree.map(jnp.asarray, next(data))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+
+    # forward: shape + finiteness
+    logits = model.forward(params, batch)
+    assert logits.shape[0] == 2
+    assert logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    # one train step: loss finite, params move
+    opt = get_optimizer(cfg.optimizer, 1e-3)
+    opt_state = opt.init(params)
+
+    def loss_fn(p):
+        return model.loss(p, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    new_params, _ = opt.update(grads, opt_state, params, jnp.zeros((), jnp.int32))
+    delta = jax.tree.reduce(
+        lambda a, b: a + float(jnp.abs(b.astype(jnp.float32)).sum()),
+        jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                     new_params, params),
+        0.0,
+    )
+    assert delta > 0, f"{arch}: optimizer produced no update"
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if get_config(a).frontend != "vision"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce full-forward logits."""
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    if model.decode is None:
+        pytest.skip("no decode path")
+    params = model.init(jax.random.key(1))
+    batch = _batch(cfg, B=2, S=16)
+    logits_full = model.forward(params, batch)
+    cache = model.init_cache(2, 16)
+    errs = []
+    for t in range(16):
+        tok = batch["inputs"][:, t]
+        lg, cache = model.decode(params, cache, tok)
+        want = logits_full[:, t]
+        errs.append(float(jnp.abs(lg - want).max()))
+    assert max(errs) < 2e-2, f"{arch}: decode diverges from forward ({max(errs)})"
+
+
+def test_vlm_prefill_decode_consistency():
+    cfg = get_config("paligemma-3b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg, B=2, S=16)
+    logits_full = model.forward(params, batch)  # text logits
+    lp, cache = model.prefill(
+        params, {"patches": batch["patches"], "inputs": batch["inputs"][:, :10]}, 64
+    )
+    assert np.allclose(np.asarray(lp[:, 0]), np.asarray(logits_full[:, 9]), atol=2e-2)
+    ld, cache = model.decode(params, cache, batch["inputs"][:, 10])
+    assert np.allclose(np.asarray(ld), np.asarray(logits_full[:, 10]), atol=2e-2)
+
+
+def test_vlm_uses_patches():
+    cfg = get_config("paligemma-3b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    l1 = model.forward(params, batch)
+    batch2 = dict(batch)
+    batch2["patches"] = batch["patches"] + 10.0
+    l2 = model.forward(params, batch2)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2)), "patches ignored"
+
+
+def test_moe_router_balances_under_training():
+    cfg = get_config("moonshot-v1-16b-a3b", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    _, metrics = model.loss(params, batch)
+    assert float(metrics["aux"]) > 0  # balance loss active
+
+
+def test_param_counts_match_analytic():
+    """init() allocates exactly cfg.n_params() parameters (full configs,
+    via eval_shape — no memory)."""
+    for arch in list_archs():
+        cfg = get_config(arch)
+        model = build(cfg)
+        shapes = jax.eval_shape(lambda m=model: m.init(jax.random.key(0)))
+        total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+        analytic = cfg.n_params()
+        assert abs(total - analytic) / analytic < 0.02, (
+            f"{arch}: init {total:,} vs analytic {analytic:,}"
+        )
