@@ -30,7 +30,7 @@ def run() -> None:
     for touched_frac, label in [(1.0, "all_experts"), (0.25, "quarter"), (0.06, "top2_of_32")]:
         with tempfile.TemporaryDirectory() as d:
             ck = ForkedCheckpointer(
-                ChunkStore(d), codec="zstd1", chunk_bytes=D * F * 4,  # 1 expert/chunk
+                ChunkStore(d), chunk_bytes=D * F * 4,  # 1 expert/chunk, default codec
                 incremental=True, digest_on_device=False,
             )
             ck.save_async(1, state).wait()

@@ -11,6 +11,7 @@ order of magnitude on blocking time.
 """
 from __future__ import annotations
 
+import os
 import tempfile
 import time
 
@@ -18,7 +19,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import bench_cfg, make_train_setup, row
-from repro.checkpoint import ChunkStore
+from repro.checkpoint import ChunkStore, has_codec
 from repro.core import ForkedCheckpointer
 
 
@@ -33,17 +34,24 @@ def run() -> None:
     full = {"device": dstate, "host": {"step": np.int64(3)}}
 
     results = {}
-    for codec, forked, label in [
-        ("none", False, "naive"),
-        ("gzip", False, "gzip"),
-        ("pgzip", False, "pgzip"),
-        ("zstd1", False, "zstd1_lz4class"),
-        ("zstd1", True, "forked_ckpting"),
-    ]:
+    fast = "zstd1" if has_codec("zstd1") else "pgzip"
+    strategies = [
+        ("none", False, "naive", "thread"),
+        ("gzip", False, "gzip", "thread"),
+        ("pgzip", False, "pgzip", "thread"),
+        ("zstd1", False, "zstd1_lz4class", "thread"),
+        (fast, True, "forked_ckpting_thread", "thread"),
+        (fast, True, "forked_ckpting_fork", "fork"),
+    ]
+    for codec, forked, label, backend in strategies:
+        if not has_codec(codec):
+            continue  # optional codec not installed
+        if backend == "fork" and not hasattr(os, "fork"):
+            continue
         with tempfile.TemporaryDirectory() as d:
             ck = ForkedCheckpointer(
                 ChunkStore(d), codec=codec, chunk_bytes=4 << 20,
-                incremental=False, digest_on_device=False,
+                incremental=False, digest_on_device=False, backend=backend,
             )
             t0 = time.perf_counter()
             if forked:

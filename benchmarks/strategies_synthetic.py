@@ -12,6 +12,7 @@ time is phase 1 only (drain + snapshot); the write happens in background.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -19,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
-from repro.checkpoint import ChunkStore
+from repro.checkpoint import ChunkStore, has_codec
 from repro.core import ForkedCheckpointer
 
 N_BYTES = 256 << 20  # 256 MB state (paper: 32 GB)
@@ -36,11 +37,12 @@ def _vector(kind: str) -> np.ndarray:
     return v
 
 
-def _bench_strategy(store_root, state, codec: str, forked: bool):
+def _bench_strategy(store_root, state, codec: str, forked: bool,
+                    backend: str = "thread"):
     store = ChunkStore(store_root)
     ck = ForkedCheckpointer(
         store, codec=codec, chunk_bytes=8 << 20, incremental=False,
-        digest_on_device=False,
+        digest_on_device=False, backend=backend,
     )
     t0 = time.perf_counter()
     if forked:
@@ -63,17 +65,24 @@ def run() -> None:
         state = {"device": {"v": jnp.asarray(vec)}, "host": {"step": np.int64(1)}}
         jax.block_until_ready(state["device"]["v"])
         naive_blocking = None
-        for codec, forked, label in [
-            ("none", False, "naive"),
-            ("gzip", False, "gzip"),
-            ("pgzip", False, "pgzip"),
-            ("zstd1", False, "zstd1_lz4class"),
-            ("zstd9", False, "zstd9"),
-            ("zstd1", True, "forked_ckpting"),
-        ]:
+        fast = "zstd1" if has_codec("zstd1") else "pgzip"
+        strategies = [
+            ("none", False, "naive", "thread"),
+            ("gzip", False, "gzip", "thread"),
+            ("pgzip", False, "pgzip", "thread"),
+            ("zstd1", False, "zstd1_lz4class", "thread"),
+            ("zstd9", False, "zstd9", "thread"),
+            (fast, True, "forked_ckpting_thread", "thread"),
+            (fast, True, "forked_ckpting_fork", "fork"),
+        ]
+        for codec, forked, label, backend in strategies:
+            if not has_codec(codec):
+                continue  # optional codec not installed
+            if backend == "fork" and not hasattr(os, "fork"):
+                continue
             with tempfile.TemporaryDirectory() as d:
                 blocking, total, written, migrated = _bench_strategy(
-                    d, state, codec, forked
+                    d, state, codec, forked, backend
                 )
             if label == "naive":
                 naive_blocking = blocking

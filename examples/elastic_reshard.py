@@ -15,7 +15,9 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_mesh, use_mesh
 
 from repro.checkpoint import ChunkStore
 from repro.core import ForkedCheckpointer, RestoreManager
@@ -39,8 +41,8 @@ batch = {
 }
 
 # ---- phase 1: train 3 steps on mesh A = (data=4, model=2), checkpoint ----
-mesh_a = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
-with jax.sharding.set_mesh(mesh_a):
+mesh_a = make_mesh((4, 2), ("data", "model"))
+with use_mesh(mesh_a):
     rules_a = ShardingRules(cfg=cfg, mesh=mesh_a)
     step_a, sh_a, _ = make_train_step(model, rules_a, opt, donate=False)
     params = model.init(jax.random.key(0))
@@ -56,8 +58,8 @@ with jax.sharding.set_mesh(mesh_a):
     ck.close()
 
 # ---- phase 2: restore onto mesh B = (data=8,) and continue ----
-mesh_b = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
-with jax.sharding.set_mesh(mesh_b):
+mesh_b = make_mesh((8,), ("data",))
+with use_mesh(mesh_b):
     rules_b = ShardingRules(cfg=cfg, mesh=mesh_b)
     step_b, sh_b, _ = make_train_step(model, rules_b, opt, donate=False)
     flat_sh, _ = flatten_with_paths({"device": sh_b})

@@ -1,7 +1,12 @@
 """Quickstart: train a tiny LM with CRUM fault tolerance in ~40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Persistence runs on the ``fork`` backend where the OS supports it (the
+paper's copy-on-write child), falling back to the in-process writer pool.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,11 +34,13 @@ def train_step(dstate, batch):
     return {"params": p, "opt": o, "step": dstate["step"] + 1}, {"loss": loss}
 
 
+backend = "fork" if hasattr(os, "fork") else "thread"
 trainer = CheckpointedTrainer(
     train_step,
     store_root="/tmp/quickstart-ckpt",
     policy=CheckpointPolicy(interval_steps=10, keep_last=2),
     chunk_bytes=1 << 20,
+    backend=backend,
 )
 
 
@@ -55,6 +62,6 @@ state = trainer.run(state, data, num_steps=30, start_step=start,
                     on_metrics=lambda s, m: s % 10 == 0 and print(
                         f"step {s}: loss={float(m['loss']):.3f}"))
 for r in trainer.finish():
-    print(f"checkpoint@{r.step}: blocked {r.blocking_s*1e3:.1f}ms, "
+    print(f"checkpoint@{r.step} [{backend}]: blocked {r.blocking_s*1e3:.1f}ms, "
           f"persisted {r.persist_s*1e3:.1f}ms in background "
           f"({r.chunks_reused} chunks reused)")

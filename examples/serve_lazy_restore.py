@@ -27,7 +27,7 @@ model = build(cfg)
 params = model.init(jax.random.key(0))
 
 with tempfile.TemporaryDirectory() as d:
-    ck = ForkedCheckpointer(ChunkStore(d), codec="zstd1", chunk_bytes=4 << 20)
+    ck = ForkedCheckpointer(ChunkStore(d), chunk_bytes=4 << 20)
     ck.save_async(1, {"params": params}).wait()
     ck.close()
     rm = RestoreManager(ChunkStore(d))

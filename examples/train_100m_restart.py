@@ -44,7 +44,7 @@ def train_step(d, batch):
 trainer = CheckpointedTrainer(
     train_step, store_root=CKPT,
     policy=CheckpointPolicy(interval_steps=25, keep_last=2),
-    codec="zstd1", chunk_bytes=8 << 20,
+    chunk_bytes=8 << 20,
 )
 
 def init_state():

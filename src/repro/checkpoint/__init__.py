@@ -1,4 +1,12 @@
-from repro.checkpoint.codecs import Codec, get_codec, list_codecs
+from repro.checkpoint.codecs import (
+    Codec,
+    DEFAULT_CODEC,
+    get_codec,
+    has_codec,
+    list_codecs,
+    register_codec,
+    unregister_codec,
+)
 from repro.checkpoint.chunking import (
     ChunkKey,
     chunk_digest_np,
@@ -25,8 +33,12 @@ from repro.checkpoint.sharded import (
 
 __all__ = [
     "Codec",
+    "DEFAULT_CODEC",
     "get_codec",
+    "has_codec",
     "list_codecs",
+    "register_codec",
+    "unregister_codec",
     "ChunkKey",
     "chunk_digest_np",
     "iter_chunks",

@@ -8,11 +8,18 @@ Reproduces the paper's Table 2/3 strategy axis:
                  pool (paper: "parallel gzip ... as many threads as cores").
   - ``zstd1``  — zstandard level 1: the LZ4-class fast codec available in
                  this environment (paper uses LZ4; zstd-1 occupies the same
-                 design point: ~GB/s compression, modest ratio).
-  - ``zstd9``  — high-ratio point for the ratio/CPU trade-off curve.
+                 design point: ~GB/s compression, modest ratio). Optional:
+                 registered only when the ``zstandard`` package is installed.
+  - ``zstd9``  — high-ratio point for the ratio/CPU trade-off curve
+                 (optional, same dependency).
 
 All codecs release the GIL inside compress/decompress, which is what makes
 the forked-checkpointing writer pool overlap with the train loop.
+
+``zstandard`` is an *optional* dependency (the ``[zstd]`` extra): when it is
+absent the zstd codecs are simply not registered, and asking for one raises
+an error naming the missing package instead of breaking import of this
+module (and with it every consumer of the checkpoint substrate).
 """
 from __future__ import annotations
 
@@ -23,7 +30,10 @@ import zlib
 from dataclasses import dataclass
 from typing import Callable
 
-import zstandard
+try:
+    import zstandard
+except ImportError:  # optional dependency — zstd codecs not registered
+    zstandard = None
 
 
 @dataclass(frozen=True)
@@ -90,20 +100,53 @@ def _pgzip_decompress(data: bytes) -> bytes:
     return b"".join(out)
 
 
+DEFAULT_CODEC = "pgzip"  # fastest codec with no optional dependency
+
 _CODECS: dict[str, Codec] = {
     "none": Codec("none", lambda b: b, lambda b: b),
     "gzip": Codec("gzip", lambda b: zlib.compress(b, 1), zlib.decompress),
     "pgzip": Codec("pgzip", _pgzip_compress, _pgzip_decompress),
-    "zstd1": Codec("zstd1", _zstd_c(1), _zstd_d),
-    "zstd9": Codec("zstd9", _zstd_c(9), _zstd_d),
 }
+
+# codec name -> (pip package, extra) for codecs whose dependency is missing
+_MISSING: dict[str, tuple[str, str]] = {}
+
+if zstandard is not None:
+    _CODECS["zstd1"] = Codec("zstd1", _zstd_c(1), _zstd_d)
+    _CODECS["zstd9"] = Codec("zstd9", _zstd_c(9), _zstd_d)
+else:
+    _MISSING["zstd1"] = ("zstandard", "zstd")
+    _MISSING["zstd9"] = ("zstandard", "zstd")
+
+
+def register_codec(codec: Codec, *, replace: bool = False) -> None:
+    """Register a codec under ``codec.name`` (plugin point; used by tests)."""
+    if codec.name in _CODECS and not replace:
+        raise ValueError(f"codec {codec.name!r} already registered")
+    _CODECS[codec.name] = codec
+
+
+def unregister_codec(name: str) -> None:
+    """Remove a codec registered via :func:`register_codec`."""
+    _CODECS.pop(name, None)
 
 
 def get_codec(name: str) -> Codec:
     try:
         return _CODECS[name]
     except KeyError:
+        if name in _MISSING:
+            pkg, extra = _MISSING[name]
+            raise ModuleNotFoundError(
+                f"codec {name!r} requires the optional dependency {pkg!r} "
+                f"which is not installed (pip install {pkg!r}, or the "
+                f"[{extra}] extra of this package)"
+            ) from None
         raise KeyError(f"unknown codec {name!r}; have {sorted(_CODECS)}") from None
+
+
+def has_codec(name: str) -> bool:
+    return name in _CODECS
 
 
 def list_codecs() -> list[str]:

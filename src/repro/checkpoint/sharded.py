@@ -18,6 +18,7 @@ import numpy as np
 
 import ml_dtypes  # noqa: F401  (registers bfloat16 & friends with numpy)
 
+from repro.checkpoint.codecs import DEFAULT_CODEC
 from repro.checkpoint.chunking import (
     DEFAULT_CHUNK_BYTES,
     chunk_digest_np,
@@ -85,7 +86,7 @@ def save_pytree(
     store: ChunkStore,
     step: int,
     *,
-    codec: str = "zstd1",
+    codec: str = DEFAULT_CODEC,
     chunk_bytes: int = DEFAULT_CHUNK_BYTES,
     host: int = 0,
     prev_manifest: Manifest | None = None,

@@ -33,17 +33,32 @@ class ChunkStore:
 
     # -- write path ---------------------------------------------------------
     class Writer:
-        """Sequential appender for one host's payload file."""
+        """Sequential appender for one host's payload file.
 
-        def __init__(self, store: "ChunkStore", step: int, host: int):
+        With ``lazy=True`` construction records only the target path and the
+        file descriptor is opened on first ``append``. This is the child-safe
+        handoff for the fork persist backend: the parent builds the Writer
+        (cheap, no fd) before ``os.fork()`` and only the child ever opens the
+        file, so parent and child never share an fd offset.
+        """
+
+        def __init__(self, store: "ChunkStore", step: int, host: int,
+                     *, lazy: bool = False):
             self.relpath = host_data_file(step, host)
-            abspath = os.path.join(store.root, self.relpath)
-            os.makedirs(os.path.dirname(abspath), exist_ok=True)
-            self._f = open(abspath, "wb")
+            self._abspath = os.path.join(store.root, self.relpath)
+            self._f = None
             self._off = 0
+            if not lazy:
+                self._open()
+
+        def _open(self) -> None:
+            os.makedirs(os.path.dirname(self._abspath), exist_ok=True)
+            self._f = open(self._abspath, "wb")
 
         def append(self, raw: bytes, codec_name: str, *, index: int,
                    digest: int) -> ChunkRecord:
+            if self._f is None:
+                self._open()
             comp = get_codec(codec_name).compress(raw)
             rec = ChunkRecord(
                 index=index, raw_len=len(raw), digest=digest,
@@ -55,13 +70,17 @@ class ChunkStore:
             return rec
 
         def close(self, *, fsync: bool = True) -> None:
+            if self._f is None:  # lazy writer that never wrote
+                return
             self._f.flush()
             if fsync:
                 os.fsync(self._f.fileno())
             self._f.close()
+            self._f = None
 
-    def writer(self, step: int, host: int = 0) -> "ChunkStore.Writer":
-        return ChunkStore.Writer(self, step, host)
+    def writer(self, step: int, host: int = 0, *, lazy: bool = False
+               ) -> "ChunkStore.Writer":
+        return ChunkStore.Writer(self, step, host, lazy=lazy)
 
     # -- read path ------------------------------------------------------------
     def read_chunk(self, rec: ChunkRecord) -> bytes:

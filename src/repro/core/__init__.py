@@ -1,6 +1,15 @@
 """CRUM core — the paper's contribution, adapted to TPU/JAX (see DESIGN.md)."""
 from repro.core.shadow import ShadowStateManager, ChunkState, SyncStats
-from repro.core.forked import ForkedCheckpointer, CheckpointResult
+from repro.core.forked import (
+    CheckpointResult,
+    ForkedCheckpointer,
+    ForkPersistBackend,
+    PersistBackend,
+    PersistJob,
+    ThreadPersistBackend,
+    list_persist_backends,
+    register_persist_backend,
+)
 from repro.core.restore import RestoreManager, LazyLeaves
 from repro.core.drain import drain
 from repro.core.policy import CheckpointPolicy, referenced_steps
@@ -10,6 +19,9 @@ from repro.core.trainer import CheckpointedTrainer
 __all__ = [
     "ShadowStateManager", "ChunkState", "SyncStats",
     "ForkedCheckpointer", "CheckpointResult",
+    "PersistBackend", "PersistJob",
+    "ThreadPersistBackend", "ForkPersistBackend",
+    "list_persist_backends", "register_persist_backend",
     "RestoreManager", "LazyLeaves", "drain",
     "CheckpointPolicy", "referenced_steps",
     "HeartbeatMonitor", "StragglerPolicy", "PreemptionHandler",

@@ -6,15 +6,31 @@ CRUM's two phases, TPU-native:
            (a) flushing the async dispatch queue (drain), and
            (b) syncing the shadow snapshot (digest-gated device->host
                transfer of dirty chunks only).
-  phase 2  "forked child writes": a writer pool compresses and persists the
-           immutable snapshot to stable storage *while training continues*.
+  phase 2  "forked child writes": the persist backend compresses and writes
+           the immutable snapshot to stable storage *while training
+           continues*.
 
-The paper forks a child to get a COW view of the image; here the snapshot
-buffers are plain host memory that the train loop never touches, so
-immutability is structural. Double buffering (two ShadowStateManagers)
-lets checkpoint N+1's phase 1 begin while checkpoint N's phase 2 is still
-writing — at most ``max_pending`` images are in flight, after which phase 1
-blocks (the paper's implicit "one forked child at a time").
+Phase 2 is pluggable (``backend=``):
+
+  ``thread``  a writer-pool thread persists the snapshot. The snapshot
+              buffers are plain host memory the train loop never touches, so
+              immutability is structural — but compression shares the
+              parent's GIL and memory bandwidth, so a heavy persist can
+              still steal cycles from the train loop.
+  ``fork``    the paper's actual mechanism: ``os.fork()`` a child per
+              checkpoint. Shadow buffers live in anonymous MAP_SHARED mmap
+              segments (see ShadowStateManager), so the child sees the
+              snapshot at zero copy cost; it compresses, writes chunks to
+              the ChunkStore, commits the manifest, and streams
+              CheckpointResult fields (bytes written, chunks reused, errors)
+              back over a pipe. A supervisor thread per child reaps it and
+              converts a non-zero exit into ``CheckpointResult.error``.
+              ``max_pending`` bounds *live children* — the paper's
+              one-forked-child-at-a-time discipline at N=1.
+
+Double buffering (max_pending+1 ShadowStateManagers) lets checkpoint N+1's
+phase 1 begin while checkpoint N's phase 2 is still writing — after which
+phase 1 blocks.
 
 Blocking time (what the application observes) is accounted separately from
 total persist time: the 40x headline of Table 2 is precisely
@@ -24,14 +40,18 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import os
+import pickle
+import struct
 import threading
+import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, BinaryIO, Callable
 
-import jax
 import numpy as np
 
 from repro.checkpoint.chunking import DEFAULT_CHUNK_BYTES, chunk_digest_np, iter_chunks
+from repro.checkpoint.codecs import DEFAULT_CODEC
 from repro.checkpoint.manifest import (
     LeafRecord,
     Manifest,
@@ -66,12 +86,412 @@ class CheckpointResult:
         return self
 
 
+@dataclass
+class PersistJob:
+    """Everything phase 2 needs, captured at the end of phase 1."""
+
+    result: CheckpointResult
+    buf_index: int
+    shadow: ShadowStateManager
+    snapshot: dict[tuple[str, int], dict]
+    skeleton: Any
+    shapes_dtypes: dict[str, tuple[list, str]]
+    prev: Manifest | None
+    meta: dict
+
+
+def _persist_image(
+    store: ChunkStore,
+    *,
+    step: int,
+    host: int,
+    codec: str,
+    chunk_bytes: int,
+    fsync: bool,
+    snapshot: dict[tuple[str, int], dict],
+    skeleton: Any,
+    shapes_dtypes: dict,
+    prev: Manifest | None,
+    meta: dict,
+    counters: CheckpointResult,
+    writer: "ChunkStore.Writer | None" = None,
+    progress: Callable[[], None] | None = None,
+) -> tuple[Manifest, dict[tuple[str, int], list[int]]]:
+    """Compress + write one snapshot and commit its manifest.
+
+    Backend-agnostic phase 2: runs on a writer-pool thread (thread backend)
+    or inside a forked child (fork backend). Mutates ``counters``
+    (chunks/bytes written, chunks reused) as it goes and returns the
+    committed manifest plus the per-stream chunk digests for shadow
+    backfill. ``progress`` (if given) is called after each leaf so callers
+    can stream counters while the image is still being written.
+    """
+    prev_map: dict[tuple, Any] = {}
+    if prev is not None:
+        for path, lv in prev.leaves.items():
+            for s in lv.shards:
+                for c in s.chunks:
+                    prev_map[(path, tuple(s.start), tuple(s.stop), c.index)] = c
+
+    manifest = Manifest(step=step, skeleton=skeleton, meta=dict(meta))
+    digests_out: dict[tuple[str, int], list[int]] = {}
+    if writer is None:
+        writer = store.writer(step, host)
+    try:
+        by_path: dict[str, list] = {}
+        for (path, ordinal), shard in sorted(snapshot.items()):
+            shard = dict(shard)
+            shard["ordinal"] = ordinal
+            by_path.setdefault(path, []).append(shard)
+        for path, (shape, dtype) in shapes_dtypes.items():
+            lrec = LeafRecord(path=path, shape=shape, dtype=dtype)
+            for shard in by_path.get(path, []):
+                srec = ShardRecord(start=shard["start"], stop=shard["stop"])
+                shard_digests: list[int] = []
+                for key, raw in iter_chunks(path, shard["data"], chunk_bytes):
+                    digest = chunk_digest_np(raw)
+                    shard_digests.append(digest)
+                    old = prev_map.get(
+                        (path, tuple(srec.start), tuple(srec.stop), key.index)
+                    )
+                    if (
+                        old is not None
+                        and old.digest == digest
+                        and old.raw_len == len(raw)
+                    ):
+                        srec.chunks.append(old)
+                        counters.chunks_reused += 1
+                    else:
+                        rec = writer.append(
+                            raw, codec, index=key.index, digest=digest
+                        )
+                        srec.chunks.append(rec)
+                        counters.chunks_written += 1
+                        counters.bytes_written += rec.comp_len
+                lrec.shards.append(srec)
+                digests_out[(path, shard["ordinal"])] = shard_digests
+            manifest.leaves[path] = lrec
+            if progress is not None:
+                progress()
+    finally:
+        writer.close(fsync=fsync)
+    manifest.meta.update(
+        chunks_written=counters.chunks_written,
+        chunks_reused=counters.chunks_reused,
+    )
+    commit_manifest(store.root, manifest)
+    return manifest, digests_out
+
+
+# --------------------------------------------------------------------------
+# Persist backends (phase 2 strategies)
+# --------------------------------------------------------------------------
+
+class PersistBackend:
+    """Phase-2 strategy: how a finished snapshot reaches stable storage."""
+
+    name: str = "?"
+    # True: the backend reads snapshots from another process, so shadow
+    # buffers must live in MAP_SHARED mmap segments that survive os.fork()
+    # without COW page duplication (any forking plugin backend wants this)
+    wants_shared_buffers: bool = False
+
+    def __init__(self, checkpointer: "ForkedCheckpointer"):
+        self.ck = checkpointer
+
+    def submit(self, job: PersistJob) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Wait for in-flight persists and release backend resources."""
+
+
+class ThreadPersistBackend(PersistBackend):
+    """Writer-pool threads in-process (the pre-fork emulation).
+
+    Codecs release the GIL inside compress, so phase 2 overlaps the train
+    loop — but it still shares the parent's scheduler and memory bandwidth.
+    """
+
+    name = "thread"
+
+    def __init__(self, checkpointer: "ForkedCheckpointer"):
+        super().__init__(checkpointer)
+        workers = checkpointer.io_workers or min(8, (os.cpu_count() or 2))
+        self._pool = cf.ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="crum-writer"
+        )
+
+    def submit(self, job: PersistJob) -> None:
+        self._pool.submit(self._run, job)
+
+    def _run(self, job: PersistJob) -> None:
+        ck, result = self.ck, job.result
+        t0 = time.perf_counter()
+        try:
+            manifest, digests = _persist_image(
+                ck.store,
+                step=result.step,
+                host=ck.host,
+                codec=ck.codec,
+                chunk_bytes=ck.chunk_bytes,
+                fsync=ck.fsync,
+                snapshot=job.snapshot,
+                skeleton=job.skeleton,
+                shapes_dtypes=job.shapes_dtypes,
+                prev=job.prev,
+                meta=job.meta,
+                counters=result,
+            )
+            for key, d in digests.items():
+                job.shadow.set_digests(key, d)
+            ck._note_manifest(manifest)
+        except Exception as e:  # surfaced at wait()
+            result.error = f"{type(e).__name__}: {e}"
+        finally:
+            result.persist_s = time.perf_counter() - t0
+            ck._finish_job(job)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+
+# ---- fork backend pipe protocol: u32-length-prefixed pickles --------------
+
+def _send_msg(f: BinaryIO, obj: Any) -> None:
+    data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    f.write(struct.pack("<I", len(data)))
+    f.write(data)
+    f.flush()
+
+
+def _recv_msg(f: BinaryIO) -> Any | None:
+    hdr = f.read(4)
+    if len(hdr) < 4:
+        return None  # EOF: child exited (or died) after its last message
+    (n,) = struct.unpack("<I", hdr)
+    data = f.read(n)
+    if len(data) < n:
+        return None  # truncated: child died mid-message
+    return pickle.loads(data)
+
+
+class ForkPersistBackend(PersistBackend):
+    """True copy-on-write persistence: one ``os.fork()`` child per image.
+
+    The paper's mechanism. The snapshot lives in MAP_SHARED mmap segments,
+    so the fork costs no copy and the parent's ongoing training never
+    triggers COW page duplication of the image. The child owns the whole
+    compress+write+commit path (its own GIL, its own scheduler slice) and
+    streams counters and the committed manifest back over a pipe; a
+    supervisor thread reaps it and surfaces any failure — including a raw
+    non-zero exit — as ``CheckpointResult.error``.
+    """
+
+    name = "fork"
+    wants_shared_buffers = True
+
+    def __init__(self, checkpointer: "ForkedCheckpointer"):
+        if not hasattr(os, "fork"):
+            raise RuntimeError(
+                "persist backend 'fork' requires os.fork (POSIX); "
+                "use backend='thread' on this platform"
+            )
+        super().__init__(checkpointer)
+        self._cond = threading.Condition()
+        self._live: dict[int, threading.Thread] = {}  # pid -> supervisor
+        self._closed = False
+
+    def submit(self, job: PersistJob) -> None:
+        ck = self.ck
+        # One continuous hold of _cond covers gate-check, pipe, fork and
+        # registration, so (a) two concurrent submits can't both pass an
+        # empty _live and overshoot max_pending — the paper's at-most-N
+        # live children discipline — and (b) no sibling fork can run while
+        # our write fd is open and leak it into an unrelated child, which
+        # would rob the supervisor of EOF if our child dies silently.
+        with self._cond:
+            while len(self._live) >= ck.max_pending:
+                self._cond.wait()
+            if self._closed:
+                raise RuntimeError("persist backend is closed")
+            # built pre-fork, opened post-fork: child-safe writer handoff
+            writer = ck.store.writer(job.result.step, ck.host, lazy=True)
+            rfd, wfd = os.pipe()
+            with warnings.catch_warnings():
+                # jax warns that fork + its internal threads can deadlock;
+                # the child never calls back into jax/XLA — it only
+                # compresses host memory and writes files — so none of
+                # those locks are taken.
+                warnings.filterwarnings(
+                    "ignore", message="os.fork", category=RuntimeWarning
+                )
+                pid = os.fork()
+            if pid == 0:  # ---- child: persist and report, then _exit ------
+                code = 0
+                try:
+                    os.close(rfd)
+                    self._child_main(job, writer, wfd)
+                except BaseException:
+                    code = 1
+                finally:
+                    os._exit(code)
+            # ---- parent ----------------------------------------------------
+            os.close(wfd)
+            t = threading.Thread(
+                target=self._supervise, args=(pid, rfd, job),
+                name=f"crum-fork-supervisor-{job.result.step}", daemon=True,
+            )
+            self._live[pid] = t
+        t.start()
+
+    def _child_main(self, job: PersistJob, writer, wfd: int) -> None:
+        ck = self.ck
+        counters = job.result  # the child's private copy of the result
+        out = os.fdopen(wfd, "wb")
+        t0 = time.perf_counter()
+        err: str | None = None
+        manifest = digests = None
+
+        def stream_counters() -> None:
+            _send_msg(out, {
+                "kind": "progress",
+                "chunks_written": counters.chunks_written,
+                "chunks_reused": counters.chunks_reused,
+                "bytes_written": counters.bytes_written,
+            })
+
+        try:
+            manifest, digests = _persist_image(
+                ck.store,
+                step=counters.step,
+                host=ck.host,
+                codec=ck.codec,
+                chunk_bytes=ck.chunk_bytes,
+                fsync=ck.fsync,
+                snapshot=job.snapshot,
+                skeleton=job.skeleton,
+                shapes_dtypes=job.shapes_dtypes,
+                prev=job.prev,
+                meta=job.meta,
+                counters=counters,
+                writer=writer,
+                progress=stream_counters,
+            )
+        except Exception as e:
+            err = f"{type(e).__name__}: {e}"
+        final: dict[str, Any] = {
+            "kind": "final",
+            "error": err,
+            "persist_s": time.perf_counter() - t0,
+            "chunks_written": counters.chunks_written,
+            "chunks_reused": counters.chunks_reused,
+            "bytes_written": counters.bytes_written,
+        }
+        if err is None:
+            final["manifest"] = manifest.to_bytes()
+            final["digests"] = digests
+        _send_msg(out, final)
+        out.close()
+
+    def _supervise(self, pid: int, rfd: int, job: PersistJob) -> None:
+        ck, result = self.ck, job.result
+        t0 = time.perf_counter()
+        final: dict | None = None
+        try:
+            with os.fdopen(rfd, "rb") as pipe:
+                while True:
+                    msg = _recv_msg(pipe)
+                    if msg is None:
+                        break
+                    if msg["kind"] == "progress":
+                        result.chunks_written = msg["chunks_written"]
+                        result.chunks_reused = msg["chunks_reused"]
+                        result.bytes_written = msg["bytes_written"]
+                    elif msg["kind"] == "final":
+                        final = msg
+        except Exception as e:
+            result.error = f"persist pipe error: {type(e).__name__}: {e}"
+        _, status = os.waitpid(pid, 0)
+        exit_code = os.waitstatus_to_exitcode(status)
+        try:
+            if final is not None:
+                result.chunks_written = final["chunks_written"]
+                result.chunks_reused = final["chunks_reused"]
+                result.bytes_written = final["bytes_written"]
+                result.persist_s = final["persist_s"]
+                if final["error"]:
+                    result.error = final["error"]
+                else:
+                    for key, d in final["digests"].items():
+                        job.shadow.set_digests(key, d)
+                    ck._note_manifest(Manifest.from_bytes(final["manifest"]))
+            if result.error is None and final is None:
+                result.error = (
+                    f"persist child (pid {pid}) died before reporting "
+                    f"(exit code {exit_code})"
+                )
+            elif result.error is None and exit_code != 0:
+                result.error = (
+                    f"persist child (pid {pid}) exited with code {exit_code}"
+                )
+        finally:
+            if result.persist_s == 0.0:
+                result.persist_s = time.perf_counter() - t0
+            with self._cond:
+                self._live.pop(pid, None)
+                self._cond.notify_all()
+            ck._finish_job(job)
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            threads = list(self._live.values())
+        for t in threads:
+            t.join()
+
+
+_PERSIST_BACKENDS: dict[str, Callable[["ForkedCheckpointer"], PersistBackend]] = {
+    ThreadPersistBackend.name: ThreadPersistBackend,
+    ForkPersistBackend.name: ForkPersistBackend,
+}
+
+
+def register_persist_backend(
+    name: str, factory: Callable[["ForkedCheckpointer"], PersistBackend],
+    *, replace: bool = False,
+) -> None:
+    """Plugin point: later scaling work (multi-host persist, remote object
+    stores, incremental GC offload) registers here."""
+    if name in _PERSIST_BACKENDS and not replace:
+        raise ValueError(f"persist backend {name!r} already registered")
+    _PERSIST_BACKENDS[name] = factory
+
+
+def list_persist_backends() -> list[str]:
+    return sorted(_PERSIST_BACKENDS)
+
+
+def make_persist_backend(name: str, checkpointer: "ForkedCheckpointer") -> PersistBackend:
+    try:
+        factory = _PERSIST_BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown persist backend {name!r}; have {sorted(_PERSIST_BACKENDS)}"
+        ) from None
+    return factory(checkpointer)
+
+
+# --------------------------------------------------------------------------
+# The checkpointer
+# --------------------------------------------------------------------------
+
 class ForkedCheckpointer:
     def __init__(
         self,
         store: ChunkStore,
         *,
-        codec: str = "zstd1",
+        codec: str = DEFAULT_CODEC,
         chunk_bytes: int = DEFAULT_CHUNK_BYTES,
         io_workers: int | None = None,
         max_pending: int = 1,
@@ -79,6 +499,7 @@ class ForkedCheckpointer:
         digest_on_device: bool = True,
         host: int = 0,
         fsync: bool = False,
+        backend: str = "thread",
         timings: Timings | None = None,
     ):
         self.store = store
@@ -87,34 +508,36 @@ class ForkedCheckpointer:
         self.incremental = incremental
         self.host = host
         self.fsync = fsync
+        self.io_workers = io_workers
+        self.max_pending = max(1, int(max_pending))
         self.timings = timings or Timings()
-        workers = io_workers or min(8, (os.cpu_count() or 2))
-        self._pool = cf.ThreadPoolExecutor(
-            max_workers=workers, thread_name_prefix="crum-writer"
-        )
+        self._pending: list[CheckpointResult] = []
+        self._prev_manifest: Manifest | None = None
+        self._lock = threading.Lock()
+        self.backend = make_persist_backend(backend, self)
         self._buffers = [
             ShadowStateManager(
                 chunk_bytes=chunk_bytes,
                 digest_on_device=digest_on_device,
                 defer_first_digests=True,  # persist backfills via set_digests
+                shared_buffers=self.backend.wants_shared_buffers,
                 timings=self.timings,
             )
-            for _ in range(max_pending + 1)
+            for _ in range(self.max_pending + 1)
         ]
-        self._buf_busy = [threading.Event() for _ in self._buffers]
-        self._pending: list[CheckpointResult] = []
-        self._prev_manifest: Manifest | None = None
-        self._lock = threading.Lock()
+        # one condition variable guards buffer ownership: acquisition is a
+        # claim-under-lock, not the old busy-event scan that let two waiters
+        # race for the buffer freed by the oldest pending checkpoint
+        self._buf_cond = threading.Condition()
+        self._buf_busy = [False] * len(self._buffers)
 
     # -- the checkpoint entry point ------------------------------------------
     def save_async(
         self, step: int, state: Any, *, meta: dict | None = None
     ) -> CheckpointResult:
-        """Phase 1 inline (blocking, fast); phase 2 on the writer pool."""
+        """Phase 1 inline (blocking, fast); phase 2 on the persist backend."""
         result = CheckpointResult(step=step, blocking_s=0.0)
         with self.timings.measure("ckpt/blocking") as _:
-            import time
-
             t0 = time.perf_counter()
             # pick a free snapshot buffer (waits if all are persisting)
             buf_i = self._acquire_buffer()
@@ -134,112 +557,61 @@ class ForkedCheckpointer:
             result.bytes_snapshot = stats.bytes_fetched
             result.blocking_s = time.perf_counter() - t0
 
-        snapshot = shadow.snapshot()
-        prev = self._prev_manifest if self.incremental else None
-        self._pool.submit(
-            self._persist, result, buf_i, shadow, snapshot, skeleton,
-            shapes_dtypes, prev, meta or {},
+        job = PersistJob(
+            result=result,
+            buf_index=buf_i,
+            shadow=shadow,
+            snapshot=shadow.snapshot(),
+            skeleton=skeleton,
+            shapes_dtypes=shapes_dtypes,
+            prev=self._prev_manifest if self.incremental else None,
+            meta=meta or {},
         )
+        self._reap()
         with self._lock:
             self._pending.append(result)
+        try:
+            self.backend.submit(job)
+        except BaseException as e:
+            # never strand the claimed buffer or leave a result that can't
+            # complete (close()/wait_all() would hang on it)
+            result.error = f"persist submit failed: {type(e).__name__}: {e}"
+            self._release_buffer(buf_i)
+            result.done.set()
+            raise
         return result
 
+    # -- buffer ownership ------------------------------------------------------
     def _acquire_buffer(self) -> int:
-        while True:
-            for i, busy in enumerate(self._buf_busy):
-                if not busy.is_set():
-                    busy.set()
-                    return i
-            # all buffers persisting: wait for the oldest (bounded pipeline)
-            oldest = None
-            with self._lock:
-                if self._pending:
-                    oldest = self._pending[0]
-            if oldest is not None:
-                oldest.done.wait()
-            self._reap()
+        with self._buf_cond:
+            while True:
+                for i, busy in enumerate(self._buf_busy):
+                    if not busy:
+                        self._buf_busy[i] = True
+                        return i
+                # all buffers persisting: wait for a release (bounded pipeline)
+                self._buf_cond.wait()
+
+    def _release_buffer(self, i: int) -> None:
+        with self._buf_cond:
+            self._buf_busy[i] = False
+            self._buf_cond.notify_all()
 
     def _reap(self) -> None:
         with self._lock:
             self._pending = [r for r in self._pending if not r.done.is_set()]
 
-    # -- phase 2 ---------------------------------------------------------------
-    def _persist(
-        self,
-        result: CheckpointResult,
-        buf_i: int,
-        shadow: ShadowStateManager,
-        snapshot: dict,
-        skeleton: Any,
-        shapes_dtypes: dict,
-        prev: Manifest | None,
-        meta: dict,
-    ) -> None:
-        import time
+    # -- backend callbacks -------------------------------------------------------
+    def _note_manifest(self, manifest: Manifest) -> None:
+        with self._lock:
+            if self._prev_manifest is None or manifest.step >= self._prev_manifest.step:
+                self._prev_manifest = manifest
 
-        t0 = time.perf_counter()
-        try:
-            prev_map: dict[tuple, Any] = {}
-            if prev is not None:
-                for path, lv in prev.leaves.items():
-                    for s in lv.shards:
-                        for c in s.chunks:
-                            prev_map[(path, tuple(s.start), tuple(s.stop), c.index)] = c
-
-            manifest = Manifest(step=result.step, skeleton=skeleton, meta=meta)
-            writer = self.store.writer(result.step, self.host)
-            try:
-                by_path: dict[str, list] = {}
-                for (path, ordinal), shard in sorted(snapshot.items()):
-                    shard = dict(shard)
-                    shard["ordinal"] = ordinal
-                    by_path.setdefault(path, []).append(shard)
-                for path, (shape, dtype) in shapes_dtypes.items():
-                    lrec = LeafRecord(path=path, shape=shape, dtype=dtype)
-                    for shard in by_path.get(path, []):
-                        srec = ShardRecord(start=shard["start"], stop=shard["stop"])
-                        shard_digests: list[int] = []
-                        for key, raw in iter_chunks(path, shard["data"], self.chunk_bytes):
-                            digest = chunk_digest_np(raw)
-                            shard_digests.append(digest)
-                            old = prev_map.get(
-                                (path, tuple(srec.start), tuple(srec.stop), key.index)
-                            )
-                            if (
-                                old is not None
-                                and old.digest == digest
-                                and old.raw_len == len(raw)
-                            ):
-                                srec.chunks.append(old)
-                                result.chunks_reused += 1
-                            else:
-                                rec = writer.append(
-                                    raw, self.codec, index=key.index, digest=digest
-                                )
-                                srec.chunks.append(rec)
-                                result.chunks_written += 1
-                                result.bytes_written += rec.comp_len
-                        lrec.shards.append(srec)
-                        # backfill shadow digests (phase 1 skipped them)
-                        shadow.set_digests((path, shard["ordinal"]), shard_digests)
-                    manifest.leaves[path] = lrec
-            finally:
-                writer.close(fsync=self.fsync)
-            manifest.meta.update(
-                chunks_written=result.chunks_written,
-                chunks_reused=result.chunks_reused,
-            )
-            commit_manifest(self.store.root, manifest)
-            with self._lock:
-                if self._prev_manifest is None or result.step >= self._prev_manifest.step:
-                    self._prev_manifest = manifest
-        except Exception as e:  # surfaced at wait()
-            result.error = f"{type(e).__name__}: {e}"
-        finally:
-            result.persist_s = time.perf_counter() - t0
-            self.timings.add("ckpt/persist", result.persist_s)
-            self._buf_busy[buf_i].clear()
-            result.done.set()
+    def _finish_job(self, job: PersistJob) -> None:
+        """Common phase-2 epilogue: timing, buffer release, completion."""
+        self.timings.add("ckpt/persist", job.result.persist_s)
+        self._release_buffer(job.buf_index)
+        job.result.done.set()
 
     # -- lifecycle ---------------------------------------------------------------
     def wait_all(self, timeout: float | None = None) -> list[CheckpointResult]:
@@ -253,8 +625,13 @@ class ForkedCheckpointer:
             return len(self._pending)
 
     def close(self) -> None:
-        self.wait_all()
-        self._pool.shutdown(wait=True)
+        """Drain in-flight persists (without raising on failed ones) and
+        release backend resources."""
+        with self._lock:
+            pending = list(self._pending)
+        for r in pending:
+            r.done.wait()
+        self.backend.close()
 
     # -- synchronous baseline (the paper's "naive" strategy) -----------------------
     def save_sync(self, step: int, state: Any, *, meta: dict | None = None) -> CheckpointResult:

@@ -23,6 +23,7 @@ same economy CRUM gets from not faulting untouched pages.
 from __future__ import annotations
 
 import enum
+import mmap
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -108,6 +109,7 @@ class ShadowStateManager:
         chunk_bytes: int = DEFAULT_CHUNK_BYTES,
         digest_on_device: bool = True,
         defer_first_digests: bool = False,
+        shared_buffers: bool = False,
         timings: Timings | None = None,
     ):
         self.chunk_bytes = int(chunk_bytes)
@@ -115,15 +117,32 @@ class ShadowStateManager:
         # True: first sync skips the digest pass (a persist phase will
         # backfill via set_digests) — used by ForkedCheckpointer
         self.defer_first_digests = defer_first_digests
+        # True: shadow buffers live in anonymous MAP_SHARED mmap segments.
+        # Across an os.fork() the pages are *shared*, not COW-duplicated, so
+        # a persist child reads the snapshot at zero copy cost and the
+        # parent's later writes to *other* buffers never trigger page
+        # copies — the paper's fork-and-persist economics. The caller must
+        # not mutate a buffer while a child is persisting it (the forked
+        # checkpointer's busy-buffer discipline guarantees this).
+        self.shared_buffers = shared_buffers
         self.timings = timings or Timings()
         self._streams: dict[tuple[str, int], _ShardStream] = {}
+        self._mmaps: list[mmap.mmap] = []
         self._registered = False
+
+    def _alloc_buffer(self, nbytes: int) -> np.ndarray:
+        if self.shared_buffers and nbytes > 0:
+            mm = mmap.mmap(-1, nbytes)  # anonymous + MAP_SHARED on POSIX
+            self._mmaps.append(mm)
+            return np.frombuffer(mm, dtype=np.uint8, count=nbytes)
+        return np.empty(nbytes, np.uint8)
 
     # -- registration ---------------------------------------------------------
     def register(self, state: Any) -> None:
         """Learn the chunk layout of ``state``; all chunks start DEVICE_DIRTY."""
         flat, _ = flatten_with_paths(state)
         self._streams.clear()
+        self._mmaps = []  # old segments die with their buffer arrays
         for path, leaf in flat.items():
             for ordinal, start, stop, data in _owned_host_shards(leaf):
                 nbytes = int(np.asarray(data).nbytes) if not isinstance(
@@ -186,7 +205,7 @@ class ShadowStateManager:
             # first sync: everything must move regardless — bulk copy; the
             # digest pass is skipped when a persist phase will backfill it
             with self.timings.measure("shadow/fetch"):
-                stream.buffer = np.empty(stream.nbytes, np.uint8)
+                stream.buffer = self._alloc_buffer(stream.nbytes)
                 host = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
                 np.copyto(stream.buffer, host)
                 stream.states = [ChunkState.CLEAN] * stream.n_chunks
@@ -221,7 +240,7 @@ class ShadowStateManager:
 
         with self.timings.measure("shadow/fetch"):
             if stream.buffer is None:
-                stream.buffer = np.empty(stream.nbytes, np.uint8)
+                stream.buffer = self._alloc_buffer(stream.nbytes)
             cb = self.chunk_bytes
             if len(changed) == stream.n_chunks:
                 # everything dirty (first sync / full update): one bulk copy

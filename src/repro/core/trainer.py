@@ -22,6 +22,7 @@ from typing import Any, Callable, Iterator
 import jax
 import numpy as np
 
+from repro.checkpoint.codecs import DEFAULT_CODEC
 from repro.checkpoint.store import ChunkStore
 from repro.core.forked import CheckpointResult, ForkedCheckpointer
 from repro.core.policy import CheckpointPolicy
@@ -36,11 +37,12 @@ class CheckpointedTrainer:
         *,
         store_root: str,
         policy: CheckpointPolicy | None = None,
-        codec: str = "zstd1",
+        codec: str = DEFAULT_CODEC,
         chunk_bytes: int = 4 << 20,
         incremental: bool = True,
         io_workers: int | None = None,
         host: int = 0,
+        backend: str = "thread",
         timings: Timings | None = None,
     ):
         self.train_step = train_step
@@ -54,6 +56,7 @@ class CheckpointedTrainer:
             incremental=incremental,
             io_workers=io_workers,
             host=host,
+            backend=backend,
             timings=self.timings,
         )
         self.restorer = RestoreManager(self.store, timings=self.timings)

@@ -20,7 +20,7 @@ import numpy as np
 from repro.configs import get_config, list_archs
 from repro.core import RestoreManager
 from repro.checkpoint import ChunkStore
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.models import build
 from repro.utils.tree import flatten_with_paths
 
@@ -40,7 +40,7 @@ def main(argv=None) -> int:
     model = build(cfg)
     mesh = make_host_mesh((jax.device_count(),), ("data",))
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         t0 = time.perf_counter()
         if args.ckpt_dir:
             rm = RestoreManager(ChunkStore(args.ckpt_dir))

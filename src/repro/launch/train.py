@@ -17,10 +17,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import DEFAULT_CODEC
 from repro.configs import get_config, list_archs
-from repro.core import CheckpointedTrainer, CheckpointPolicy, PreemptionHandler
+from repro.core import (
+    CheckpointedTrainer,
+    CheckpointPolicy,
+    PreemptionHandler,
+    list_persist_backends,
+)
 from repro.data import SyntheticBatches
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh, use_mesh
 from repro.models import build
 from repro.optim import get_optimizer, warmup_cosine
 from repro.runtime.sharding import ShardingRules
@@ -38,7 +44,11 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro-ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
-    ap.add_argument("--codec", default="zstd1")
+    ap.add_argument("--codec", default=DEFAULT_CODEC)
+    ap.add_argument(
+        "--backend", choices=list_persist_backends(), default="thread",
+        help="persist backend: 'fork' = paper's COW child, 'thread' = pool",
+    )
     ap.add_argument("--no-incremental", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
@@ -63,10 +73,11 @@ def main(argv=None) -> int:
         codec=args.codec,
         incremental=not args.no_incremental,
         chunk_bytes=1 << 20,
+        backend=args.backend,
     )
     preempt = PreemptionHandler(trainer.policy).install()
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         step_fn, state_shardings, batch_sh = make_train_step(
             model, rules, optimizer, donate=False
         )

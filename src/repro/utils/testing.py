@@ -1,0 +1,45 @@
+"""Optional-dependency shims for the test suite.
+
+``hypothesis`` is an optional dev dependency (the ``[test]`` extra). Test
+modules that mix property-based and plain tests import the decorators via
+
+    from repro.utils.testing import given, settings, st
+
+so that when hypothesis is absent only the property tests skip, instead of
+the whole module erroring at collection.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every attribute is a
+        callable returning None (the stubs are never executed)."""
+
+        def __getattr__(self, name: str):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        if args and callable(args[0]):  # used as a bare decorator
+            return args[0]
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            import pytest
+
+            def stub():
+                pytest.skip("hypothesis not installed (pip install .[test])")
+
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+
+        return deco

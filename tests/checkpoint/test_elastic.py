@@ -16,13 +16,14 @@ SCRIPT = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np, json, tempfile
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint import ChunkStore, save_pytree, restore_pytree
+    from repro.launch.mesh import make_mesh
 
     root = tempfile.mkdtemp()
     store = ChunkStore(root)
 
-    mesh_a = jax.make_mesh((4, 2), ("x", "y"), axis_types=(AxisType.Auto,)*2)
+    mesh_a = make_mesh((4, 2), ("x", "y"))
     sh_a = NamedSharding(mesh_a, P("x", "y"))
     w = jnp.arange(64 * 16, dtype=jnp.float32).reshape(64, 16)
     state = {
@@ -33,7 +34,7 @@ SCRIPT = textwrap.dedent(
     save_pytree(state, store, 1, chunk_bytes=256)
 
     # restore on a DIFFERENT mesh & layout
-    mesh_b = jax.make_mesh((8,), ("z",), axis_types=(AxisType.Auto,))
+    mesh_b = make_mesh((8,), ("z",))
     sh_b = {
         "w": NamedSharding(mesh_b, P(None, "z")),
         "r": NamedSharding(mesh_b, P("z")),

@@ -2,16 +2,12 @@
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
+from repro.launch.mesh import make_abstract_mesh as _amesh, make_mesh
 from repro.models import build
 from repro.runtime.sharding import ShardingRules, fit_spec
-
-
-def _amesh(shape, axes):
-    """AbstractMesh: spec logic needs only shape+names, not real devices."""
-    return jax.sharding.AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 @pytest.fixture(scope="module")
@@ -20,7 +16,7 @@ def mesh():
 
 
 def test_fit_spec_drops_nondivisible(mesh):
-    m4 = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    m4 = make_mesh((1,), ("data",))
     assert fit_spec(m4, P("data"), (7,)) == P("data")  # size-1 axis divides
     assert fit_spec(m4, P("nope"), (8,)) == P(None)
     assert fit_spec(m4, P("data", "data"), (4,)) == P("data")

@@ -19,7 +19,6 @@ SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
     import json
     import jax, numpy as np
-    from jax.sharding import AxisType
     import repro.launch.dryrun as dr
 
     # shrink the production mesh to 8x8 / 2x4x8 for CI speed
@@ -27,7 +26,7 @@ SCRIPT = textwrap.dedent(
     def small_mesh(*, multi_pod=False):
         shape = (2, 4, 8) if multi_pod else (8, 8)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+        return mesh_mod.make_mesh(shape, axes)
     dr.make_production_mesh = small_mesh
 
     recs = []

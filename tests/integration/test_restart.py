@@ -3,8 +3,11 @@
 The paper's Q2 ("does CRUM provide the ability to checkpoint?") made
 rigorous: a run that checkpoints at step k, dies, and restores must produce
 exactly the same parameters at step N as a run that never died — including
-the data-pipeline cursor and optimizer state.
+the data-pipeline cursor and optimizer state. Exercised over both persist
+backends (thread writer-pool and true-COW fork).
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +18,8 @@ from repro.data import SyntheticBatches
 from repro.models import ModelConfig, build
 from repro.optim import get_optimizer
 from repro.utils.tree import tree_equal
+
+BACKENDS = ["thread"] + (["fork"] if hasattr(os, "fork") else [])
 
 
 def _cfg():
@@ -65,7 +70,8 @@ def _run(cfg, step_fn, state, data, n_steps, trainer=None):
     return state
 
 
-def test_restart_is_bitwise_identical(tmp_path):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_restart_is_bitwise_identical(tmp_path, backend):
     cfg = _cfg()
     model, step_fn, init_state = _setup(cfg)
 
@@ -78,7 +84,7 @@ def test_restart_is_bitwise_identical(tmp_path):
     trainer = CheckpointedTrainer(
         step_fn, store_root=str(tmp_path / "ck"),
         policy=CheckpointPolicy(interval_steps=4, keep_last=3),
-        chunk_bytes=1 << 12,
+        chunk_bytes=1 << 12, backend=backend,
     )
     st = init_state()
     data = SyntheticBatches(cfg, batch=4, seq_len=16)

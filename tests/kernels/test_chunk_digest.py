@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.utils.testing import given, settings, st
 
 from repro.checkpoint.chunking import chunk_digest_np
 from repro.kernels import ops, ref
