@@ -1,0 +1,100 @@
+"""Coordinated-commit benchmark: round + commit latency vs cluster size.
+
+The costs that matter at cluster scale:
+
+  commit_ms     phase-2 critical section on the coordinator (merge all
+                hostmetas + fsync MANIFEST/COMMIT) — grows with host count
+  round_ms      first READY -> commit decision: barrier skew + slowest
+                host's persist + commit (what the training loop observes
+                at a checkpoint boundary, aggregated across the cluster)
+  straggler     one host acks late: round time absorbs it, commit time
+                must not — and the StragglerPolicy must flag the host
+
+    PYTHONPATH=src python benchmarks/coord_commit.py
+    PYTHONPATH=src python benchmarks/coord_commit.py --hosts 2 4 --straggle-s 0.5
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import tempfile
+
+from benchmarks.common import row
+from repro.coord.supervisor import run_cluster
+
+
+def _one(n_hosts: int, *, straggle_host=None, straggle_s=0.0,
+         steps=6, ckpt_every=2, backend="thread"):
+    with tempfile.TemporaryDirectory(prefix="crum-bench-coord-") as root:
+        return run_cluster(
+            root=root, n_hosts=n_hosts, total_steps=steps,
+            ckpt_every=ckpt_every, backend=backend, loop="numpy",
+            chunk_bytes=1 << 15, width=256,
+            straggle_host=straggle_host, straggle_s=straggle_s,
+            deadline_s=300.0,
+        )
+
+
+def run(hosts=(1, 2, 4), straggle_s: float = 0.5, backend: str = "thread") -> None:
+    for n in hosts:
+        report = _one(n, backend=backend)
+        commits = report.committed
+        if not commits:
+            continue
+        commit_ms = statistics.median(r.commit_s * 1e3 for r in commits)
+        round_ms = statistics.median(r.round_s * 1e3 for r in commits)
+        row(
+            f"coord_commit_{n}hosts",
+            round_ms * 1e3,  # us_per_call = round latency
+            hosts=n,
+            backend=backend,
+            commit_ms=round(commit_ms, 2),
+            round_ms=round(round_ms, 1),
+            persist_max_ms=round(
+                statistics.median(r.persist_s_max * 1e3 for r in commits), 1
+            ),
+            rounds=len(commits),
+            bytes_per_round=commits[-1].bytes_written,
+        )
+
+    # straggler drill at the largest host count: the slow host inflates the
+    # round, not the commit, and the policy names it
+    n = max(hosts)
+    if n >= 2 and straggle_s > 0:
+        base = _one(n, backend=backend)
+        slow = _one(n, straggle_host=n - 1, straggle_s=straggle_s,
+                    backend=backend)
+        if base.committed and slow.committed:
+            base_round = statistics.median(r.round_s for r in base.committed)
+            slow_round = statistics.median(r.round_s for r in slow.committed)
+            flagged = sorted(
+                {h for r in slow.committed for h in r.stragglers}
+            )
+            row(
+                f"coord_commit_{n}hosts_straggler",
+                slow_round * 1e6,
+                hosts=n,
+                backend=backend,
+                straggle_s=straggle_s,
+                round_ms=round(slow_round * 1e3, 1),
+                round_inflation_x=round(slow_round / max(base_round, 1e-9), 1),
+                commit_ms=round(statistics.median(
+                    r.commit_s * 1e3 for r in slow.committed
+                ), 2),
+                stragglers_flagged=flagged,
+            )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hosts", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--straggle-s", type=float, default=0.5)
+    ap.add_argument("--backend", default="thread")
+    args = ap.parse_args(argv)
+    run(hosts=tuple(args.hosts), straggle_s=args.straggle_s,
+        backend=args.backend)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

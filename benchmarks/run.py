@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import ckpt_restart, incremental, overhead, roofline
+from benchmarks import ckpt_restart, coord_commit, incremental, overhead, roofline
 from benchmarks import strategies_real, strategies_synthetic
 
 ALL = {
@@ -18,6 +18,7 @@ ALL = {
     "strategies_synthetic": strategies_synthetic.run,  # Table 2
     "strategies_real": strategies_real.run,      # Table 3
     "incremental": incremental.run,              # beyond-paper
+    "coord_commit": coord_commit.run,            # cluster 2-phase commit
     "roofline": roofline.run,                    # §Roofline emitter
 }
 

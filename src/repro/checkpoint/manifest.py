@@ -208,16 +208,46 @@ def atomic_write(path: str, data: bytes) -> None:
     os.replace(tmp, path)
 
 
+def fsync_dir(path: str) -> None:
+    """Flush a directory's entry table to stable storage.
+
+    ``atomic_write`` fsyncs file *contents*; the rename that makes the file
+    visible lives in the directory, which has its own cache. Without this, a
+    power failure after commit can leave a COMMIT marker whose payload files
+    were never durably linked — exactly the torn image the commit protocol
+    exists to prevent.
+    """
+    try:
+        fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    except OSError:  # platform without directory fds (or dir just GC'd)
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # some filesystems refuse fsync on directories
+        pass
+    finally:
+        os.close(fd)
+
+
 def step_dir(root: str, step: int) -> str:
     return os.path.join(root, f"step_{step:08d}")
 
 
-def commit_manifest(root: str, manifest: Manifest) -> str:
-    """Write MANIFEST then the COMMIT marker (the commit point)."""
+def commit_manifest(root: str, manifest: Manifest, *, durable: bool = True) -> str:
+    """Write MANIFEST then the COMMIT marker (the commit point).
+
+    With ``durable`` (default) the step directory and the checkpoint root are
+    fsynced after the marker lands, so the committed image survives power
+    loss: payload files, hostmetas, MANIFEST and COMMIT are all durably
+    linked before the commit is observable.
+    """
     d = step_dir(root, manifest.step)
     os.makedirs(d, exist_ok=True)
     atomic_write(os.path.join(d, "MANIFEST.msgpack"), manifest.to_bytes())
     atomic_write(os.path.join(d, "COMMIT"), b"ok")
+    if durable:
+        fsync_dir(d)
+        fsync_dir(root)
     return d
 
 
@@ -226,11 +256,20 @@ def is_committed(root: str, step: int) -> bool:
 
 
 def committed_steps(root: str) -> list[int]:
-    if not os.path.isdir(root):
+    """Committed step numbers under ``root``, tolerant of concurrent GC.
+
+    A step directory may vanish between ``listdir`` and the COMMIT probe
+    (GC on another thread/process); such steps are simply not reported.
+    """
+    try:
+        names = os.listdir(root)
+    except (FileNotFoundError, NotADirectoryError):
         return []
     steps = []
-    for name in os.listdir(root):
+    for name in names:
         m = _STEP_RE.match(name)
+        # os.path.exists returns False (never raises) for a dir GC'd
+        # between the listdir and this probe
         if m and os.path.exists(os.path.join(root, name, "COMMIT")):
             steps.append(int(m.group(1)))
     return sorted(steps)
@@ -246,3 +285,126 @@ def load_manifest(root: str, step: int) -> Manifest:
         raise FileNotFoundError(f"step {step} not committed under {root}")
     with open(os.path.join(step_dir(root, step), "MANIFEST.msgpack"), "rb") as f:
         return Manifest.from_bytes(f.read())
+
+
+def load_manifest_if_committed(root: str, step: int) -> Manifest | None:
+    """Like :func:`load_manifest` but returns None if the step is gone.
+
+    The committed/read pair is not atomic against GC: a step can be listed
+    as committed and then disappear before the manifest read. Callers that
+    scan (GC planners, restore pickers) use this to tolerate the race.
+    """
+    try:
+        return load_manifest(root, step)
+    except (FileNotFoundError, NotADirectoryError):
+        return None
+
+
+# -- per-host metadata + coordinator merge ------------------------------------
+# In the cluster protocol each host persists its own shards and writes a
+# *hostmeta* — a Manifest holding only that host's ShardRecords — into the
+# step directory. The coordinator merges all hostmetas into the single
+# MANIFEST.msgpack and only then writes COMMIT (two-phase commit: hostmetas
+# are the prepare records, COMMIT is the decision).
+
+_HOSTMETA_RE = re.compile(r"^hostmeta-h(\d{4})\.msgpack$")
+
+
+def hostmeta_path(root: str, step: int, host: int) -> str:
+    return os.path.join(step_dir(root, step), f"hostmeta-h{host:04d}.msgpack")
+
+
+def write_hostmeta(root: str, step: int, host: int, manifest: Manifest) -> str:
+    """Atomically write one host's manifest fragment; returns its path."""
+    d = step_dir(root, step)
+    os.makedirs(d, exist_ok=True)
+    path = hostmeta_path(root, step, host)
+    atomic_write(path, manifest.to_bytes())
+    return path
+
+
+def list_hostmetas(root: str, step: int) -> dict[int, str]:
+    """{host: hostmeta path} present in a step directory."""
+    d = step_dir(root, step)
+    try:
+        names = os.listdir(d)
+    except (FileNotFoundError, NotADirectoryError):
+        return {}
+    out = {}
+    for name in names:
+        m = _HOSTMETA_RE.match(name)
+        if m:
+            out[int(m.group(1))] = os.path.join(d, name)
+    return out
+
+
+def load_hostmeta(root: str, step: int, host: int) -> Manifest:
+    with open(hostmeta_path(root, step, host), "rb") as f:
+        return Manifest.from_bytes(f.read())
+
+
+def merge_hostmetas(
+    root: str, step: int, hosts: list[int] | None = None
+) -> Manifest:
+    """Merge per-host manifest fragments into the cluster manifest.
+
+    Every host reports the same global leaf set (paths, shapes, dtypes,
+    skeleton) but only its own ShardRecords; the merge unions the shard
+    lists per leaf. Disagreement on shape/dtype/step is a protocol error —
+    it means two hosts checkpointed different states, which must abort the
+    round rather than commit a chimera.
+    """
+    if hosts is None:
+        hosts = sorted(list_hostmetas(root, step))
+    if not hosts:
+        raise FileNotFoundError(f"no hostmetas for step {step} under {root}")
+    merged: Manifest | None = None
+    for h in sorted(hosts):
+        hm = load_hostmeta(root, step, h)
+        if hm.step != step:
+            raise ValueError(
+                f"hostmeta h{h} is for step {hm.step}, expected {step}"
+            )
+        if merged is None:
+            # seed meta from the first host but drop its per-host fields —
+            # the cluster manifest must not claim one host's identity or
+            # report one host's chunk counters as cluster totals
+            base_meta = {
+                k: v for k, v in hm.meta.items()
+                if k not in ("host", "chunks_written", "chunks_reused")
+            }
+            merged = Manifest(
+                step=step,
+                format_version=hm.format_version,
+                skeleton=hm.skeleton,
+                meta=base_meta,
+            )
+            merged.meta["hosts"] = {}
+        for path, lv in hm.leaves.items():
+            have = merged.leaves.get(path)
+            if have is None:
+                merged.leaves[path] = LeafRecord(
+                    path=lv.path, shape=lv.shape, dtype=lv.dtype,
+                    shards=list(lv.shards),
+                )
+            else:
+                if list(have.shape) != list(lv.shape) or have.dtype != lv.dtype:
+                    raise ValueError(
+                        f"hostmeta h{h} disagrees on leaf {path!r}: "
+                        f"{lv.shape}/{lv.dtype} vs {have.shape}/{have.dtype}"
+                    )
+                have.shards.extend(lv.shards)
+        merged.meta["hosts"][h] = {
+            "chunks_written": hm.meta.get("chunks_written", 0),
+            "chunks_reused": hm.meta.get("chunks_reused", 0),
+        }
+    merged.meta["chunks_written"] = sum(
+        v["chunks_written"] for v in merged.meta["hosts"].values()
+    )
+    merged.meta["chunks_reused"] = sum(
+        v["chunks_reused"] for v in merged.meta["hosts"].values()
+    )
+    # deterministic shard order: by global start range
+    for lv in merged.leaves.values():
+        lv.shards.sort(key=lambda s: (tuple(s.start), tuple(s.stop)))
+    return merged

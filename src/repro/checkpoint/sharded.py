@@ -130,7 +130,9 @@ def save_pytree(
     manifest.meta.setdefault("chunks_written", written)
     manifest.meta.setdefault("chunks_reused", reused)
     if commit:
-        commit_manifest(store.root, manifest)
+        # directory durability tracks the payload fsync knob (see manifest
+        # .fsync_dir): dir fsyncs without payload fsyncs buy nothing
+        commit_manifest(store.root, manifest, durable=fsync)
     return manifest
 
 

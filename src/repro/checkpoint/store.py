@@ -113,7 +113,10 @@ class ChunkStore:
         """Delete committed step dirs not in ``keep_steps``.
 
         Never deletes a step that a kept delta manifest references: callers
-        pass the transitive closure (see policy.referenced_steps).
+        pass the transitive closure (see policy.referenced_steps). Safe
+        against a concurrent collector on the same root (two trainers, or
+        trainer + cluster coordinator): a step another GC got to first is
+        simply skipped.
         """
         from repro.checkpoint.manifest import committed_steps
         removed = []
@@ -122,11 +125,20 @@ class ChunkStore:
             if s in keep:
                 continue
             d = step_dir(self.root, s)
-            # remove COMMIT first so a crash mid-GC leaves an uncommitted
-            # (hence invisible) directory rather than a corrupt one.
-            os.remove(os.path.join(d, "COMMIT"))
-            for name in os.listdir(d):
-                os.remove(os.path.join(d, name))
-            os.rmdir(d)
+            try:
+                # remove COMMIT first so a crash mid-GC leaves an uncommitted
+                # (hence invisible) directory rather than a corrupt one.
+                os.remove(os.path.join(d, "COMMIT"))
+            except FileNotFoundError:
+                continue  # a racing collector owns this step now
+            try:
+                for name in os.listdir(d):
+                    try:
+                        os.remove(os.path.join(d, name))
+                    except FileNotFoundError:
+                        pass
+                os.rmdir(d)
+            except (FileNotFoundError, NotADirectoryError):
+                pass
             removed.append(s)
         return removed

@@ -1,0 +1,52 @@
+"""Cluster coordination — CRUM's DMTCP-coordinator layer for this system.
+
+CRUM checkpoints a *cluster*: a central coordinator quiesces every rank,
+each rank's proxy/forked child persists its share of the image, and a
+single commit makes the checkpoint visible atomically across all ranks.
+This package is that layer, with simulated hosts as real OS processes:
+
+  protocol.py     length-prefixed msgpack frames + message vocabulary
+                  (JOIN/HEARTBEAT/READY/DRAIN/PERSIST_DONE/COMMIT/ABORT/…)
+  coordinator.py  the coordinator process: membership, heartbeat-gated
+                  two-phase commit (hostmetas are prepare records, the
+                  merged MANIFEST + COMMIT marker is the decision), abort
+                  on death/stall, round log
+  worker.py       the per-host worker loop: train, barrier at checkpoint
+                  boundaries, persist own shards via ForkedCheckpointer in
+                  external-commit mode, failure injection for drills
+  supervisor.py   restart supervision: spawn N workers, reap deaths
+                  (process sentinels — the portable SIGCHLD), respawn with
+                  restore-from-latest-committed so the cluster converges
+                  back to lockstep
+
+Entry point: ``python -m repro.launch.cluster --hosts 4 ...``.
+"""
+from repro.coord.protocol import (
+    MSG_ABORT,
+    MSG_COMMIT,
+    MSG_DRAIN,
+    MSG_FINISHED,
+    MSG_HEARTBEAT,
+    MSG_JOIN,
+    MSG_PERSIST_DONE,
+    MSG_PERSIST_FAIL,
+    MSG_READY,
+    MSG_SHUTDOWN,
+    MSG_WELCOME,
+    Connection,
+    recv_frame,
+    send_frame,
+)
+from repro.coord.coordinator import Coordinator, RoundRecord
+from repro.coord.worker import WorkerConfig, worker_entry
+from repro.coord.supervisor import ClusterReport, ClusterSupervisor, run_cluster
+
+__all__ = [
+    "Connection", "send_frame", "recv_frame",
+    "MSG_JOIN", "MSG_WELCOME", "MSG_HEARTBEAT", "MSG_READY", "MSG_DRAIN",
+    "MSG_PERSIST_DONE", "MSG_PERSIST_FAIL", "MSG_COMMIT", "MSG_ABORT",
+    "MSG_FINISHED", "MSG_SHUTDOWN",
+    "Coordinator", "RoundRecord",
+    "WorkerConfig", "worker_entry",
+    "ClusterSupervisor", "ClusterReport", "run_cluster",
+]

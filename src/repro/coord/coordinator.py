@@ -1,0 +1,431 @@
+"""The cluster coordinator: heartbeat-gated two-phase checkpoint commit.
+
+DMTCP-style: one coordinator process owns cluster state; workers (CRUM's
+per-rank proxies) connect, heartbeat, and block at checkpoint boundaries.
+A checkpoint round is a two-phase commit over the shared checkpoint root:
+
+  phase 1 (prepare)  every worker READY at step S -> coordinator sends
+                     DRAIN -> each worker persists *its own shards* via its
+                     local ForkedCheckpointer in external-commit mode
+                     (data-h*.bin + hostmeta-h*.msgpack) and acks
+                     PERSIST_DONE.
+  phase 2 (decide)   only when every live participant has acked *and* the
+                     HeartbeatMonitor sees the full membership alive does
+                     the coordinator merge the hostmetas into
+                     MANIFEST.msgpack and write the COMMIT marker (fsynced
+                     with the step directory). Any death, stall or persist
+                     failure mid-round ABORTs: no MANIFEST, no COMMIT, the
+                     previous committed image stays the restore target.
+
+Rounds, joins, deaths and commits are journaled to CLUSTER_LOG.jsonl under
+the checkpoint root (the auditable "manifest chain" of the cluster).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import socket
+import threading
+import time
+from dataclasses import dataclass, field, asdict
+
+from repro.checkpoint.manifest import (
+    commit_manifest,
+    latest_committed_step,
+    merge_hostmetas,
+)
+from repro.checkpoint.store import ChunkStore
+from repro.core.failure import HeartbeatMonitor, StragglerPolicy
+from repro.core.policy import CheckpointPolicy
+from repro.coord.protocol import (
+    MSG_ABORT,
+    MSG_COMMIT,
+    MSG_DRAIN,
+    MSG_FINISHED,
+    MSG_HEARTBEAT,
+    MSG_JOIN,
+    MSG_PERSIST_DONE,
+    MSG_PERSIST_FAIL,
+    MSG_READY,
+    MSG_SHUTDOWN,
+    MSG_WELCOME,
+    Connection,
+)
+
+
+@dataclass
+class RoundRecord:
+    """One checkpoint round attempt (committed or aborted)."""
+
+    step: int
+    status: str = "open"          # open -> committed | aborted
+    reason: str = ""              # abort cause
+    participants: list[int] = field(default_factory=list)
+    acked: list[int] = field(default_factory=list)
+    stragglers: list[int] = field(default_factory=list)
+    commit_s: float = 0.0         # merge + fsync + COMMIT marker
+    round_s: float = 0.0          # first READY -> decision
+    persist_s_max: float = 0.0    # slowest host's persist time
+    bytes_written: int = 0
+
+
+@dataclass
+class _Round:
+    step: int
+    opened_at: float
+    drained_at: float | None = None
+    acks: dict[int, dict] = field(default_factory=dict)
+    record: RoundRecord | None = None
+
+
+class Coordinator:
+    """Owns membership, the round state machine, and the commit decision."""
+
+    def __init__(
+        self,
+        root: str,
+        *,
+        n_hosts: int,
+        heartbeat_timeout_s: float = 15.0,
+        round_timeout_s: float = 120.0,
+        keep_last: int = 0,
+        tick_s: float = 0.25,
+    ):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.n_hosts = int(n_hosts)
+        self.round_timeout_s = round_timeout_s
+        self.tick_s = tick_s
+        self.keep_last = int(keep_last)
+        self.monitor = HeartbeatMonitor([], timeout_s=heartbeat_timeout_s)
+        self.stragglers = StragglerPolicy()
+        self.rounds: list[RoundRecord] = []
+        self.done = threading.Event()
+        self.latest_committed: int | None = latest_committed_step(root)
+        self._inbox: "queue.Queue[tuple[str, Connection, dict | None]]" = queue.Queue()
+        self._conns: dict[int, Connection] = {}       # host -> connection
+        self._conn_host: dict[Connection, int] = {}
+        self._finished: dict[int, str] = {}           # host -> state digest
+        self._restored_from: dict[int, int | None] = {}
+        self._round: _Round | None = None
+        self._listener: socket.socket | None = None
+        self._log_path = os.path.join(root, "CLUSTER_LOG.jsonl")
+        self._log_lock = threading.Lock()
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def address(self) -> tuple[str, int]:
+        assert self._listener is not None, "call start() first"
+        return self._listener.getsockname()[:2]
+
+    def start(self) -> "Coordinator":
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind(("127.0.0.1", 0))
+        self._listener.listen(self.n_hosts * 2)
+        threading.Thread(
+            target=self._accept_loop, name="coord-accept", daemon=True
+        ).start()
+        return self
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:  # listener closed at shutdown
+                return
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = Connection(sock)
+            # daemon readers die with their connection's EOF; holding on to
+            # them would leak one Thread per worker incarnation forever
+            threading.Thread(
+                target=self._reader_loop, args=(conn,),
+                name="coord-reader", daemon=True,
+            ).start()
+
+    def _reader_loop(self, conn: Connection) -> None:
+        try:
+            while True:
+                frame = conn.recv()
+                if frame is None:
+                    break
+                self._inbox.put(("msg", conn, frame))
+        except (OSError, ValueError):
+            pass
+        self._inbox.put(("eof", conn, None))
+
+    def close(self) -> None:
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+        for c in list(self._conns.values()):
+            c.close()
+        self._conns.clear()
+        self._conn_host.clear()
+
+    # -- journal ---------------------------------------------------------------
+    def _log(self, event: str, **fields) -> None:
+        line = {"event": event, "t": time.time(), **fields}
+        with self._log_lock:
+            with open(self._log_path, "a") as f:
+                f.write(json.dumps(line) + "\n")
+
+    # -- the event loop --------------------------------------------------------
+    def run(self, *, deadline_s: float = 600.0) -> list[RoundRecord]:
+        """Drive rounds until every host reports FINISHED (or deadline)."""
+        deadline = time.monotonic() + deadline_s
+        try:
+            while True:
+                if len(self._finished) == self.n_hosts:
+                    self._broadcast(MSG_SHUTDOWN)
+                    self._log("shutdown", finished=sorted(self._finished))
+                    return self.rounds
+                if time.monotonic() > deadline:
+                    self._abort_round("coordinator deadline exceeded")
+                    self._broadcast(MSG_SHUTDOWN)
+                    raise TimeoutError(
+                        f"cluster did not finish within {deadline_s}s "
+                        f"(finished={sorted(self._finished)}, "
+                        f"members={sorted(self._conns)})"
+                    )
+                try:
+                    kind, conn, frame = self._inbox.get(timeout=self.tick_s)
+                except queue.Empty:
+                    self._check_liveness()
+                    continue
+                if kind == "eof":
+                    self._on_eof(conn)
+                else:
+                    self._dispatch(conn, frame)
+                self._check_liveness()
+        finally:
+            self.done.set()
+            self.close()
+
+    # -- message handling -------------------------------------------------------
+    def _dispatch(self, conn: Connection, msg: dict) -> None:
+        mtype = msg.get("type")
+        host = msg.get("host")
+        if mtype == MSG_JOIN:
+            self._on_join(conn, msg)
+            return
+        if self._conn_host.get(conn) != host:
+            return  # frame from a connection we already kicked
+        self.monitor.beat(host)
+        if mtype == MSG_HEARTBEAT:
+            return
+        if mtype == MSG_READY:
+            self._on_ready(host, int(msg["step"]))
+        elif mtype == MSG_PERSIST_DONE:
+            self._on_persist_done(host, msg)
+        elif mtype == MSG_PERSIST_FAIL:
+            self._abort_round(
+                f"host {host} persist failed: {msg.get('error', '?')}"
+            )
+        elif mtype == MSG_FINISHED:
+            self._finished[host] = msg.get("digest", "")
+            self._log("finished", host=host, step=msg.get("step"),
+                      digest=msg.get("digest", ""))
+
+    def _on_join(self, conn: Connection, msg: dict) -> None:
+        host = int(msg["host"])
+        old = self._conns.pop(host, None)
+        if old is not None and old is not conn:
+            # stale connection from a previous incarnation of this host
+            # (a re-JOIN on the *same* connection just updates metadata)
+            self._conn_host.pop(old, None)
+            old.close()
+        self._conns[host] = conn
+        self._conn_host[conn] = host
+        self.monitor.add_host(host)
+        self._restored_from[host] = msg.get("restored_from")
+        self._log(
+            "join", host=host, pid=msg.get("pid"),
+            restored_from=msg.get("restored_from"),
+            latest_committed=self.latest_committed,
+        )
+        conn.send(
+            MSG_WELCOME, host=host, n_hosts=self.n_hosts,
+            latest_committed=self.latest_committed,
+        )
+
+    def _on_ready(self, host: int, step: int) -> None:
+        if self.latest_committed is not None and step <= self.latest_committed:
+            return  # stale barrier from before a restore
+        r = self._round
+        if r is None:
+            r = self._round = _Round(step=step, opened_at=time.monotonic())
+            r.record = RoundRecord(step=step)
+            self.rounds.append(r.record)
+        if step != r.step:
+            # a worker at a different boundary than the open round means the
+            # cluster lost lockstep — abort, then re-open at the incoming
+            # boundary (survivors re-READY on ABORT, so the barrier re-forms)
+            self._abort_round(
+                f"host {host} ready at step {step} during round {r.step}"
+            )
+            self._on_ready(host, step)
+            return
+        if host not in r.record.participants:
+            r.record.participants.append(host)
+        if (
+            len(self._conns) == self.n_hosts
+            and all(h in r.record.participants for h in range(self.n_hosts))
+            and r.drained_at is None
+        ):
+            r.drained_at = time.monotonic()
+            self._broadcast(MSG_DRAIN, step=step)
+
+    def _on_persist_done(self, host: int, msg: dict) -> None:
+        r = self._round
+        if r is None or int(msg["step"]) != r.step or r.drained_at is None:
+            return  # late ack for an aborted round
+        r.acks[host] = msg
+        r.record.acked = sorted(r.acks)
+        # straggler accounting uses the duration the *coordinator* observed
+        # (DRAIN -> ack), not the worker's self-reported persist time: a
+        # host whose storage or network stalls the ack is exactly the host
+        # that stalls the commit, whatever its local clock claims.
+        self.stragglers.record(host, time.monotonic() - r.drained_at)
+        if len(r.acks) < self.n_hosts:
+            return
+        # phase 2: the decision. Gate on liveness — an ack from a host that
+        # died right after sending it must not produce a commit no one can
+        # heartbeat for.
+        dead = set(self.monitor.dead_hosts()) & set(self._conns)
+        if dead or len(self._conns) < self.n_hosts:
+            self._abort_round(f"dead hosts at commit gate: {sorted(dead)}")
+            return
+        self._commit_round()
+
+    # -- round transitions --------------------------------------------------------
+    def _commit_round(self) -> None:
+        r = self._round
+        t0 = time.perf_counter()
+        try:
+            manifest = merge_hostmetas(self.root, r.step, hosts=sorted(r.acks))
+            manifest.meta["coordinator"] = {
+                "participants": sorted(r.acks),
+                "previous_committed": self.latest_committed,
+            }
+            commit_manifest(self.root, manifest, durable=True)
+        except Exception as e:
+            self._abort_round(f"commit failed: {type(e).__name__}: {e}")
+            return
+        rec = r.record
+        rec.commit_s = time.perf_counter() - t0
+        rec.round_s = time.monotonic() - r.opened_at
+        rec.persist_s_max = max(
+            (float(m.get("persist_s", 0.0)) for m in r.acks.values()), default=0.0
+        )
+        rec.bytes_written = sum(
+            int(m.get("bytes_written", 0)) for m in r.acks.values()
+        )
+        rec.stragglers = self.stragglers.stragglers()
+        rec.status = "committed"
+        self.latest_committed = r.step
+        self._round = None
+        self._broadcast(MSG_COMMIT, step=rec.step)
+        self._log("round", **asdict(rec))
+        self._gc()
+
+    def _abort_round(self, reason: str) -> None:
+        r = self._round
+        if r is None:
+            return
+        rec = r.record
+        rec.status = "aborted"
+        rec.reason = reason
+        rec.round_s = time.monotonic() - r.opened_at
+        self._round = None
+        self._broadcast(MSG_ABORT, step=rec.step, reason=reason)
+        self._log("round", **asdict(rec))
+        # Partial files (data-h*/hostmeta-h*) stay in the uncommitted step
+        # dir — invisible to restore, truncated/overwritten by the retry.
+        # Deleting here would race a straggler still writing into the dir.
+
+    def _gc(self) -> None:
+        if self.keep_last <= 0:
+            return
+        CheckpointPolicy(keep_last=self.keep_last).run_gc(ChunkStore(self.root))
+
+    # -- liveness ------------------------------------------------------------------
+    def _on_eof(self, conn: Connection) -> None:
+        host = self._conn_host.pop(conn, None)
+        conn.close()
+        if host is None or self._conns.get(host) is not conn:
+            return  # already replaced by a rejoin
+        self._kick(host, "connection lost (worker death)")
+
+    def _check_liveness(self) -> None:
+        for host in set(self.monitor.dead_hosts()) & set(self._conns):
+            self._kick(host, "heartbeat timeout (worker stalled)")
+        r = self._round
+        if (
+            r is not None
+            and r.drained_at is not None
+            and time.monotonic() - r.drained_at > self.round_timeout_s
+        ):
+            missing = sorted(set(range(self.n_hosts)) - set(r.acks))
+            self._abort_round(f"round timeout; missing acks from {missing}")
+            for host in missing:
+                self._kick(host, "no persist ack within round timeout")
+
+    def _kick(self, host: int, reason: str) -> None:
+        conn = self._conns.pop(host, None)
+        if conn is not None:
+            self._conn_host.pop(conn, None)
+            conn.close()
+        self.monitor.remove_host(host)
+        self._finished.pop(host, None)
+        self._log("death", host=host, reason=reason,
+                  latest_committed=self.latest_committed)
+        r = self._round
+        if r is not None and host in r.record.participants:
+            self._abort_round(f"host {host} lost mid-round: {reason}")
+
+    def _broadcast(self, msg_type: str, **fields) -> None:
+        for host, conn in list(self._conns.items()):
+            try:
+                conn.send(msg_type, **fields)
+            except OSError:
+                self._inbox.put(("eof", conn, None))
+
+    # -- introspection --------------------------------------------------------------
+    @property
+    def final_digests(self) -> dict[int, str]:
+        """{host: state digest at FINISHED} — lockstep-convergence evidence."""
+        return dict(self._finished)
+
+    @property
+    def log_path(self) -> str:
+        return self._log_path
+
+    def aborted_rounds(self) -> list[RoundRecord]:
+        return [r for r in self.rounds if r.status == "aborted"]
+
+    def committed_rounds(self) -> list[RoundRecord]:
+        return [r for r in self.rounds if r.status == "committed"]
+
+    def sweep_uncommitted(self) -> list[int]:
+        """Remove uncommitted (aborted/partial) step dirs. Only safe once all
+        workers have exited — a live straggler may still be writing."""
+        removed = []
+        try:
+            names = os.listdir(self.root)
+        except FileNotFoundError:
+            return removed
+        for name in names:
+            d = os.path.join(self.root, name)
+            if not (name.startswith("step_") and os.path.isdir(d)):
+                continue
+            if os.path.exists(os.path.join(d, "COMMIT")):
+                continue
+            for f in os.listdir(d):
+                os.remove(os.path.join(d, f))
+            os.rmdir(d)
+            removed.append(name)
+        return removed

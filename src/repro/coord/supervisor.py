@@ -1,0 +1,226 @@
+"""Restart supervision: spawn workers, reap deaths, respawn into restore.
+
+The supervisor is the process-level half of fault tolerance (the
+coordinator is the protocol-level half). It spawns one OS process per
+simulated host (``multiprocessing`` *spawn* context — safe with an
+already-initialized JAX in the parent), then blocks on the process
+sentinels (``multiprocessing.connection.wait`` — the portable SIGCHLD).
+A worker exiting non-zero is a death: the supervisor respawns it with
+``restored=True`` and every failure injection cleared, and the new
+incarnation restores from ``latest_committed_step`` via the coordinator's
+WELCOME — driving the cluster back to lockstep. A zero exit is a worker
+that finished; it is never respawned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import threading
+import time
+from dataclasses import dataclass, field
+from multiprocessing.connection import wait as sentinel_wait
+
+from repro.coord.coordinator import Coordinator, RoundRecord
+from repro.coord.worker import WorkerConfig, worker_entry
+
+
+@dataclass
+class ClusterReport:
+    """What a cluster run produced — the CLI and tests assert on this."""
+
+    n_hosts: int
+    rounds: list[RoundRecord]
+    restarts: dict[int, int]                # host -> respawn count
+    final_digests: dict[int, str]           # host -> state digest at FINISHED
+    latest_committed: int | None
+    log_path: str
+    swept_dirs: list[str] = field(default_factory=list)
+
+    @property
+    def committed(self) -> list[RoundRecord]:
+        return [r for r in self.rounds if r.status == "committed"]
+
+    @property
+    def aborted(self) -> list[RoundRecord]:
+        return [r for r in self.rounds if r.status == "aborted"]
+
+    def lockstep(self) -> bool:
+        """All hosts finished with bit-identical state."""
+        return (
+            len(self.final_digests) == self.n_hosts
+            and len(set(self.final_digests.values())) == 1
+        )
+
+
+class ClusterSupervisor:
+    def __init__(
+        self,
+        cfgs: list[WorkerConfig],
+        *,
+        max_restarts: int = 3,
+        mp_context: str = "spawn",
+    ):
+        self.cfgs = {c.host: c for c in cfgs}
+        self.max_restarts = max_restarts
+        self.ctx = mp.get_context(mp_context)
+        self.procs: dict[int, mp.Process] = {}
+        self.restarts: dict[int, int] = {h: 0 for h in self.cfgs}
+        self.exited_clean: set[int] = set()
+
+    def _spawn(self, cfg: WorkerConfig) -> None:
+        p = self.ctx.Process(
+            target=worker_entry, args=(cfg,), name=f"crum-worker-{cfg.host}"
+        )
+        p.start()
+        self.procs[cfg.host] = p
+
+    def start(self) -> None:
+        for cfg in self.cfgs.values():
+            self._spawn(cfg)
+
+    @staticmethod
+    def respawn_cfg(cfg: WorkerConfig) -> WorkerConfig:
+        """The next incarnation: restore-on-join, no replayed injections."""
+        return dataclasses.replace(
+            cfg,
+            restored=True,
+            kill_at_step=None,
+            die_after_persist_step=None,
+            stall_at_step=None,
+        )
+
+    def watch(self, done: threading.Event, *, deadline_s: float = 600.0) -> None:
+        """Reap deaths and respawn until ``done`` (coordinator finished)."""
+        deadline = time.monotonic() + deadline_s
+        while not done.is_set():
+            if time.monotonic() > deadline:
+                raise TimeoutError("supervisor deadline exceeded")
+            live = {h: p for h, p in self.procs.items() if p.is_alive()}
+            if not live:
+                # every worker exited; wait on the coordinator to notice
+                done.wait(timeout=0.25)
+                continue
+            ready = sentinel_wait(
+                [p.sentinel for p in live.values()], timeout=0.25
+            )
+            if not ready:
+                continue
+            for host, p in list(live.items()):
+                if p.is_alive() or p.sentinel not in ready:
+                    continue
+                p.join()
+                if p.exitcode == 0:
+                    self.exited_clean.add(host)
+                    continue
+                self.restarts[host] += 1
+                if self.restarts[host] > self.max_restarts:
+                    raise RuntimeError(
+                        f"host {host} died {self.restarts[host]} times "
+                        f"(last exit code {p.exitcode}); giving up"
+                    )
+                cfg = self.respawn_cfg(self.cfgs[host])
+                self.cfgs[host] = cfg
+                self._spawn(cfg)
+
+    def terminate(self) -> None:
+        for p in self.procs.values():
+            if p.is_alive():
+                p.terminate()
+        for p in self.procs.values():
+            p.join(timeout=10)
+
+
+def run_cluster(
+    *,
+    root: str,
+    n_hosts: int,
+    total_steps: int,
+    ckpt_every: int,
+    backend: str = "thread",
+    loop: str = "numpy",
+    codec: str | None = None,
+    chunk_bytes: int = 1 << 16,
+    width: int = 64,
+    step_time_s: float = 0.0,
+    keep_last: int = 0,
+    heartbeat_timeout_s: float = 10.0,
+    round_timeout_s: float = 120.0,
+    deadline_s: float = 600.0,
+    max_restarts: int = 3,
+    kill_host: int | None = None,
+    kill_at_step: int | None = None,
+    die_after_persist_host: int | None = None,
+    die_after_persist_step: int | None = None,
+    straggle_host: int | None = None,
+    straggle_s: float = 0.0,
+    stall_host: int | None = None,
+    stall_s: float = 0.0,
+    stall_at_step: int | None = None,
+    sweep: bool = True,
+) -> ClusterReport:
+    """One coordinated run: coordinator + N supervised worker processes.
+
+    Blocks until every host reports FINISHED (workers killed by injections
+    are respawned and restored along the way) and returns the report.
+    """
+    coord = Coordinator(
+        root,
+        n_hosts=n_hosts,
+        heartbeat_timeout_s=heartbeat_timeout_s,
+        round_timeout_s=round_timeout_s,
+        keep_last=keep_last,
+    ).start()
+    host_addr, port = coord.address
+
+    def cfg_for(h: int) -> WorkerConfig:
+        kw = dict(
+            host=h, n_hosts=n_hosts, coord_host=host_addr, coord_port=port,
+            root=root, total_steps=total_steps, ckpt_every=ckpt_every,
+            backend=backend, loop=loop, chunk_bytes=chunk_bytes, width=width,
+            step_time_s=step_time_s, deadline_s=deadline_s,
+        )
+        if codec is not None:
+            kw["codec"] = codec
+        if h == kill_host and kill_at_step is not None:
+            kw["kill_at_step"] = kill_at_step
+        if h == die_after_persist_host and die_after_persist_step is not None:
+            kw["die_after_persist_step"] = die_after_persist_step
+        if h == straggle_host and straggle_s:
+            kw["straggle_s"] = straggle_s
+        if h == stall_host and stall_s:
+            kw.update(stall_s=stall_s, stall_at_step=stall_at_step)
+        return WorkerConfig(**kw)
+
+    sup = ClusterSupervisor(
+        [cfg_for(h) for h in range(n_hosts)], max_restarts=max_restarts
+    )
+
+    coord_result: dict = {}
+
+    def drive() -> None:
+        try:
+            coord.run(deadline_s=deadline_s)
+        except Exception as e:  # surfaced after the watch loop unblocks
+            coord_result["error"] = e
+
+    driver = threading.Thread(target=drive, name="coordinator", daemon=True)
+    driver.start()
+    sup.start()
+    try:
+        sup.watch(coord.done, deadline_s=deadline_s)
+    finally:
+        sup.terminate()
+    driver.join(timeout=30)
+    if "error" in coord_result:
+        raise coord_result["error"]
+
+    swept = coord.sweep_uncommitted() if sweep else []
+    return ClusterReport(
+        n_hosts=n_hosts,
+        rounds=coord.rounds,
+        restarts=dict(sup.restarts),
+        final_digests=coord.final_digests,
+        latest_committed=coord.latest_committed,
+        log_path=coord.log_path,
+        swept_dirs=swept,
+    )

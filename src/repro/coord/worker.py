@@ -1,0 +1,428 @@
+"""The per-host worker: train, barrier, persist own shards, obey commits.
+
+One worker process simulates one CRUM rank+proxy pair. It holds the full
+replicated training state (data-parallel lockstep: every host computes the
+same deterministic updates) but **persists only its assigned global index
+range** of each leaf, wrapped in :class:`HostShardView` — the simulated
+analogue of a real multi-host jax.Array's ``addressable_shards``. The
+local ForkedCheckpointer runs in *external-commit* mode: either persist
+backend (thread pool or true-COW fork child) writes ``data-h*.bin`` +
+``hostmeta-h*.msgpack``, and the *coordinator* — never the worker — writes
+MANIFEST + COMMIT.
+
+Failure injection (for drills, tests and benchmarks):
+
+  kill_at_step            exit hard at that train step (after READY when
+                          the step is a checkpoint boundary, so the death
+                          lands mid-round and aborts it)
+  die_after_persist_step  the crash-mid-commit drill: hostmeta is on disk,
+                          PERSIST_DONE never sent
+  straggle_s[/at_step]    sleep before acking (slow storage)
+  stall_at_step/stall_s   stop heartbeating and freeze (hung host)
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import socket
+import time
+import threading
+import zlib
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.checkpoint.codecs import DEFAULT_CODEC
+from repro.checkpoint.store import ChunkStore
+from repro.core.forked import ForkedCheckpointer
+from repro.core.restore import RestoreManager
+from repro.core.shadow import HostShardView
+from repro.coord.protocol import (
+    MSG_ABORT,
+    MSG_COMMIT,
+    MSG_DRAIN,
+    MSG_FINISHED,
+    MSG_HEARTBEAT,
+    MSG_JOIN,
+    MSG_PERSIST_DONE,
+    MSG_PERSIST_FAIL,
+    MSG_READY,
+    MSG_SHUTDOWN,
+    MSG_WELCOME,
+    Connection,
+    connect,
+)
+from repro.utils.tree import flatten_with_paths, unflatten_from_paths
+
+EXIT_KILLED = 9          # kill_at_step drill
+EXIT_MID_COMMIT = 23     # die_after_persist_step drill
+EXIT_WATCHDOG = 3        # local persist hung past persist_timeout_s
+
+
+@dataclass
+class WorkerConfig:
+    host: int
+    n_hosts: int
+    coord_host: str
+    coord_port: int
+    root: str
+    total_steps: int
+    ckpt_every: int
+    backend: str = "thread"
+    codec: str = DEFAULT_CODEC
+    chunk_bytes: int = 1 << 16
+    incremental: bool = True
+    loop: str = "numpy"            # "numpy" (fast, tests) | "jax" (real model)
+    width: int = 64                # numpy state width / jax d_model
+    step_time_s: float = 0.0       # simulated compute per train step
+    heartbeat_s: float = 0.5
+    sock_timeout_s: float = 1.0
+    deadline_s: float = 600.0
+    persist_timeout_s: float = 120.0
+    seed: int = 0
+    restored: bool = False         # this incarnation is a supervisor respawn
+    kill_at_step: int | None = None
+    die_after_persist_step: int | None = None
+    straggle_s: float = 0.0
+    straggle_at_step: int | None = None
+    stall_at_step: int | None = None
+    stall_s: float = 0.0
+
+
+# -- shard ownership -----------------------------------------------------------
+
+def shard_tree_for_host(state, host: int, n_hosts: int):
+    """Wrap every leaf in the HostShardView this host persists.
+
+    Leaves with a leading dimension >= n_hosts are split contiguously along
+    dim 0 (global index ranges recorded in the manifest); smaller leaves and
+    scalars are whole-owned by a stable hash of their path, so exactly one
+    hostmeta carries each byte and the merged manifest covers everything.
+    """
+    flat, treedef = flatten_with_paths(state)
+    out = {}
+    for path, leaf in flat.items():
+        arr = np.asarray(leaf)
+        if arr.ndim >= 1 and arr.shape[0] >= n_hosts:
+            n0 = arr.shape[0]
+            lo = (host * n0) // n_hosts
+            hi = ((host + 1) * n0) // n_hosts
+            out[path] = HostShardView(
+                arr[lo:hi],
+                start=[lo] + [0] * (arr.ndim - 1),
+                stop=[hi] + list(arr.shape[1:]),
+                global_shape=arr.shape,
+                dtype=arr.dtype,
+            )
+        else:
+            owner = zlib.crc32(path.encode()) % n_hosts
+            if owner == host:
+                out[path] = HostShardView(
+                    arr,
+                    start=[0] * arr.ndim,
+                    stop=list(arr.shape),
+                    global_shape=arr.shape,
+                    dtype=arr.dtype,
+                )
+            else:
+                out[path] = HostShardView(
+                    None, global_shape=arr.shape, dtype=arr.dtype
+                )
+    return unflatten_from_paths(treedef, out)
+
+
+def state_digest(state) -> str:
+    """Order-stable content hash for lockstep-convergence assertions."""
+    flat, _ = flatten_with_paths(state)
+    h = hashlib.sha256()
+    for path in sorted(flat):
+        h.update(path.encode())
+        h.update(np.ascontiguousarray(np.asarray(flat[path])).tobytes())
+    return h.hexdigest()[:16]
+
+
+# -- training loops ------------------------------------------------------------
+
+class _NumpyLoop:
+    """Deterministic momentum-SGD-shaped update; replicated lockstep."""
+
+    def __init__(self, cfg: WorkerConfig):
+        self.cfg = cfg
+
+    def init(self):
+        rng = np.random.default_rng(self.cfg.seed)
+        shape = (max(self.cfg.n_hosts, 2) * 8, self.cfg.width)
+        return {
+            "device": {
+                "w": rng.standard_normal(shape).astype(np.float32),
+                "m": np.zeros(shape, np.float32),
+            },
+            "host": {"step": np.int64(0)},
+        }
+
+    def step(self, state, step: int):
+        d = state["device"]
+        g = np.sin(d["w"] * 0.05 + np.float32(step) * 0.001, dtype=np.float32)
+        d["m"] = (0.9 * d["m"] + g).astype(np.float32)
+        d["w"] = (d["w"] - 0.01 * d["m"]).astype(np.float32)
+        if self.cfg.step_time_s:
+            time.sleep(self.cfg.step_time_s)
+        return state
+
+    def on_restore(self, state):
+        return state
+
+
+class _JaxLoop:
+    """A real jitted train step over a small dense transformer."""
+
+    def __init__(self, cfg: WorkerConfig):
+        self.cfg = cfg
+        import jax
+
+        from repro.models import ModelConfig, build
+        from repro.optim import get_optimizer
+
+        self.jax = jax
+        mc = ModelConfig(
+            name="coord-worker", family="dense", num_layers=2,
+            d_model=cfg.width, vocab_size=256, num_heads=4, num_kv_heads=2,
+            head_dim=max(cfg.width // 4, 8), d_ff=2 * cfg.width,
+            param_dtype="float32", compute_dtype="float32",
+        )
+        self.model = build(mc)
+        self.opt = get_optimizer("adamw", 1e-3)
+        self.vocab = mc.vocab_size
+
+        @jax.jit
+        def step_fn(dstate, batch):
+            (l, _), g = jax.value_and_grad(self.model.loss, has_aux=True)(
+                dstate["params"], batch
+            )
+            p2, o2 = self.opt.update(
+                g, dstate["opt"], dstate["params"], dstate["step"]
+            )
+            return {"params": p2, "opt": o2, "step": dstate["step"] + 1}, l
+
+        self.step_fn = step_fn
+
+    def _batch(self, step: int):
+        # deterministic function of (seed, step): identical on every host
+        # and identical after a restart — no iterator state to persist
+        import jax
+
+        k = jax.random.fold_in(jax.random.key(self.cfg.seed), step)
+        toks = jax.random.randint(k, (2, 32), 0, self.vocab)
+        return {"inputs": toks, "targets": toks}
+
+    def init(self):
+        import jax.numpy as jnp
+
+        params = self.model.init(self.jax.random.key(self.cfg.seed))
+        return {
+            "device": {
+                "params": params,
+                "opt": self.opt.init(params),
+                "step": jnp.zeros((), jnp.int32),
+            },
+            "host": {"step": np.int64(0)},
+        }
+
+    def step(self, state, step: int):
+        state["device"], _ = self.step_fn(state["device"], self._batch(step))
+        return state
+
+    def on_restore(self, state):
+        import jax
+        import jax.numpy as jnp
+
+        state["device"] = jax.tree.map(jnp.asarray, state["device"])
+        return state
+
+
+def _make_loop(cfg: WorkerConfig):
+    if cfg.loop == "numpy":
+        return _NumpyLoop(cfg)
+    if cfg.loop == "jax":
+        return _JaxLoop(cfg)
+    raise ValueError(f"unknown worker loop {cfg.loop!r}")
+
+
+# -- the worker process --------------------------------------------------------
+
+class _Heartbeat(threading.Thread):
+    def __init__(self, conn: Connection, cfg: WorkerConfig):
+        super().__init__(name=f"worker-{cfg.host}-heartbeat", daemon=True)
+        self.conn, self.cfg = conn, cfg
+        self.step = 0
+        self.paused = threading.Event()
+        self.stop = threading.Event()
+
+    def run(self) -> None:
+        while not self.stop.wait(self.cfg.heartbeat_s):
+            if self.paused.is_set():
+                continue
+            try:
+                self.conn.send(MSG_HEARTBEAT, host=self.cfg.host, step=self.step)
+            except OSError:
+                # coordinator kicked us (or died): this incarnation is over
+                os._exit(1)
+
+
+def _recv(conn: Connection, deadline: float) -> dict:
+    while True:
+        if time.monotonic() > deadline:
+            raise TimeoutError("worker gave up waiting for the coordinator")
+        try:
+            msg = conn.recv()
+        except (socket.timeout, TimeoutError):
+            continue
+        if msg is None:
+            raise ConnectionError("coordinator closed the connection")
+        return msg
+
+
+def worker_entry(cfg: WorkerConfig) -> int:
+    """Process entry point (multiprocessing spawn target)."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")  # simulated hosts are CPU
+    deadline = time.monotonic() + cfg.deadline_s
+    conn = connect((cfg.coord_host, cfg.coord_port), timeout=cfg.deadline_s)
+    conn.settimeout(cfg.sock_timeout_s)
+
+    loop = _make_loop(cfg)
+    store = ChunkStore(cfg.root)
+    restorer = RestoreManager(store)
+    ck = ForkedCheckpointer(
+        store,
+        codec=cfg.codec,
+        chunk_bytes=cfg.chunk_bytes,
+        incremental=cfg.incremental,
+        digest_on_device=False,
+        host=cfg.host,
+        backend=cfg.backend,
+        external_commit=True,
+        # PERSIST_DONE is this host's promise that its payload bytes are on
+        # stable storage; the coordinator's durable commit is meaningless if
+        # data-h*.bin still lives in the page cache
+        fsync=True,
+    )
+
+    # -- join + restore ------------------------------------------------------
+    conn.send(MSG_JOIN, host=cfg.host, pid=os.getpid(), restored_from=None)
+    welcome = _recv(conn, deadline)
+    assert welcome["type"] == MSG_WELCOME, welcome
+    # heartbeats must start *before* restore: a respawned worker restoring
+    # a large image for longer than the heartbeat timeout would otherwise
+    # be kicked as dead and crash-loop through its restart budget
+    hb = _Heartbeat(conn, cfg)
+    hb.start()
+    latest = welcome.get("latest_committed")
+    if latest is not None:
+        state, _ = restorer.restore(step=latest)
+        state = loop.on_restore(state)
+        start = int(np.asarray(state["host"]["step"]))
+        # tell the coordinator (and the round log) where we came back from
+        conn.send(MSG_JOIN, host=cfg.host, pid=os.getpid(),
+                  restored_from=latest)
+        _recv(conn, deadline)  # the re-JOIN's WELCOME
+    else:
+        state = loop.init()
+        start = int(np.asarray(state["host"]["step"]))
+    hb.step = start
+
+    step = start
+    try:
+        while step < cfg.total_steps:
+            step += 1
+            state = loop.step(state, step)
+            state["host"]["step"] = np.int64(step)
+            hb.step = step
+            boundary = cfg.ckpt_every > 0 and step % cfg.ckpt_every == 0
+
+            if cfg.stall_at_step == step and not cfg.restored:
+                hb.paused.set()          # heartbeat miss -> coordinator kicks
+                time.sleep(cfg.stall_s)
+                hb.paused.clear()
+            if cfg.kill_at_step == step and not cfg.restored:
+                if boundary:
+                    conn.send(MSG_READY, host=cfg.host, step=step)
+                    time.sleep(0.05)     # let READY land: death is mid-round
+                os._exit(EXIT_KILLED)
+
+            if boundary:
+                _checkpoint_round(conn, cfg, ck, state, step, deadline)
+
+        digest = state_digest(state["device"])
+        conn.send(MSG_FINISHED, host=cfg.host, step=step, digest=digest)
+        while True:
+            msg = _recv(conn, deadline)
+            if msg["type"] == MSG_SHUTDOWN:
+                break
+    finally:
+        hb.stop.set()
+        ck.close()
+        conn.close()
+    return 0
+
+
+def _checkpoint_round(
+    conn: Connection,
+    cfg: WorkerConfig,
+    ck: ForkedCheckpointer,
+    state,
+    step: int,
+    deadline: float,
+) -> None:
+    """Barrier at a boundary; persist on DRAIN; retry the round on ABORT."""
+    conn.send(MSG_READY, host=cfg.host, step=step)
+    while True:
+        msg = _recv(conn, deadline)
+        mtype, mstep = msg["type"], int(msg.get("step", -1))
+        if mstep != step and mtype != MSG_SHUTDOWN:
+            continue  # stale frame from a previous (aborted) round
+        if mtype == MSG_DRAIN:
+            _persist_shards(conn, cfg, ck, state, step)
+        elif mtype == MSG_COMMIT:
+            ck.commit_confirmed(step)
+            return
+        elif mtype == MSG_ABORT:
+            ck.commit_aborted(step)
+            conn.send(MSG_READY, host=cfg.host, step=step)
+        elif mtype == MSG_SHUTDOWN:
+            # coordinator is tearing the cluster down mid-round
+            raise SystemExit(0)
+
+
+def _persist_shards(conn, cfg: WorkerConfig, ck, state, step: int) -> None:
+    shard = shard_tree_for_host(state, cfg.host, cfg.n_hosts)
+    try:
+        r = ck.save_async(
+            step, shard, meta={"host": cfg.host, "n_hosts": cfg.n_hosts}
+        )
+        try:
+            r.wait(cfg.persist_timeout_s)
+        except TimeoutError:
+            # hung persist: die loudly, get respawned. Kill any forked
+            # persist child first — an orphan holding an fd on data-h*.bin
+            # could otherwise interleave writes with the respawned
+            # incarnation's retry of the same file.
+            ck.backend.kill_pending()
+            os._exit(EXIT_WATCHDOG)
+    except Exception as e:
+        conn.send(MSG_PERSIST_FAIL, host=cfg.host, step=step, error=str(e))
+        return
+    if cfg.die_after_persist_step == step and not cfg.restored:
+        os._exit(EXIT_MID_COMMIT)  # hostmeta is durable, ack never sent
+    if cfg.straggle_s and cfg.straggle_at_step in (None, step):
+        time.sleep(cfg.straggle_s)  # heartbeats continue: slow, not dead
+    conn.send(
+        MSG_PERSIST_DONE,
+        host=cfg.host,
+        step=step,
+        hostmeta=f"hostmeta-h{cfg.host:04d}.msgpack",
+        persist_s=r.persist_s,
+        blocking_s=r.blocking_s,
+        bytes_written=r.bytes_written,
+        chunks_written=r.chunks_written,
+        chunks_reused=r.chunks_reused,
+    )

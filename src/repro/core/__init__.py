@@ -1,5 +1,5 @@
 """CRUM core — the paper's contribution, adapted to TPU/JAX (see DESIGN.md)."""
-from repro.core.shadow import ShadowStateManager, ChunkState, SyncStats
+from repro.core.shadow import ShadowStateManager, ChunkState, SyncStats, HostShardView
 from repro.core.forked import (
     CheckpointResult,
     ForkedCheckpointer,
@@ -17,7 +17,7 @@ from repro.core.failure import HeartbeatMonitor, StragglerPolicy, PreemptionHand
 from repro.core.trainer import CheckpointedTrainer
 
 __all__ = [
-    "ShadowStateManager", "ChunkState", "SyncStats",
+    "ShadowStateManager", "ChunkState", "SyncStats", "HostShardView",
     "ForkedCheckpointer", "CheckpointResult",
     "PersistBackend", "PersistJob",
     "ThreadPersistBackend", "ForkPersistBackend",

@@ -37,6 +37,16 @@ class HeartbeatMonitor:
         with self._lock:
             self._last[host] = time.monotonic() if at is None else at
 
+    # dynamic membership: the cluster coordinator adds a host at JOIN and
+    # removes it when its connection drops (it re-adds on rejoin), so a
+    # dead host stops counting against liveness once it has been kicked.
+    def add_host(self, host: int) -> None:
+        self.beat(host)
+
+    def remove_host(self, host: int) -> None:
+        with self._lock:
+            self._last.pop(host, None)
+
     def dead_hosts(self, now: float | None = None) -> list[int]:
         now = time.monotonic() if now is None else now
         with self._lock:

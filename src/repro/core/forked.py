@@ -58,6 +58,7 @@ from repro.checkpoint.manifest import (
     ShardRecord,
     build_skeleton,
     commit_manifest,
+    write_hostmeta,
 )
 from repro.checkpoint.store import ChunkStore
 from repro.core.drain import drain
@@ -116,8 +117,9 @@ def _persist_image(
     counters: CheckpointResult,
     writer: "ChunkStore.Writer | None" = None,
     progress: Callable[[], None] | None = None,
+    external_commit: bool = False,
 ) -> tuple[Manifest, dict[tuple[str, int], list[int]]]:
-    """Compress + write one snapshot and commit its manifest.
+    """Compress + write one snapshot and commit (or stage) its manifest.
 
     Backend-agnostic phase 2: runs on a writer-pool thread (thread backend)
     or inside a forked child (fork backend). Mutates ``counters``
@@ -125,6 +127,11 @@ def _persist_image(
     committed manifest plus the per-stream chunk digests for shadow
     backfill. ``progress`` (if given) is called after each leaf so callers
     can stream counters while the image is still being written.
+
+    With ``external_commit`` the image is *staged*, not committed: the
+    host's manifest fragment lands as ``hostmeta-h*.msgpack`` and writing
+    MANIFEST + COMMIT belongs to the cluster coordinator once every
+    participant has acked (two-phase commit; see repro.coord).
     """
     prev_map: dict[tuple, Any] = {}
     if prev is not None:
@@ -179,7 +186,13 @@ def _persist_image(
         chunks_written=counters.chunks_written,
         chunks_reused=counters.chunks_reused,
     )
-    commit_manifest(store.root, manifest)
+    if external_commit:
+        write_hostmeta(store.root, step, host, manifest)
+    else:
+        # directory durability tracks the payload fsync knob: without the
+        # payload bytes being fsynced, fsyncing directory entries buys
+        # nothing, and with them it completes the power-failure story
+        commit_manifest(store.root, manifest, durable=fsync)
     return manifest, digests_out
 
 
@@ -204,6 +217,12 @@ class PersistBackend:
 
     def close(self) -> None:
         """Wait for in-flight persists and release backend resources."""
+
+    def kill_pending(self) -> None:
+        """Forcibly stop in-flight persists (no-op unless the backend owns
+        other processes). A worker about to hard-exit on a hung persist
+        calls this so no orphan keeps an fd on files a respawned
+        incarnation will truncate and rewrite."""
 
 
 class ThreadPersistBackend(PersistBackend):
@@ -242,6 +261,7 @@ class ThreadPersistBackend(PersistBackend):
                 prev=job.prev,
                 meta=job.meta,
                 counters=result,
+                external_commit=ck.external_commit,
             )
             for key, d in digests.items():
                 job.shadow.set_digests(key, d)
@@ -377,6 +397,7 @@ class ForkPersistBackend(PersistBackend):
                 counters=counters,
                 writer=writer,
                 progress=stream_counters,
+                external_commit=ck.external_commit,
             )
         except Exception as e:
             err = f"{type(e).__name__}: {e}"
@@ -450,6 +471,17 @@ class ForkPersistBackend(PersistBackend):
         for t in threads:
             t.join()
 
+    def kill_pending(self) -> None:
+        import signal
+
+        with self._cond:
+            pids = list(self._live)
+        for pid in pids:
+            try:
+                os.kill(pid, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+
 
 _PERSIST_BACKENDS: dict[str, Callable[["ForkedCheckpointer"], PersistBackend]] = {
     ThreadPersistBackend.name: ThreadPersistBackend,
@@ -500,6 +532,7 @@ class ForkedCheckpointer:
         host: int = 0,
         fsync: bool = False,
         backend: str = "thread",
+        external_commit: bool = False,
         timings: Timings | None = None,
     ):
         self.store = store
@@ -510,9 +543,17 @@ class ForkedCheckpointer:
         self.fsync = fsync
         self.io_workers = io_workers
         self.max_pending = max(1, int(max_pending))
+        # external_commit: persist writes hostmeta-h*.msgpack only; the
+        # cluster coordinator merges hostmetas and owns MANIFEST + COMMIT.
+        # Incremental deltas must then base on *cluster-committed* images
+        # only: a staged manifest becomes the delta base via
+        # commit_confirmed(), never implicitly (an aborted round's chunks
+        # may be overwritten by the retry).
+        self.external_commit = external_commit
         self.timings = timings or Timings()
         self._pending: list[CheckpointResult] = []
         self._prev_manifest: Manifest | None = None
+        self._staged: dict[int, Manifest] = {}  # step -> unconfirmed manifest
         self._lock = threading.Lock()
         self.backend = make_persist_backend(backend, self)
         self._buffers = [
@@ -604,8 +645,26 @@ class ForkedCheckpointer:
     # -- backend callbacks -------------------------------------------------------
     def _note_manifest(self, manifest: Manifest) -> None:
         with self._lock:
+            if self.external_commit:
+                self._staged[manifest.step] = manifest
+                return
             if self._prev_manifest is None or manifest.step >= self._prev_manifest.step:
                 self._prev_manifest = manifest
+
+    # -- external (coordinator-driven) commit ------------------------------------
+    def commit_confirmed(self, step: int) -> None:
+        """Coordinator committed ``step``: promote it to the delta base."""
+        with self._lock:
+            m = self._staged.pop(step, None)
+            if m is not None and (
+                self._prev_manifest is None or m.step >= self._prev_manifest.step
+            ):
+                self._prev_manifest = m
+
+    def commit_aborted(self, step: int) -> None:
+        """Coordinator aborted ``step``: its staged image is never a base."""
+        with self._lock:
+            self._staged.pop(step, None)
 
     def _finish_job(self, job: PersistJob) -> None:
         """Common phase-2 epilogue: timing, buffer release, completion."""

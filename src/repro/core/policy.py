@@ -55,6 +55,32 @@ class CheckpointPolicy:
         """Hook for SIGTERM/preemption notice: checkpoint at the next step."""
         self._preempt = True
 
+    def run_gc(self, store) -> list[int]:
+        """Scan, plan and collect under this policy; returns removed steps.
+
+        Tolerates a concurrent collector on the same root end to end: steps
+        that vanish between the scan and the manifest read are treated as
+        already collected (see load_manifest_if_committed), and the
+        store-side deletion skips steps a racing GC got to first.
+        """
+        from repro.checkpoint.manifest import (
+            committed_steps,
+            load_manifest_if_committed,
+        )
+
+        committed = committed_steps(store.root)
+        manifests = {
+            s: m
+            for s in committed
+            if (m := load_manifest_if_committed(store.root, s)) is not None
+        }
+        if not manifests:
+            return []
+        keep = self.gc_keep(sorted(manifests), manifests)
+        if set(keep) == set(manifests):
+            return []
+        return store.gc(keep)
+
     def gc_keep(self, committed: list[int], manifests: dict[int, Manifest]) -> list[int]:
         """Which steps to keep: keep_last + keep_every + delta closure."""
         keep: set[int] = set()

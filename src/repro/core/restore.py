@@ -144,10 +144,28 @@ class RestoreManager:
         ``as_tree()`` gives the pytree.
         """
         if step is None:
-            step = latest_committed_step(self.store.root)
-            if step is None:
-                raise FileNotFoundError(f"no committed checkpoint under {self.store.root}")
-        manifest = load_manifest(self.store.root, step)
+            # The pick/load pair races with GC: the step chosen as newest can
+            # be collected before its manifest read. Re-scan on miss instead
+            # of surfacing a spurious FileNotFoundError to the caller.
+            manifest = None
+            for _ in range(8):
+                step = latest_committed_step(self.store.root)
+                if step is None:
+                    raise FileNotFoundError(
+                        f"no committed checkpoint under {self.store.root}"
+                    )
+                try:
+                    manifest = load_manifest(self.store.root, step)
+                    break
+                except (FileNotFoundError, NotADirectoryError):
+                    continue
+            if manifest is None:
+                raise FileNotFoundError(
+                    f"committed checkpoints under {self.store.root} kept "
+                    "vanishing mid-read (GC racing restore)"
+                )
+        else:
+            manifest = load_manifest(self.store.root, step)
         if verify:
             from repro.checkpoint.sharded import verify_manifest
 

@@ -76,8 +76,49 @@ class SyncStats:
         self.leaves += other.leaves
 
 
+class HostShardView:
+    """A host-owned slice of a globally-sharded leaf (simulated multi-host).
+
+    In the cluster protocol every worker process holds the full replicated
+    state but *persists* only its assigned global index range — the same
+    ownership split ``addressable_shards``/``replica_id`` gives a real
+    multi-host jax.Array. ``shape``/``dtype`` describe the **global** leaf
+    (what the merged manifest records); ``data`` is this host's slice, or
+    None when the host owns nothing of the leaf (the owner's hostmeta
+    supplies it at merge time).
+    """
+
+    __slots__ = ("data", "start", "stop", "_shape", "_dtype")
+
+    def __init__(self, data, *, start=None, stop=None,
+                 global_shape=None, dtype=None):
+        self.data = None if data is None else np.ascontiguousarray(data)
+        self.start = list(start) if start is not None else None
+        self.stop = list(stop) if stop is not None else None
+        if global_shape is None:
+            if self.data is None:
+                raise ValueError("unowned HostShardView needs global_shape")
+            global_shape = self.data.shape
+        self._shape = tuple(int(d) for d in global_shape)
+        self._dtype = np.dtype(dtype if dtype is not None else self.data.dtype)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self._shape
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self._dtype
+
+
 def _owned_host_shards(leaf: Any):
     """(ordinal, start, stop, np_data) for shards this host owns."""
+    if isinstance(leaf, HostShardView):
+        if leaf.data is None:
+            return []
+        start = leaf.start if leaf.start is not None else [0] * leaf.data.ndim
+        stop = leaf.stop if leaf.stop is not None else list(leaf.data.shape)
+        return [(0, list(start), list(stop), leaf.data)]
     if isinstance(leaf, jax.Array):
         out = []
         ordinal = 0

@@ -115,15 +115,7 @@ class CheckpointedTrainer:
         return r
 
     def _gc(self) -> None:
-        from repro.checkpoint.manifest import committed_steps, load_manifest
-
-        committed = committed_steps(self.store.root)
-        if not committed:
-            return
-        manifests = {s: load_manifest(self.store.root, s) for s in committed}
-        keep = self.policy.gc_keep(committed, manifests)
-        if set(keep) != set(committed):
-            self.store.gc(keep)
+        self.policy.run_gc(self.store)
 
     # -- teardown ---------------------------------------------------------------
     def finish(self) -> list[CheckpointResult]:

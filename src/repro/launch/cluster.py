@@ -1,0 +1,144 @@
+"""Coordinated multi-process cluster driver with failure drills.
+
+Runs N simulated hosts as real OS processes under the CRUM coordinator:
+every host trains in lockstep, persists its shard of each checkpoint via
+its local forked checkpointer, and the coordinator two-phase-commits the
+merged image. Failure injections exercise the recovery paths end to end:
+
+    # 4 hosts; host 2 is killed at step 6, respawned, restored, and the
+    # cluster converges back to lockstep
+    PYTHONPATH=src python -m repro.launch.cluster \\
+        --hosts 4 --kill-host 2 --kill-at-step 6
+
+    # crash-mid-commit drill: host 1 dies after its hostmeta is written
+    # but before acking — the round aborts, the previous image stands
+    PYTHONPATH=src python -m repro.launch.cluster \\
+        --hosts 3 --die-after-persist-host 1 --die-after-persist-step 6
+
+    # a straggling host slows the round but never blocks correctness
+    PYTHONPATH=src python -m repro.launch.cluster \\
+        --hosts 4 --straggle-host 3 --straggle-s 1.0
+
+Exits non-zero if the cluster fails to converge (hosts finish with
+different state digests) or no checkpoint ever commits.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+
+from repro.checkpoint.codecs import DEFAULT_CODEC
+from repro.coord.supervisor import run_cluster
+from repro.core.forked import list_persist_backends
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("--hosts", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=9)
+    ap.add_argument("--ckpt-every", type=int, default=3)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint root (default: fresh temp dir)")
+    ap.add_argument("--backend", choices=list_persist_backends(),
+                    default="thread")
+    ap.add_argument("--loop", choices=["numpy", "jax"], default="numpy",
+                    help="worker train loop: numpy (fast) or jax (real model)")
+    ap.add_argument("--codec", default=DEFAULT_CODEC)
+    ap.add_argument("--width", type=int, default=64)
+    ap.add_argument("--chunk-bytes", type=int, default=1 << 16)
+    ap.add_argument("--keep-last", type=int, default=0,
+                    help="coordinator GC: keep last K committed steps (0=all)")
+    ap.add_argument("--step-time-s", type=float, default=0.0)
+    ap.add_argument("--heartbeat-timeout-s", type=float, default=10.0)
+    ap.add_argument("--round-timeout-s", type=float, default=120.0)
+    ap.add_argument("--deadline-s", type=float, default=600.0)
+    # failure drills
+    ap.add_argument("--kill-host", type=int, default=None)
+    ap.add_argument("--kill-at-step", type=int, default=None)
+    ap.add_argument("--die-after-persist-host", type=int, default=None)
+    ap.add_argument("--die-after-persist-step", type=int, default=None)
+    ap.add_argument("--straggle-host", type=int, default=None)
+    ap.add_argument("--straggle-s", type=float, default=0.0)
+    ap.add_argument("--stall-host", type=int, default=None)
+    ap.add_argument("--stall-s", type=float, default=0.0)
+    ap.add_argument("--stall-at-step", type=int, default=None)
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="keep aborted/partial step dirs for inspection")
+    args = ap.parse_args(argv)
+
+    root = args.ckpt_dir or tempfile.mkdtemp(prefix="crum-cluster-")
+    print(f"[cluster] hosts={args.hosts} steps={args.steps} "
+          f"ckpt_every={args.ckpt_every} backend={args.backend} "
+          f"loop={args.loop} root={root}", flush=True)
+
+    report = run_cluster(
+        root=root,
+        n_hosts=args.hosts,
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        backend=args.backend,
+        loop=args.loop,
+        codec=args.codec,
+        chunk_bytes=args.chunk_bytes,
+        width=args.width,
+        step_time_s=args.step_time_s,
+        keep_last=args.keep_last,
+        heartbeat_timeout_s=args.heartbeat_timeout_s,
+        round_timeout_s=args.round_timeout_s,
+        deadline_s=args.deadline_s,
+        kill_host=args.kill_host,
+        kill_at_step=args.kill_at_step,
+        die_after_persist_host=args.die_after_persist_host,
+        die_after_persist_step=args.die_after_persist_step,
+        straggle_host=args.straggle_host,
+        straggle_s=args.straggle_s,
+        stall_host=args.stall_host,
+        stall_s=args.stall_s,
+        stall_at_step=args.stall_at_step,
+        sweep=not args.no_sweep,
+    )
+
+    for r in report.rounds:
+        line = (f"[round] step={r.step} {r.status} "
+                f"participants={r.participants} acked={r.acked}")
+        if r.status == "committed":
+            line += (f" commit={r.commit_s*1e3:.1f}ms "
+                     f"round={r.round_s*1e3:.0f}ms "
+                     f"persist_max={r.persist_s_max*1e3:.0f}ms "
+                     f"bytes={r.bytes_written}")
+            if r.stragglers:
+                line += f" stragglers={r.stragglers}"
+        else:
+            line += f" reason={r.reason!r}"
+        print(line, flush=True)
+
+    lockstep = report.lockstep()
+    summary = {
+        "hosts": args.hosts,
+        "latest_committed": report.latest_committed,
+        "rounds_committed": len(report.committed),
+        "rounds_aborted": len(report.aborted),
+        "restarts": report.restarts,
+        "lockstep_converged": lockstep,
+        "final_digest": next(iter(report.final_digests.values()), None),
+        "log": report.log_path,
+    }
+    print(json.dumps(summary, indent=2))
+
+    if not lockstep:
+        print("[cluster] FAIL: hosts finished with diverged state",
+              file=sys.stderr)
+        return 1
+    if report.latest_committed is None and args.steps >= args.ckpt_every > 0:
+        print("[cluster] FAIL: no checkpoint round ever committed",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,130 @@
+"""Multi-process cluster drills: real worker processes under the
+coordinator + restart supervisor. Marked ``integration`` (spawns N OS
+processes per test; each imports jax)."""
+import json
+import os
+
+import pytest
+
+from repro.checkpoint.manifest import committed_steps, step_dir
+from repro.coord.supervisor import run_cluster
+
+pytestmark = pytest.mark.integration
+
+BACKENDS = ["thread"] + (["fork"] if hasattr(os, "fork") else [])
+
+
+def _read_log(path):
+    with open(path) as f:
+        return [json.loads(line) for line in f]
+
+
+def test_happy_path_two_hosts(tmp_path):
+    root = str(tmp_path / "cluster")
+    report = run_cluster(
+        root=root, n_hosts=2, total_steps=4, ckpt_every=2,
+        backend="thread", loop="numpy", deadline_s=180.0,
+    )
+    assert [r.step for r in report.committed] == [2, 4]
+    assert report.aborted == []
+    assert report.latest_committed == 4
+    assert report.lockstep()
+    assert committed_steps(root) == [2, 4]
+    # every committed step is a fully merged image: MANIFEST + COMMIT +
+    # one hostmeta and one payload file per host
+    for s in (2, 4):
+        names = set(os.listdir(step_dir(root, s)))
+        assert {"MANIFEST.msgpack", "COMMIT"} <= names
+        assert {"hostmeta-h0000.msgpack", "hostmeta-h0001.msgpack"} <= names
+        assert {"data-h0000.bin", "data-h0001.bin"} <= names
+
+
+def test_kill_and_respawn_converges(tmp_path):
+    """The acceptance drill: --hosts 4 --kill-host 2 --kill-at-step 6."""
+    root = str(tmp_path / "cluster")
+    report = run_cluster(
+        root=root, n_hosts=4, total_steps=9, ckpt_every=3,
+        backend="thread", loop="numpy", deadline_s=300.0,
+        kill_host=2, kill_at_step=6,
+    )
+    # the killed worker was respawned exactly once and the cluster converged
+    assert report.restarts[2] == 1
+    assert report.lockstep()
+    assert report.latest_committed == 9
+    # the round at the kill boundary aborted, then its retry committed
+    aborted = [r for r in report.aborted if r.step == 6]
+    assert aborted, f"no aborted round at step 6: {report.rounds}"
+    assert "host 2" in aborted[0].reason
+    assert [r.step for r in report.committed] == [3, 6, 9]
+    # the respawned incarnation restored from the last committed step
+    joins = [e for e in _read_log(report.log_path)
+             if e["event"] == "join" and e["host"] == 2
+             and e.get("restored_from") is not None]
+    assert joins and joins[-1]["restored_from"] == 3
+    # no partial/corrupt commits anywhere
+    assert committed_steps(root) == [3, 6, 9]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_crash_mid_commit_aborts_and_restores_previous(tmp_path, backend):
+    """Kill a worker after its hostmeta is written but before the ack:
+    the round must abort with no MANIFEST/COMMIT, and the respawned worker
+    must restore from the *previous* committed step. Over both persist
+    backends."""
+    root = str(tmp_path / f"cluster-{backend}")
+    report = run_cluster(
+        root=root, n_hosts=2, total_steps=6, ckpt_every=2,
+        backend=backend, loop="numpy", deadline_s=300.0,
+        die_after_persist_host=1, die_after_persist_step=4,
+        sweep=False,  # keep the aborted round's partial files visible
+    )
+    # the round at step 4 aborted first, then committed on retry
+    step4 = [r for r in report.rounds if r.step == 4]
+    assert [r.status for r in step4] == ["aborted", "committed"]
+    # mid-commit death: the dying host HAD persisted (hostmeta on disk)
+    # yet the decision never appeared until every participant acked
+    assert report.restarts[1] == 1
+    assert report.lockstep()
+    assert report.latest_committed == 6
+    assert committed_steps(root) == [2, 4, 6]
+    # the respawned worker restored from the previous committed step (2),
+    # not from the aborted round's staged image
+    joins = [e for e in _read_log(report.log_path)
+             if e["event"] == "join" and e["host"] == 1
+             and e.get("restored_from") is not None]
+    assert joins and joins[-1]["restored_from"] == 2
+    # the death event was journaled while step 2 was still the restore target
+    deaths = [e for e in _read_log(report.log_path) if e["event"] == "death"]
+    assert deaths and deaths[0]["latest_committed"] == 2
+
+
+def test_straggler_flagged_but_never_blocks_commit(tmp_path):
+    root = str(tmp_path / "cluster")
+    report = run_cluster(
+        root=root, n_hosts=3, total_steps=4, ckpt_every=2,
+        backend="thread", loop="numpy", deadline_s=300.0,
+        straggle_host=2, straggle_s=0.6,
+    )
+    assert report.aborted == []
+    assert report.latest_committed == 4
+    assert report.lockstep()
+    flagged = {h for r in report.committed for h in r.stragglers}
+    assert flagged == {2}
+    # the slow host inflates round time, not the commit critical section
+    assert all(r.round_s >= 0.6 for r in report.committed)
+    assert all(r.commit_s < 0.6 for r in report.committed)
+
+
+def test_sweep_removes_aborted_partials(tmp_path):
+    root = str(tmp_path / "cluster")
+    report = run_cluster(
+        root=root, n_hosts=2, total_steps=4, ckpt_every=2,
+        backend="thread", loop="numpy", deadline_s=300.0,
+        kill_host=1, kill_at_step=2,
+    )
+    assert report.lockstep()
+    # all remaining step dirs are committed ones (partials swept at the end)
+    for name in os.listdir(root):
+        d = os.path.join(root, name)
+        if name.startswith("step_") and os.path.isdir(d):
+            assert os.path.exists(os.path.join(d, "COMMIT"))

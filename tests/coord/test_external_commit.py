@@ -1,0 +1,178 @@
+"""External-commit mode + hostmeta merge: the two-phase commit substrate.
+
+Each simulated host persists only its HostShardView slices (either persist
+backend); nothing is visible until the coordinator-side merge writes
+MANIFEST + COMMIT; the merged image restores bit-identically.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manifest import (
+    committed_steps,
+    hostmeta_path,
+    list_hostmetas,
+    load_hostmeta,
+    merge_hostmetas,
+    commit_manifest,
+    step_dir,
+)
+from repro.checkpoint.store import ChunkStore
+from repro.core.forked import ForkedCheckpointer
+from repro.core.restore import RestoreManager
+from repro.coord.worker import shard_tree_for_host, state_digest
+
+BACKENDS = ["thread"] + (["fork"] if hasattr(os, "fork") else [])
+
+
+def _state(seed=0, rows=8, cols=16):
+    rng = np.random.default_rng(seed)
+    return {
+        "device": {
+            "w": rng.standard_normal((rows, cols)).astype(np.float32),
+            "b": rng.standard_normal((cols,)).astype(np.float32),
+        },
+        "host": {"step": np.int64(5)},
+    }
+
+
+def _persist_all_hosts(root, state, step, n_hosts, backend, prev_confirm=None):
+    cks = []
+    for h in range(n_hosts):
+        ck = ForkedCheckpointer(
+            ChunkStore(root), chunk_bytes=1 << 8, host=h,
+            backend=backend, external_commit=True, digest_on_device=False,
+        )
+        if prev_confirm is not None:
+            ck.commit_confirmed(prev_confirm)
+        shard = shard_tree_for_host(state, h, n_hosts)
+        ck.save_async(step, shard).wait(60)
+        cks.append(ck)
+    return cks
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_external_commit_writes_hostmeta_not_commit(tmp_path, backend):
+    root = str(tmp_path / "ck")
+    state = _state()
+    cks = _persist_all_hosts(root, state, 5, 2, backend)
+    d = step_dir(root, 5)
+    # staged, not committed: hostmetas + payloads only
+    assert sorted(list_hostmetas(root, 5)) == [0, 1]
+    assert not os.path.exists(os.path.join(d, "COMMIT"))
+    assert not os.path.exists(os.path.join(d, "MANIFEST.msgpack"))
+    assert committed_steps(root) == []
+    # each hostmeta holds only its host's shards, global shapes throughout
+    hm0 = load_hostmeta(root, 5, 0)
+    assert hm0.leaves["device/w"].shape == [8, 16]
+    (s0,) = hm0.leaves["device/w"].shards
+    assert (s0.start, s0.stop) == ([0, 0], [4, 16])
+    for ck in cks:
+        ck.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n_hosts", [1, 2, 3])
+def test_merge_commit_restore_roundtrip(tmp_path, backend, n_hosts):
+    root = str(tmp_path / "ck")
+    state = _state(rows=9)  # uneven split across 3 hosts
+    cks = _persist_all_hosts(root, state, 5, n_hosts, backend)
+    manifest = merge_hostmetas(root, 5)
+    commit_manifest(root, manifest)
+    assert committed_steps(root) == [5]
+
+    restored, m = RestoreManager(ChunkStore(root)).restore()
+    assert m.step == 5
+    np.testing.assert_array_equal(restored["device"]["w"], state["device"]["w"])
+    np.testing.assert_array_equal(restored["device"]["b"], state["device"]["b"])
+    assert int(restored["host"]["step"]) == 5
+    assert state_digest(restored) == state_digest(state)
+    # merged meta reports cluster-wide totals, not one host's identity
+    assert "host" not in m.meta
+    assert sorted(m.meta["hosts"]) == list(range(n_hosts))
+    assert m.meta["chunks_written"] == sum(
+        v["chunks_written"] for v in m.meta["hosts"].values()
+    )
+    assert m.meta["chunks_written"] > 0
+    for ck in cks:
+        ck.close()
+
+
+def test_merge_rejects_shape_disagreement(tmp_path):
+    root = str(tmp_path / "ck")
+    a, b = _state(rows=8), _state(rows=12)
+    ck0 = _persist_all_hosts(root, a, 1, 2, "thread")[0]
+    # host 1 checkpoints a different-shaped state: merging must refuse
+    ck1 = ForkedCheckpointer(
+        ChunkStore(root), chunk_bytes=1 << 8, host=1,
+        backend="thread", external_commit=True, digest_on_device=False,
+    )
+    ck1.save_async(1, shard_tree_for_host(b, 1, 2)).wait(60)
+    with pytest.raises(ValueError, match="disagrees"):
+        merge_hostmetas(root, 1)
+    ck0.close()
+    ck1.close()
+
+
+def test_merge_missing_hostmetas_raises(tmp_path):
+    root = str(tmp_path / "ck")
+    os.makedirs(root)
+    with pytest.raises(FileNotFoundError):
+        merge_hostmetas(root, 7)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_confirmed_commit_enables_delta_but_abort_does_not(tmp_path, backend):
+    """Incremental deltas may only base on cluster-committed rounds."""
+    root = str(tmp_path / "ck")
+    state = _state()
+    ck = ForkedCheckpointer(
+        ChunkStore(root), chunk_bytes=1 << 8, host=0, backend=backend,
+        external_commit=True, incremental=True, digest_on_device=False,
+    )
+    shard = shard_tree_for_host(state, 0, 1)
+
+    r1 = ck.save_async(1, shard)
+    r1.wait(60)
+    assert r1.chunks_reused == 0
+    # round aborted: staged manifest must NOT become the delta base
+    ck.commit_aborted(1)
+    r2 = ck.save_async(2, shard)
+    r2.wait(60)
+    assert r2.chunks_reused == 0
+
+    # round committed: now identical chunks are reused as delta references
+    commit_manifest(root, merge_hostmetas(root, 2))
+    ck.commit_confirmed(2)
+    r3 = ck.save_async(3, shard)
+    r3.wait(60)
+    assert r3.chunks_reused > 0
+    assert r3.chunks_written == 0
+    ck.close()
+
+
+def test_unowned_leaf_persists_nothing_but_merges_whole(tmp_path):
+    """Scalar/small leaves are whole-owned by one host; the merge still
+    reconstructs the full tree for every restore target."""
+    root = str(tmp_path / "ck")
+    state = {"w": np.arange(8, dtype=np.float32), "s": np.float32(3.5)}
+    cks = _persist_all_hosts(root, state, 2, 2, "thread")
+    # exactly one hostmeta carries the scalar
+    carriers = [
+        h for h in (0, 1)
+        if load_hostmeta(root, 2, h).leaves["s"].shards
+    ]
+    assert len(carriers) == 1
+    commit_manifest(root, merge_hostmetas(root, 2))
+    restored, _ = RestoreManager(ChunkStore(root)).restore()
+    np.testing.assert_array_equal(restored["w"], state["w"])
+    assert float(restored["s"]) == 3.5
+    for ck in cks:
+        ck.close()
+
+
+def test_hostmeta_path_layout(tmp_path):
+    assert hostmeta_path(str(tmp_path), 42, 7).endswith(
+        os.path.join("step_00000042", "hostmeta-h0007.msgpack")
+    )

@@ -1,0 +1,122 @@
+"""Wire protocol: framing, EOF semantics, concurrent sends."""
+import socket
+import threading
+
+import pytest
+
+from repro.coord.protocol import (
+    MSG_HEARTBEAT,
+    Connection,
+    recv_frame,
+    send_frame,
+)
+
+
+def _pair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+def test_frame_roundtrip():
+    a, b = _pair()
+    msg = {"type": "JOIN", "host": 3, "pid": 123, "restored_from": None,
+           "blob": b"\x00\xff", "f": 1.5}
+    send_frame(a, msg)
+    out = recv_frame(b)
+    assert out == msg
+    a.close()
+    b.close()
+
+
+def test_multiple_frames_in_order():
+    a, b = _pair()
+    for i in range(10):
+        send_frame(a, {"i": i})
+    got = [recv_frame(b)["i"] for _ in range(10)]
+    assert got == list(range(10))
+    a.close()
+    b.close()
+
+
+def test_eof_returns_none():
+    a, b = _pair()
+    send_frame(a, {"x": 1})
+    a.close()
+    assert recv_frame(b) == {"x": 1}
+    assert recv_frame(b) is None  # clean EOF, not an exception
+    b.close()
+
+
+def test_truncated_frame_is_eof():
+    a, b = _pair()
+    import struct
+
+    a.sendall(struct.pack("<I", 100) + b"short")  # dies mid-message
+    a.close()
+    assert recv_frame(b) is None
+    b.close()
+
+
+def test_corrupt_length_header_raises():
+    a, b = _pair()
+    import struct
+
+    a.sendall(struct.pack("<I", 1 << 30))
+    with pytest.raises(ValueError):
+        recv_frame(b)
+    a.close()
+    b.close()
+
+
+def test_connection_recv_keeps_progress_across_timeouts():
+    """A frame whose bytes straddle a socket timeout must not be torn:
+    workers poll with short timeouts and a half-read header would desync
+    the framed stream."""
+    import struct
+
+    import msgpack
+
+    a, b = _pair()
+    b.settimeout(0.05)
+    conn = Connection(b)
+    payload = msgpack.packb({"type": "DRAIN", "step": 6}, use_bin_type=True)
+    # drip-feed: header alone, then partial payload, then the rest
+    a.sendall(struct.pack("<I", len(payload)))
+    with pytest.raises((TimeoutError, socket.timeout)):
+        conn.recv()
+    a.sendall(payload[:3])
+    with pytest.raises((TimeoutError, socket.timeout)):
+        conn.recv()
+    a.sendall(payload[3:])
+    assert conn.recv() == {"type": "DRAIN", "step": 6}
+    # the stream is still in sync for the next frame
+    send_frame(a, {"type": "COMMIT", "step": 6})
+    assert conn.recv() == {"type": "COMMIT", "step": 6}
+    a.close()
+    b.close()
+
+
+def test_connection_concurrent_sends_do_not_interleave():
+    a, b = _pair()
+    conn = Connection(a)
+    n_threads, per_thread = 4, 25
+
+    def sender(tid):
+        for i in range(per_thread):
+            conn.send(MSG_HEARTBEAT, host=tid, step=i)
+
+    threads = [threading.Thread(target=sender, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    seen = {}
+    for _ in range(n_threads * per_thread):
+        msg = recv_frame(b)
+        assert msg["type"] == MSG_HEARTBEAT
+        # per-sender messages must arrive whole and in per-thread order
+        last = seen.get(msg["host"], -1)
+        assert msg["step"] == last + 1
+        seen[msg["host"]] = msg["step"]
+    conn.close()
+    b.close()
