@@ -17,9 +17,16 @@ from repro.models import ModelConfig, build
 from repro.optim import get_optimizer
 
 
+#: every row() call lands here too, so harness runs can dump the whole
+#: session as structured JSON (benchmarks.run --json FILE) — the CSV on
+#: stdout stays byte-identical for eyeballs and existing tooling
+ROWS: list[dict] = []
+
+
 def row(name: str, us_per_call: float, **derived) -> str:
     d = ";".join(f"{k}={v}" for k, v in derived.items())
     line = f"{name},{us_per_call:.1f},{d}"
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1), **derived})
     print(line, flush=True)
     return line
 

@@ -1,19 +1,29 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run            # all
-    PYTHONPATH=src python -m benchmarks.run overhead   # one
+    PYTHONPATH=src python -m benchmarks.run                 # all
+    PYTHONPATH=src python -m benchmarks.run overhead        # one
+    PYTHONPATH=src python -m benchmarks.run --json OUT.json # + structured dump
 
-Output: ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+Output: ``name,us_per_call,derived`` CSV rows on stdout (see
+benchmarks/common.py); ``--json`` additionally writes the same rows as a
+JSON array (one object per row, derived pairs as real fields) so perf
+trajectories can be tracked by machines, not just eyeballs — CI uploads
+it as the ``BENCH_results.json`` artifact.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import sys
 
 from benchmarks import ckpt_restart, coord_commit, incremental, overhead, roofline
-from benchmarks import strategies_real, strategies_synthetic
+from benchmarks import proxy_overhead, strategies_real, strategies_synthetic
+from benchmarks.common import ROWS
 
 ALL = {
     "overhead": overhead.run,                    # Fig. 4
+    "proxy_overhead": proxy_overhead.run,        # Fig. 4 (proxy runner) + kill-replay
     "ckpt_restart": ckpt_restart.run,            # Fig. 5
     "strategies_synthetic": strategies_synthetic.run,  # Table 2
     "strategies_real": strategies_real.run,      # Table 3
@@ -23,12 +33,41 @@ ALL = {
 }
 
 
-def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*",
+                    help=f"benchmarks to run (default: all of {sorted(ALL)})")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write rows as structured JSON to FILE")
+    args = ap.parse_args(argv)
+
+    unknown = [n for n in args.names if n not in ALL]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; have {sorted(ALL)}")
+    names = args.names or list(ALL)
     print("name,us_per_call,derived")
+    failures = []
     for n in names:
-        ALL[n]()
+        try:
+            ALL[n]()
+        except Exception as e:  # one broken bench must not lose the others' rows
+            failures.append(n)
+            print(f"[bench] {n} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr, flush=True)
+    if args.json:
+        doc = {
+            "schema": "crum-bench-rows/1",
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "benchmarks": names,
+            "failed": failures,
+            "rows": ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"[bench] wrote {len(ROWS)} rows to {args.json}", flush=True)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -22,6 +22,7 @@ from multiprocessing.connection import wait as sentinel_wait
 
 from repro.coord.coordinator import Coordinator, RoundRecord
 from repro.coord.worker import WorkerConfig, worker_entry
+from repro.core.failure import RestartBudget
 
 
 @dataclass
@@ -64,8 +65,14 @@ class ClusterSupervisor:
         self.max_restarts = max_restarts
         self.ctx = mp.get_context(mp_context)
         self.procs: dict[int, mp.Process] = {}
-        self.restarts: dict[int, int] = {h: 0 for h in self.cfgs}
+        self.budgets: dict[int, RestartBudget] = {
+            h: RestartBudget(max_restarts, what=f"host {h}") for h in self.cfgs
+        }
         self.exited_clean: set[int] = set()
+
+    @property
+    def restarts(self) -> dict[int, int]:
+        return {h: b.count for h, b in self.budgets.items()}
 
     def _spawn(self, cfg: WorkerConfig) -> None:
         p = self.ctx.Process(
@@ -112,12 +119,7 @@ class ClusterSupervisor:
                 if p.exitcode == 0:
                     self.exited_clean.add(host)
                     continue
-                self.restarts[host] += 1
-                if self.restarts[host] > self.max_restarts:
-                    raise RuntimeError(
-                        f"host {host} died {self.restarts[host]} times "
-                        f"(last exit code {p.exitcode}); giving up"
-                    )
+                self.budgets[host].spend(f"last exit code {p.exitcode}")
                 cfg = self.respawn_cfg(self.cfgs[host])
                 self.cfgs[host] = cfg
                 self._spawn(cfg)
@@ -138,6 +140,7 @@ def run_cluster(
     ckpt_every: int,
     backend: str = "thread",
     loop: str = "numpy",
+    device_runner: str = "inline",
     codec: str | None = None,
     chunk_bytes: int = 1 << 16,
     width: int = 64,
@@ -176,7 +179,8 @@ def run_cluster(
         kw = dict(
             host=h, n_hosts=n_hosts, coord_host=host_addr, coord_port=port,
             root=root, total_steps=total_steps, ckpt_every=ckpt_every,
-            backend=backend, loop=loop, chunk_bytes=chunk_bytes, width=width,
+            backend=backend, loop=loop, device_runner=device_runner,
+            chunk_bytes=chunk_bytes, width=width,
             step_time_s=step_time_s, deadline_s=deadline_s,
         )
         if codec is not None:

@@ -22,7 +22,6 @@ Failure injection (for drills, tests and benchmarks):
 """
 from __future__ import annotations
 
-import hashlib
 import os
 import socket
 import time
@@ -52,7 +51,7 @@ from repro.coord.protocol import (
     Connection,
     connect,
 )
-from repro.utils.tree import flatten_with_paths, unflatten_from_paths
+from repro.utils.tree import flatten_with_paths, tree_digest, unflatten_from_paths
 
 EXIT_KILLED = 9          # kill_at_step drill
 EXIT_MID_COMMIT = 23     # die_after_persist_step drill
@@ -73,6 +72,7 @@ class WorkerConfig:
     chunk_bytes: int = 1 << 16
     incremental: bool = True
     loop: str = "numpy"            # "numpy" (fast, tests) | "jax" (real model)
+    device_runner: str = "inline"  # "inline" | "proxy" (per-host proxy process)
     width: int = 64                # numpy state width / jax d_model
     step_time_s: float = 0.0       # simulated compute per train step
     heartbeat_s: float = 0.5
@@ -133,119 +133,116 @@ def shard_tree_for_host(state, host: int, n_hosts: int):
 
 def state_digest(state) -> str:
     """Order-stable content hash for lockstep-convergence assertions."""
-    flat, _ = flatten_with_paths(state)
-    h = hashlib.sha256()
-    for path in sorted(flat):
-        h.update(path.encode())
-        h.update(np.ascontiguousarray(np.asarray(flat[path])).tobytes())
-    return h.hexdigest()[:16]
+    return tree_digest(state)
 
 
 # -- training loops ------------------------------------------------------------
+#
+# Device math lives in repro.proxy.programs (one definition of "a step",
+# shared by inline workers, proxied workers and the proxy benchmarks); the
+# loop classes only adapt a program to the worker's {"device", "host"}
+# state layout and its restore/materialize hooks.
 
-class _NumpyLoop:
-    """Deterministic momentum-SGD-shaped update; replicated lockstep."""
+def _program_spec(cfg: WorkerConfig) -> dict:
+    if cfg.loop == "numpy":
+        return {
+            "name": "numpy_sgd",
+            "rows": max(cfg.n_hosts, 2) * 8,
+            "width": cfg.width,
+            "seed": cfg.seed,
+            "step_time_s": cfg.step_time_s,
+        }
+    if cfg.loop == "jax":
+        return {"name": "jax_tiny", "width": cfg.width, "seed": cfg.seed}
+    raise ValueError(f"unknown worker loop {cfg.loop!r}")
+
+
+class _InlineLoop:
+    """Run the step program in-process (the pre-proxy execution model)."""
 
     def __init__(self, cfg: WorkerConfig):
+        from repro.proxy.programs import make_program
+
         self.cfg = cfg
+        self.program = make_program(_program_spec(cfg))
 
     def init(self):
-        rng = np.random.default_rng(self.cfg.seed)
-        shape = (max(self.cfg.n_hosts, 2) * 8, self.cfg.width)
         return {
-            "device": {
-                "w": rng.standard_normal(shape).astype(np.float32),
-                "m": np.zeros(shape, np.float32),
-            },
+            "device": self.program.init_state(),
             "host": {"step": np.int64(0)},
         }
 
     def step(self, state, step: int):
-        d = state["device"]
-        g = np.sin(d["w"] * 0.05 + np.float32(step) * 0.001, dtype=np.float32)
-        d["m"] = (0.9 * d["m"] + g).astype(np.float32)
-        d["w"] = (d["w"] - 0.01 * d["m"]).astype(np.float32)
-        if self.cfg.step_time_s:
-            time.sleep(self.cfg.step_time_s)
+        state["device"], _ = self.program.step(state["device"], step)
         return state
 
     def on_restore(self, state):
+        state["device"] = self.program.on_restore(state["device"])
         return state
 
+    def materialize(self, state):
+        """Inline state is always current; nothing to pull."""
+        return state
 
-class _JaxLoop:
-    """A real jitted train step over a small dense transformer."""
+    def close(self):
+        pass
+
+
+class _ProxyLoop:
+    """Host the step program in a supervised device-proxy process.
+
+    The worker stays device-clean: ``state["device"]`` is a host mirror
+    refreshed by ``materialize()`` at persist boundaries and FINISHED; the
+    proxy is respawned + replayed transparently if it dies mid-round.
+    """
 
     def __init__(self, cfg: WorkerConfig):
+        from repro.proxy import ProxyRunner
+
         self.cfg = cfg
-        import jax
-
-        from repro.models import ModelConfig, build
-        from repro.optim import get_optimizer
-
-        self.jax = jax
-        mc = ModelConfig(
-            name="coord-worker", family="dense", num_layers=2,
-            d_model=cfg.width, vocab_size=256, num_heads=4, num_kv_heads=2,
-            head_dim=max(cfg.width // 4, 8), d_ff=2 * cfg.width,
-            param_dtype="float32", compute_dtype="float32",
+        self.spec = _program_spec(cfg)
+        # segments live under the cluster root, not /dev/shm: a drill that
+        # hard-exits this worker (os._exit) skips close(), and files under
+        # the root are reclaimed with it — a respawned incarnation reuses
+        # the same directory instead of leaking RAM-backed segments
+        workdir = os.path.join(cfg.root, f"proxy-h{cfg.host:04d}")
+        os.makedirs(workdir, exist_ok=True)
+        self.runner = ProxyRunner(
+            self.spec,
+            workdir=workdir,
+            chunk_bytes=cfg.chunk_bytes,
+            sync_timeout_s=cfg.persist_timeout_s,
         )
-        self.model = build(mc)
-        self.opt = get_optimizer("adamw", 1e-3)
-        self.vocab = mc.vocab_size
-
-        @jax.jit
-        def step_fn(dstate, batch):
-            (l, _), g = jax.value_and_grad(self.model.loss, has_aux=True)(
-                dstate["params"], batch
-            )
-            p2, o2 = self.opt.update(
-                g, dstate["opt"], dstate["params"], dstate["step"]
-            )
-            return {"params": p2, "opt": o2, "step": dstate["step"] + 1}, l
-
-        self.step_fn = step_fn
-
-    def _batch(self, step: int):
-        # deterministic function of (seed, step): identical on every host
-        # and identical after a restart — no iterator state to persist
-        import jax
-
-        k = jax.random.fold_in(jax.random.key(self.cfg.seed), step)
-        toks = jax.random.randint(k, (2, 32), 0, self.vocab)
-        return {"inputs": toks, "targets": toks}
 
     def init(self):
-        import jax.numpy as jnp
-
-        params = self.model.init(self.jax.random.key(self.cfg.seed))
-        return {
-            "device": {
-                "params": params,
-                "opt": self.opt.init(params),
-                "step": jnp.zeros((), jnp.int32),
-            },
-            "host": {"step": np.int64(0)},
-        }
+        dstate = self.runner.start()
+        return {"device": dstate, "host": {"step": np.int64(0)}}
 
     def step(self, state, step: int):
-        state["device"], _ = self.step_fn(state["device"], self._batch(step))
-        return state
+        self.runner.step(step)
+        return state  # mirror is stale until the next materialize()
 
     def on_restore(self, state):
-        import jax
-        import jax.numpy as jnp
-
-        state["device"] = jax.tree.map(jnp.asarray, state["device"])
+        self.runner.start(
+            device_state=state["device"],
+            base_step=int(np.asarray(state["host"]["step"])),
+        )
         return state
+
+    def materialize(self, state):
+        state["device"], _info = self.runner.sync_state()
+        return state
+
+    def close(self):
+        self.runner.close()
 
 
 def _make_loop(cfg: WorkerConfig):
-    if cfg.loop == "numpy":
-        return _NumpyLoop(cfg)
-    if cfg.loop == "jax":
-        return _JaxLoop(cfg)
-    raise ValueError(f"unknown worker loop {cfg.loop!r}")
+    if cfg.device_runner == "proxy":
+        return _ProxyLoop(cfg)
+    if cfg.device_runner != "inline":
+        raise ValueError(f"unknown device_runner {cfg.device_runner!r}")
+    return _InlineLoop(cfg)
 
 
 # -- the worker process --------------------------------------------------------
@@ -350,8 +347,12 @@ def worker_entry(cfg: WorkerConfig) -> int:
                 os._exit(EXIT_KILLED)
 
             if boundary:
+                # proxy runner: pull the device mirror current before the
+                # barrier — the persisted shards must reflect this step
+                state = loop.materialize(state)
                 _checkpoint_round(conn, cfg, ck, state, step, deadline)
 
+        state = loop.materialize(state)
         digest = state_digest(state["device"])
         conn.send(MSG_FINISHED, host=cfg.host, step=step, digest=digest)
         while True:
@@ -361,6 +362,7 @@ def worker_entry(cfg: WorkerConfig) -> int:
     finally:
         hb.stop.set()
         ck.close()
+        loop.close()
         conn.close()
     return 0
 

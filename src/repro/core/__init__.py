@@ -1,5 +1,11 @@
 """CRUM core — the paper's contribution, adapted to TPU/JAX (see DESIGN.md)."""
-from repro.core.shadow import ShadowStateManager, ChunkState, SyncStats, HostShardView
+from repro.core.shadow import (
+    ShadowStateManager,
+    ChunkState,
+    SyncStats,
+    UploadStats,
+    HostShardView,
+)
 from repro.core.forked import (
     CheckpointResult,
     ForkedCheckpointer,
@@ -13,17 +19,24 @@ from repro.core.forked import (
 from repro.core.restore import RestoreManager, LazyLeaves
 from repro.core.drain import drain
 from repro.core.policy import CheckpointPolicy, referenced_steps
-from repro.core.failure import HeartbeatMonitor, StragglerPolicy, PreemptionHandler
+from repro.core.failure import (
+    HeartbeatMonitor,
+    RestartBudget,
+    StragglerPolicy,
+    PreemptionHandler,
+)
 from repro.core.trainer import CheckpointedTrainer
 
 __all__ = [
-    "ShadowStateManager", "ChunkState", "SyncStats", "HostShardView",
+    "ShadowStateManager", "ChunkState", "SyncStats", "UploadStats",
+    "HostShardView",
     "ForkedCheckpointer", "CheckpointResult",
     "PersistBackend", "PersistJob",
     "ThreadPersistBackend", "ForkPersistBackend",
     "list_persist_backends", "register_persist_backend",
     "RestoreManager", "LazyLeaves", "drain",
     "CheckpointPolicy", "referenced_steps",
-    "HeartbeatMonitor", "StragglerPolicy", "PreemptionHandler",
+    "HeartbeatMonitor", "RestartBudget", "StragglerPolicy",
+    "PreemptionHandler",
     "CheckpointedTrainer",
 ]

@@ -17,7 +17,15 @@ from repro.utils.timing import Timer
 
 
 def drain(state: Any, *, barrier: bool = True) -> float:
-    """Returns seconds spent draining."""
+    """Returns seconds spent draining.
+
+    The device-proxy runner has its own pipeline of the same shape —
+    forwarded STEP calls the app issued ahead of the proxy — and its own
+    flush (``repro.proxy.ProxyRunner.drain`` / the SYNC barrier), which
+    the trainer runs *before* handing the host mirror to this path: the
+    ordering CRUM imposes on pipelined proxy calls before
+    cudaDeviceSynchronize.
+    """
     with Timer() as t:
         jax.block_until_ready(state)
         if barrier and jax.process_count() > 1:  # pragma: no cover (multi-host)

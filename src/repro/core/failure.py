@@ -27,6 +27,34 @@ import time
 from dataclasses import dataclass, field
 
 
+class RestartBudget:
+    """How many times one supervised process may die before we give up.
+
+    Shared by the cluster supervisor (per-host worker respawns) and the
+    device-proxy supervisor (proxy respawn + API-log replay): both convert
+    "died again" into either a respawn or a loud, attributable failure.
+    """
+
+    def __init__(self, max_restarts: int = 3, *, what: str = "process"):
+        self.max_restarts = int(max_restarts)
+        self.what = what
+        self.count = 0
+
+    def spend(self, detail: str = "") -> int:
+        """Record one death; raises once the budget is exhausted."""
+        self.count += 1
+        if self.count > self.max_restarts:
+            suffix = f" ({detail})" if detail else ""
+            raise RuntimeError(
+                f"{self.what} died {self.count} times{suffix}; giving up"
+            )
+        return self.count
+
+    @property
+    def remaining(self) -> int:
+        return max(0, self.max_restarts - self.count)
+
+
 class HeartbeatMonitor:
     def __init__(self, hosts: list[int], *, timeout_s: float = 30.0):
         self.timeout_s = timeout_s

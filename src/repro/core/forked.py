@@ -608,6 +608,9 @@ class ForkedCheckpointer:
             prev=self._prev_manifest if self.incremental else None,
             meta=meta or {},
         )
+        # phase 2 (possibly a fork child) reads this buffer generation: a
+        # re-registration must retire, not release, it until the job is done
+        shadow.pin()
         self._reap()
         with self._lock:
             self._pending.append(result)
@@ -617,6 +620,7 @@ class ForkedCheckpointer:
             # never strand the claimed buffer or leave a result that can't
             # complete (close()/wait_all() would hang on it)
             result.error = f"persist submit failed: {type(e).__name__}: {e}"
+            shadow.unpin()
             self._release_buffer(buf_i)
             result.done.set()
             raise
@@ -669,6 +673,7 @@ class ForkedCheckpointer:
     def _finish_job(self, job: PersistJob) -> None:
         """Common phase-2 epilogue: timing, buffer release, completion."""
         self.timings.add("ckpt/persist", job.result.persist_s)
+        job.shadow.unpin()
         self._release_buffer(job.buf_index)
         job.result.done.set()
 

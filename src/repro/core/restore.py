@@ -74,17 +74,37 @@ class LazyLeaves:
         return leaf
 
     def __getitem__(self, path: str) -> Any:
+        # claim-under-lock: concurrent first accesses to the same leaf must
+        # materialize it exactly once. The first claimant registers a future
+        # (so peers wait on it) and runs the read itself; peers — and reads
+        # already prefetched by the pool — block on fut.result().
+        owner = False
         with self._lock:
             if path in self._cache:
                 return self._cache[path]
-            fut = self._futures.pop(path, None)
-        if fut is None:
-            self.loads += 1
-            leaf = self._materialize(path)
-        else:
+            fut = self._futures.get(path)
+            if fut is None:
+                fut = cf.Future()
+                self._futures[path] = fut
+                owner = True
+                self.loads += 1
+        if owner:
+            try:
+                fut.set_result(self._materialize(path))
+            except BaseException as e:
+                fut.set_exception(e)
+        try:
             leaf = fut.result()
+        except BaseException:
+            # a failed read (owner or pool prefetch) must not poison the
+            # leaf: drop the future so the next access retries materialize
+            with self._lock:
+                if self._futures.get(path) is fut:
+                    self._futures.pop(path)
+            raise
         with self._lock:
             self._cache[path] = leaf
+            self._futures.pop(path, None)
         self._read_ahead(path)
         return leaf
 
@@ -188,4 +208,35 @@ class RestoreManager:
                 for path, lrec in manifest.leaves.items()
             }
             state = skeleton_fill(manifest.skeleton, leaves)
+        return state, manifest
+
+    # -- proxy restart (paper §3.4: replay allocations, push data back) ---------
+    def restore_into_proxy(
+        self,
+        runner,
+        *,
+        step: int | None = None,
+        sharding_for: ShardingFor | None = None,
+        verify: bool = False,
+    ) -> tuple[Any, Manifest]:
+        """Restore a committed image and re-create device state in a proxy.
+
+        The paper's restart protocol for the proxy architecture: read the
+        image, then replay the logged allocations into a fresh proxy process
+        and transfer the data back through it. ``runner`` is a
+        ``repro.proxy.ProxyRunner``; a fresh runner is started with the
+        restored device state (program + register + upload replayed from
+        scratch), a running one gets the state pushed over its segments.
+        Returns (state, manifest) exactly like :meth:`restore`.
+        """
+        state, manifest = self.restore(
+            step=step, sharding_for=sharding_for, verify=verify
+        )
+        with self.timings.measure("restore/proxy_push"):
+            if getattr(runner, "started", False):
+                runner.push(state["device"])
+            else:
+                runner.start(
+                    device_state=state["device"], base_step=int(manifest.step)
+                )
         return state, manifest

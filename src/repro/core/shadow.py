@@ -24,8 +24,9 @@ from __future__ import annotations
 
 import enum
 import mmap
+import threading
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import numpy as np
@@ -36,7 +37,7 @@ from repro.checkpoint.chunking import (
     num_chunks,
 )
 from repro.utils.timing import Timings
-from repro.utils.tree import flatten_with_paths
+from repro.utils.tree import flatten_with_paths, unflatten_from_paths
 
 
 class ChunkState(enum.Enum):
@@ -74,6 +75,18 @@ class SyncStats:
         self.bytes_total += other.bytes_total
         self.bytes_fetched += other.bytes_fetched
         self.leaves += other.leaves
+
+
+@dataclass
+class UploadStats:
+    """What ``upload()`` pushed host->device (paper: SendDataToRealPages)."""
+
+    chunks_uploaded: int = 0
+    bytes_uploaded: int = 0
+    leaves_touched: int = 0
+    # per-stream bytes pushed, keyed (path, shard_ordinal) — the proxy
+    # replay path reports these so recovery cost is attributable per leaf
+    per_stream: dict[tuple[str, int], int] = field(default_factory=dict)
 
 
 class HostShardView:
@@ -151,6 +164,7 @@ class ShadowStateManager:
         digest_on_device: bool = True,
         defer_first_digests: bool = False,
         shared_buffers: bool = False,
+        segment_factory: Callable[[tuple[str, int], int], np.ndarray] | None = None,
         timings: Timings | None = None,
     ):
         self.chunk_bytes = int(chunk_bytes)
@@ -166,24 +180,80 @@ class ShadowStateManager:
         # not mutate a buffer while a child is persisting it (the forked
         # checkpointer's busy-buffer discipline guarantees this).
         self.shared_buffers = shared_buffers
+        # Pluggable buffer allocation: (key, nbytes) -> u8 array. The device
+        # proxy passes a factory that maps file-backed MAP_SHARED segments,
+        # making the shadow buffers themselves the cross-process data plane
+        # (step inputs/outputs never pickle through the control pipe).
+        self.segment_factory = segment_factory
         self.timings = timings or Timings()
         self._streams: dict[tuple[str, int], _ShardStream] = {}
         self._mmaps: list[mmap.mmap] = []
         self._registered = False
+        # pin/retire: a persisting fork child may still be reading the
+        # MAP_SHARED pages of a buffer generation that register() replaces;
+        # retired generations are released only once the pin count drops to 0
+        self._pin_lock = threading.Lock()
+        self._pins = 0
+        self._retired: list[tuple[dict, list]] = []
 
-    def _alloc_buffer(self, nbytes: int) -> np.ndarray:
+    def _alloc_buffer(self, nbytes: int, key: tuple[str, int] | None = None) -> np.ndarray:
+        if self.segment_factory is not None and key is not None:
+            return self.segment_factory(key, nbytes)
         if self.shared_buffers and nbytes > 0:
             mm = mmap.mmap(-1, nbytes)  # anonymous + MAP_SHARED on POSIX
             self._mmaps.append(mm)
             return np.frombuffer(mm, dtype=np.uint8, count=nbytes)
         return np.empty(nbytes, np.uint8)
 
+    # -- buffer generation pinning ------------------------------------------------
+    def pin(self) -> None:
+        """A consumer (e.g. a forked persist child's parent-side job) still
+        reads the current buffer generation: re-registration must not release
+        it. Balanced by :meth:`unpin`."""
+        with self._pin_lock:
+            self._pins += 1
+
+    def unpin(self) -> None:
+        with self._pin_lock:
+            self._pins = max(0, self._pins - 1)
+            if self._pins == 0 and self._retired:
+                retired, self._retired = self._retired, []
+            else:
+                retired = []
+        for streams, mmaps in retired:
+            self._drop_generation(streams, mmaps)
+
+    @staticmethod
+    def _drop_generation(streams: dict, mmaps: list) -> None:
+        """Release one buffer generation: sever the stream->buffer views so
+        the mmaps can actually close (a view held elsewhere — e.g. a
+        persist job's snapshot dict — downgrades close to GC-time)."""
+        for s in streams.values():
+            s.buffer = None
+        for mm in mmaps:
+            try:
+                mm.close()
+            except (BufferError, ValueError):  # a view still alive: GC frees
+                pass
+
     # -- registration ---------------------------------------------------------
     def register(self, state: Any) -> None:
-        """Learn the chunk layout of ``state``; all chunks start DEVICE_DIRTY."""
+        """Learn the chunk layout of ``state``; all chunks start DEVICE_DIRTY.
+
+        Re-registration retires (rather than releases) the previous buffer
+        generation while any consumer holds a pin — a persisting fork child
+        may still be reading those MAP_SHARED pages.
+        """
         flat, _ = flatten_with_paths(state)
-        self._streams.clear()
-        self._mmaps = []  # old segments die with their buffer arrays
+        with self._pin_lock:
+            old_streams, old_mmaps = self._streams, self._mmaps
+            retire = self._pins > 0 and bool(old_streams or old_mmaps)
+            if retire:
+                self._retired.append((old_streams, old_mmaps))
+            self._streams = {}
+            self._mmaps = []
+        if not retire:
+            self._drop_generation(old_streams, old_mmaps)
         for path, leaf in flat.items():
             for ordinal, start, stop, data in _owned_host_shards(leaf):
                 nbytes = int(np.asarray(data).nbytes) if not isinstance(
@@ -246,7 +316,9 @@ class ShadowStateManager:
             # first sync: everything must move regardless — bulk copy; the
             # digest pass is skipped when a persist phase will backfill it
             with self.timings.measure("shadow/fetch"):
-                stream.buffer = self._alloc_buffer(stream.nbytes)
+                stream.buffer = self._alloc_buffer(
+                    stream.nbytes, (stream.path, stream.shard_ordinal)
+                )
                 host = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
                 np.copyto(stream.buffer, host)
                 stream.states = [ChunkState.CLEAN] * stream.n_chunks
@@ -281,7 +353,9 @@ class ShadowStateManager:
 
         with self.timings.measure("shadow/fetch"):
             if stream.buffer is None:
-                stream.buffer = self._alloc_buffer(stream.nbytes)
+                stream.buffer = self._alloc_buffer(
+                    stream.nbytes, (stream.path, stream.shard_ordinal)
+                )
             cb = self.chunk_bytes
             if len(changed) == stream.n_chunks:
                 # everything dirty (first sync / full update): one bulk copy
@@ -339,6 +413,143 @@ class ShadowStateManager:
             chunk_digest_np(host[i * cb : min(stream.nbytes, (i + 1) * cb)])
             for i in range(stream.n_chunks)
         ]
+
+    # -- upload (the write-back path: SendDataToRealPages) ---------------------
+    def upload(self, state: Any) -> tuple[Any, UploadStats]:
+        """Push HOST_DIRTY chunks back to the device; returns (state', stats).
+
+        The paper's ``SendDataToRealPages()``: shadow content that the host
+        mutated is written back before the device computes again. Only
+        HOST_DIRTY chunk byte-ranges move; untouched chunks cost nothing.
+        Returns a new state pytree (jax arrays are immutable, so patched
+        leaves are rebuilt and re-placed with their original sharding) plus
+        per-stream bytes-uploaded stats. This is also the device proxy's
+        replay data-push primitive: after a proxy respawn, the last synced
+        snapshot lives in the (shared-segment) shadow buffers and is pushed
+        into the fresh proxy's device state through this path.
+        """
+        if not self._registered:
+            raise RuntimeError("upload() before register()")
+        flat, treedef = flatten_with_paths(state)
+        stats = UploadStats()
+        new_flat = dict(flat)
+        cb = self.chunk_bytes
+        for path, leaf in flat.items():
+            shards = _owned_host_shards(leaf)
+            dirty_streams = []
+            for ordinal, start, stop, _data in shards:
+                stream = self._streams.get((path, ordinal))
+                if stream is None:
+                    continue
+                dirty = [
+                    i for i, st in enumerate(stream.states)
+                    if st is ChunkState.HOST_DIRTY
+                ]
+                if dirty:
+                    dirty_streams.append((stream, start, stop, dirty))
+            if not dirty_streams:
+                continue
+            stats.leaves_touched += 1
+            with self.timings.measure("shadow/upload"):
+                new_flat[path] = self._upload_leaf(
+                    path, leaf, dirty_streams, cb, stats
+                )
+        return unflatten_from_paths(treedef, new_flat), stats
+
+    def _upload_leaf(
+        self, path: str, leaf: Any, dirty_streams: list, cb: int, stats: UploadStats
+    ) -> Any:
+        dtype = np.dtype(
+            leaf.dtype if hasattr(leaf, "dtype") else np.asarray(leaf).dtype
+        )
+        shape = tuple(
+            leaf.shape if hasattr(leaf, "shape") else np.asarray(leaf).shape
+        )
+        is_jax = isinstance(leaf, jax.Array)
+        if isinstance(leaf, HostShardView):
+            # host-owned slice: patch the bytes in place, no rebuild needed
+            for stream, _start, _stop, dirty in dirty_streams:
+                buf = self._stream_buffer(stream)
+                target = np.ascontiguousarray(leaf.data).reshape(-1).view(np.uint8)
+                self._patch_chunks(stream, buf, target, dirty, cb, stats)
+                leaf.data[...] = target.view(leaf.data.dtype).reshape(leaf.data.shape)
+            return leaf
+
+        full = (
+            len(dirty_streams) == 1
+            and list(dirty_streams[0][1]) == [0] * len(shape)
+            and list(dirty_streams[0][2]) == list(shape)
+            and len(dirty_streams[0][3]) == dirty_streams[0][0].n_chunks
+        )
+        if full:
+            # everything dirty over the whole leaf: rebuild straight from
+            # the shadow buffer, never fetching the stale device content
+            stream, _s, _e, dirty = dirty_streams[0]
+            buf = self._stream_buffer(stream)
+            arr = buf.view(dtype).reshape(shape).copy()
+            self._finish_upload(stream, buf, dirty, cb, stats)
+        else:
+            arr = np.array(np.asarray(leaf))  # host copy of the global leaf
+            for stream, start, stop, dirty in dirty_streams:
+                buf = self._stream_buffer(stream)
+                idx = tuple(slice(a, b) for a, b in zip(start, stop))
+                region = np.ascontiguousarray(arr[idx])
+                target = region.reshape(-1).view(np.uint8)
+                self._patch_chunks(stream, buf, target, dirty, cb, stats)
+                arr[idx] = target.view(dtype).reshape(region.shape)
+        if is_jax:
+            try:
+                return jax.device_put(arr, leaf.sharding)
+            except Exception:
+                return jax.numpy.asarray(arr)
+        return arr
+
+    def _stream_buffer(self, stream: _ShardStream) -> np.ndarray:
+        if stream.buffer is None:
+            # never synced: only meaningful when a segment factory can
+            # attach existing shared content (the proxy replay path)
+            if self.segment_factory is None:
+                raise RuntimeError(
+                    f"stream {(stream.path, stream.shard_ordinal)} has no "
+                    "shadow content to upload"
+                )
+            stream.buffer = self._alloc_buffer(
+                stream.nbytes, (stream.path, stream.shard_ordinal)
+            )
+        return stream.buffer
+
+    def _patch_chunks(
+        self,
+        stream: _ShardStream,
+        buf: np.ndarray,
+        target: np.ndarray,
+        dirty: list[int],
+        cb: int,
+        stats: UploadStats,
+    ) -> None:
+        for i in dirty:
+            lo, hi = i * cb, min(stream.nbytes, (i + 1) * cb)
+            target[lo:hi] = buf[lo:hi]
+        self._finish_upload(stream, buf, dirty, cb, stats)
+
+    def _finish_upload(
+        self,
+        stream: _ShardStream,
+        buf: np.ndarray,
+        dirty: list[int],
+        cb: int,
+        stats: UploadStats,
+    ) -> None:
+        pushed = 0
+        for i in dirty:
+            lo, hi = i * cb, min(stream.nbytes, (i + 1) * cb)
+            stream.digests[i] = chunk_digest_np(buf[lo:hi])
+            stream.states[i] = ChunkState.CLEAN
+            pushed += hi - lo
+        key = (stream.path, stream.shard_ordinal)
+        stats.chunks_uploaded += len(dirty)
+        stats.bytes_uploaded += pushed
+        stats.per_stream[key] = stats.per_stream.get(key, 0) + pushed
 
     # -- snapshot access ----------------------------------------------------------
     def snapshot(self) -> dict[tuple[str, int], dict]:

@@ -13,6 +13,14 @@ State layout (a plain dict pytree; everything checkpointable):
 
     {"device": {...jax arrays...},        # params / opt state / rng-key-data
      "host":   {"step": np.int64, "data": {...iterator state...}}}
+
+Device-runner axis (``device_runner=``): ``inline`` executes the step
+function in-process (the default, above); ``proxy`` is the paper's actual
+architecture — compute runs in a separate restartable proxy process
+(``repro.proxy.ProxyRunner``) built from a replayable ``program`` spec,
+the app holds only the host mirror, and ``state["device"]`` is refreshed
+from the proxy at every sync/checkpoint boundary. A killed proxy is
+respawned and its API log replayed transparently mid-``run()``.
 """
 from __future__ import annotations
 
@@ -29,11 +37,13 @@ from repro.core.policy import CheckpointPolicy
 from repro.core.restore import RestoreManager
 from repro.utils.timing import Timings
 
+DEVICE_RUNNERS = ("inline", "proxy")
+
 
 class CheckpointedTrainer:
     def __init__(
         self,
-        train_step: Callable[[Any, Any], tuple[Any, Any]],
+        train_step: Callable[[Any, Any], tuple[Any, Any]] | None,
         *,
         store_root: str,
         policy: CheckpointPolicy | None = None,
@@ -43,9 +53,17 @@ class CheckpointedTrainer:
         io_workers: int | None = None,
         host: int = 0,
         backend: str = "thread",
+        device_runner: str = "inline",
+        program: dict | None = None,
+        proxy_opts: dict | None = None,
         timings: Timings | None = None,
     ):
+        if device_runner not in DEVICE_RUNNERS:
+            raise ValueError(
+                f"unknown device_runner {device_runner!r}; have {DEVICE_RUNNERS}"
+            )
         self.train_step = train_step
+        self.device_runner = device_runner
         self.store = ChunkStore(store_root)
         self.policy = policy or CheckpointPolicy(interval_steps=100)
         self.timings = timings or Timings()
@@ -61,6 +79,15 @@ class CheckpointedTrainer:
         )
         self.restorer = RestoreManager(self.store, timings=self.timings)
         self.results: list[CheckpointResult] = []
+        self.runner = None
+        if device_runner == "proxy":
+            if program is None:
+                raise ValueError("device_runner='proxy' needs a program spec")
+            from repro.proxy import ProxyRunner
+
+            self.runner = ProxyRunner(
+                program, chunk_bytes=chunk_bytes, **(proxy_opts or {})
+            )
 
     # -- restart ----------------------------------------------------------------
     def resume_or(
@@ -72,15 +99,32 @@ class CheckpointedTrainer:
     ) -> tuple[Any, int]:
         """Restore the newest committed state or build a fresh one.
 
+        In proxy mode the (restored or fresh) device state is also pushed
+        into a freshly-started proxy — the paper's restart protocol of
+        replaying allocations and transferring data back through the proxy.
+
         Returns (state, start_step).
         """
         steps = self.restorer.available_steps()
         if not steps:
             state = init_fn()
-            return state, int(np.asarray(_get(state, "host", "step", default=0)))
-        state, manifest = self.restorer.restore(
-            step=steps[-1], sharding_for=sharding_for, verify=verify
-        )
+            start = int(np.asarray(_get(state, "host", "step", default=0)))
+            if self.runner is not None:
+                state["device"] = self.runner.start(
+                    device_state=state.get("device"), base_step=start
+                )
+            return state, start
+        if self.runner is not None:
+            state, _manifest = self.restorer.restore_into_proxy(
+                self.runner,
+                step=steps[-1],
+                sharding_for=sharding_for,
+                verify=verify,
+            )
+        else:
+            state, _manifest = self.restorer.restore(
+                step=steps[-1], sharding_for=sharding_for, verify=verify
+            )
         start = int(np.asarray(state["host"]["step"]))
         return state, start
 
@@ -88,12 +132,26 @@ class CheckpointedTrainer:
     def run(
         self,
         state: Any,
-        batches: Iterator[Any],
+        batches: Iterator[Any] | None = None,
         *,
         num_steps: int,
         start_step: int = 0,
         on_metrics: Callable[[int, Any], None] | None = None,
     ) -> Any:
+        if self.runner is not None:
+            if batches is not None:
+                raise ValueError(
+                    "device_runner='proxy' derives batches inside the step "
+                    "program (deterministic in the step number — that is "
+                    "what makes replay bit-identical); a batches iterator "
+                    "here would be silently ignored"
+                )
+            return self._run_proxied(
+                state, num_steps=num_steps, start_step=start_step,
+                on_metrics=on_metrics,
+            )
+        if batches is None:
+            raise ValueError("inline device runner needs a batches iterator")
         step = start_step
         for _ in range(num_steps):
             batch = next(batches)
@@ -106,6 +164,41 @@ class CheckpointedTrainer:
             if self.policy.should_checkpoint(step):
                 self.checkpoint_now(step, state)
         return state
+
+    def _run_proxied(
+        self,
+        state: Any,
+        *,
+        num_steps: int,
+        start_step: int,
+        on_metrics: Callable[[int, Any], None] | None,
+    ) -> Any:
+        """Proxy mode: forward pipelined STEP calls, materialize the host
+        mirror only at sync points (checkpoints and the final step).
+        Batches are program-internal (deterministic in the step number) —
+        that determinism is what makes kill-replay bit-identical."""
+        step = start_step
+        synced_at = start_step - 1
+        for _ in range(num_steps):
+            step += 1
+            with self.timings.measure("train/step"):
+                self.runner.step(step)
+            state["host"]["step"] = np.int64(step)
+            if self.policy.should_checkpoint(step):
+                state["device"], info = self._sync_mirror()
+                synced_at = step
+                if on_metrics is not None:
+                    on_metrics(step, info.get("metrics", {}))
+                self.checkpoint_now(step, state)
+        if synced_at != step:
+            state["device"], info = self._sync_mirror()
+            if on_metrics is not None:
+                on_metrics(step, info.get("metrics", {}))
+        return state
+
+    def _sync_mirror(self) -> tuple[Any, dict]:
+        with self.timings.measure("train/proxy_sync"):
+            return self.runner.sync_state()
 
     def checkpoint_now(self, step: int, state: Any) -> CheckpointResult:
         r = self.checkpointer.save_async(step, state, meta={"wall": time.time()})
@@ -121,6 +214,8 @@ class CheckpointedTrainer:
     def finish(self) -> list[CheckpointResult]:
         done = self.checkpointer.wait_all()
         self.checkpointer.close()
+        if self.runner is not None:
+            self.runner.close()
         self._gc()  # in-flight persists have committed by now
         return done
 

@@ -47,6 +47,10 @@ def main(argv=None) -> int:
                     default="thread")
     ap.add_argument("--loop", choices=["numpy", "jax"], default="numpy",
                     help="worker train loop: numpy (fast) or jax (real model)")
+    ap.add_argument("--device-runner", choices=["inline", "proxy"],
+                    default="inline",
+                    help="inline: step in the worker process; proxy: each "
+                         "worker hosts a restartable device-proxy process")
     ap.add_argument("--codec", default=DEFAULT_CODEC)
     ap.add_argument("--width", type=int, default=64)
     ap.add_argument("--chunk-bytes", type=int, default=1 << 16)
@@ -73,7 +77,8 @@ def main(argv=None) -> int:
     root = args.ckpt_dir or tempfile.mkdtemp(prefix="crum-cluster-")
     print(f"[cluster] hosts={args.hosts} steps={args.steps} "
           f"ckpt_every={args.ckpt_every} backend={args.backend} "
-          f"loop={args.loop} root={root}", flush=True)
+          f"loop={args.loop} device_runner={args.device_runner} "
+          f"root={root}", flush=True)
 
     report = run_cluster(
         root=root,
@@ -82,6 +87,7 @@ def main(argv=None) -> int:
         ckpt_every=args.ckpt_every,
         backend=args.backend,
         loop=args.loop,
+        device_runner=args.device_runner,
         codec=args.codec,
         chunk_bytes=args.chunk_bytes,
         width=args.width,

@@ -49,10 +49,19 @@ def main(argv=None) -> int:
         "--backend", choices=list_persist_backends(), default="thread",
         help="persist backend: 'fork' = paper's COW child, 'thread' = pool",
     )
+    ap.add_argument(
+        "--device-runner", choices=["inline", "proxy"], default="inline",
+        help="inline: step fn runs in-process; proxy: the paper's "
+             "architecture — compute in a restartable proxy process with "
+             "API log-and-replay recovery",
+    )
     ap.add_argument("--no-incremental", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+
+    if args.device_runner == "proxy":
+        return _main_proxy(args)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build(cfg)
@@ -145,6 +154,74 @@ def main(argv=None) -> int:
             )
     preempt.uninstall()
     print(json.dumps({"final_step": step, "timings": trainer.timings.summary()}, indent=2))
+    return 0
+
+
+def _main_proxy(args) -> int:
+    """The paper's architecture: this process never runs the step function.
+
+    A ``train_arch`` step program (rebuilt from the CLI config inside the
+    proxy — programs are replayable specs, not closures) executes in a
+    supervised proxy process; this process forwards pipelined STEP calls,
+    syncs the host mirror at checkpoint boundaries, and persists it with
+    the same forked checkpointer. Batches are deterministic in the step
+    number, which is what makes kill-replay recovery bit-identical.
+    """
+    program = {
+        "name": "train_arch",
+        "arch": args.arch,
+        "smoke": bool(args.smoke),
+        "batch": args.batch,
+        "seq": args.seq,
+        "lr": args.lr,
+        "total_steps": args.steps,
+    }
+    trainer = CheckpointedTrainer(
+        None,
+        store_root=args.ckpt_dir,
+        policy=CheckpointPolicy(interval_steps=args.ckpt_every, keep_last=2),
+        codec=args.codec,
+        incremental=not args.no_incremental,
+        chunk_bytes=1 << 20,
+        backend=args.backend,
+        device_runner="proxy",
+        program=program,
+    )
+    preempt = PreemptionHandler(trainer.policy).install()
+
+    def init_state():
+        # device side is None: resume_or lets the runner ask the program
+        # for a deterministic init inside this process (shared registry)
+        return {"device": None, "host": {"step": np.int64(0)}}
+
+    state, start = trainer.resume_or(init_state)
+    print(f"[train] arch={args.arch} device_runner=proxy start_step={start} "
+          f"proxy_pid={trainer.runner.proxy.pid}", flush=True)
+
+    def on_metrics(step, metrics):
+        loss = metrics.get("loss")
+        loss_s = f"{loss:.4f}" if loss is not None else "n/a"
+        print(f"[train] step={step} loss={loss_s} "
+              f"proxy_restarts={trainer.runner.restarts}", flush=True)
+
+    state = trainer.run(
+        state, num_steps=args.steps - start, start_step=start,
+        on_metrics=on_metrics,
+    )
+    step = int(np.asarray(state["host"]["step"]))
+    if preempt.received.is_set():
+        print("[train] preemption: checkpointing and exiting", flush=True)
+        trainer.checkpoint_now(step, state)
+    done = trainer.finish()
+    for r in done:
+        print(
+            f"[ckpt-done] step={r.step} blocking={r.blocking_s*1e3:.1f}ms "
+            f"persist={r.persist_s*1e3:.1f}ms written={r.chunks_written} "
+            f"reused={r.chunks_reused}"
+        )
+    preempt.uninstall()
+    print(json.dumps({"final_step": step, "timings": trainer.timings.summary()},
+                     indent=2))
     return 0
 
 

@@ -1,0 +1,116 @@
+"""The durable API log — CRUM §3.4 / CRAC's replayable call record.
+
+Every state-creating proxy call the application issues (program
+construction, register/alloc, upload, step) is appended here *before* it
+is sent, so the log is always a superset of what the proxy has executed.
+Restart = replay: a fresh proxy gets the PROGRAM and REGISTER calls
+re-issued, the last synced snapshot pushed back through the segments
+(UPLOAD), and every STEP after the last SYNC re-executed — deterministic
+step programs make the result bit-identical to the uninterrupted run.
+
+Records are u32-length-prefixed msgpack maps (the coordinator protocol's
+framing, applied to a file) with a ``call`` discriminator::
+
+    {"call": "program",  "spec": {...}}
+    {"call": "register", "layout": {...}, "chunk_bytes": int, "workdir": str}
+    {"call": "upload",   "step": int, "paths": [..] | None}   None = all
+    {"call": "step",     "step": int}
+    {"call": "sync",     "step": int, "digest": str}
+
+SYNC records are write-side only (the proxy never reads them): they mark
+the replay low-water line — everything at or before the last synced step
+is already captured in the segments' bytes.
+"""
+from __future__ import annotations
+
+import os
+import struct
+from typing import Any, Iterator
+
+import msgpack
+
+_LEN = struct.Struct("<I")
+MAX_RECORD = 64 << 20  # a single log record this large is a bug
+
+
+class ApiLog:
+    """Append-only call log; survives proxy death (and fsync makes it
+    survive host power loss, the same knob the checkpointer exposes)."""
+
+    def __init__(self, path: str, *, truncate: bool = False, fsync: bool = False):
+        self.path = path
+        self.fsync = fsync
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "wb" if truncate else "ab")
+
+    def append(self, record: dict[str, Any]) -> None:
+        data = msgpack.packb(record, use_bin_type=True)
+        if len(data) > MAX_RECORD:
+            raise ValueError(f"API log record too large ({len(data)} bytes)")
+        self._f.write(_LEN.pack(len(data)) + data)
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    # -- read side -------------------------------------------------------------
+    def records(self) -> list[dict[str, Any]]:
+        return list(iter_records(self.path))
+
+    def last_synced_step(self) -> int:
+        """The replay low-water line: newest SYNC record's step (0 if none)."""
+        last = 0
+        for rec in iter_records(self.path):
+            if rec.get("call") == "sync":
+                last = int(rec["step"])
+        return last
+
+    def replay_plan(self) -> tuple[dict | None, dict | None, list[int]]:
+        """(program_spec, register_record, steps_to_replay).
+
+        Everything a fresh proxy needs: the program, the allocation table,
+        and the step calls to re-execute on top of the pushed snapshot.
+        The watermark is *positional*: a sync OR upload record captures the
+        device state at that point (the segments/mirror hold it), so only
+        step calls appearing after the latest such record are replayed —
+        an upload (e.g. a restore pushed onto a live runner) supersedes
+        steps issued before it.
+        """
+        program = register = None
+        steps: list[int] = []
+        for rec in iter_records(self.path):
+            call = rec.get("call")
+            if call == "program":
+                program = rec.get("spec")
+            elif call == "register":
+                register = rec
+                steps = []
+            elif call in ("sync", "upload"):
+                steps = []  # snapshot watermark: earlier steps are captured
+            elif call == "step":
+                steps.append(int(rec["step"]))
+        return program, register, steps
+
+
+def iter_records(path: str) -> Iterator[dict[str, Any]]:
+    """Stream records; a torn tail (crash mid-append) ends iteration
+    cleanly — every fully-written record before it is still replayable."""
+    if not os.path.exists(path):
+        return
+    with open(path, "rb") as f:
+        while True:
+            hdr = f.read(_LEN.size)
+            if len(hdr) < _LEN.size:
+                return
+            (n,) = _LEN.unpack(hdr)
+            if n > MAX_RECORD:
+                return  # corrupt length: treat as torn tail
+            data = f.read(n)
+            if len(data) < n:
+                return
+            yield msgpack.unpackb(data, raw=False, strict_map_key=False)

@@ -1,0 +1,196 @@
+"""DeviceProxy — the application-side handle on ONE proxy incarnation.
+
+Transport-only: spawns the proxy process (multiprocessing *spawn*, safe
+with an initialized JAX in the parent), accepts its loopback connection,
+and speaks the protocol. Pipelining lives here — ``step()`` is
+fire-and-forget with an auto-flush watermark so the app runs ahead of the
+proxy exactly like ``core/drain.py`` describes the device pipeline — but
+*durability and replay do not*: the API log and respawn policy belong to
+``ProxyRunner`` (supervisor.py), so a dead incarnation is simply dropped
+and a new DeviceProxy attached to the same segments.
+
+Every transport failure raises :class:`ProxyDiedError`; callers that can
+replay (the runner) catch it, everyone else propagates it.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import socket
+import time
+from typing import Any
+
+from repro.proxy.protocol import (
+    MSG_ERR,
+    MSG_FLUSH,
+    MSG_FLUSHED,
+    MSG_OK,
+    MSG_PROGRAM,
+    MSG_REGISTER,
+    MSG_SHUTDOWN,
+    MSG_STEP,
+    MSG_SYNC,
+    MSG_SYNCED,
+    MSG_UPLOAD,
+    Connection,
+    ProxyDiedError,
+    ProxyServiceConfig,
+)
+from repro.proxy.service import proxy_entry
+
+
+class DeviceProxy:
+    def __init__(
+        self,
+        *,
+        mp_context: str = "spawn",
+        start_timeout_s: float = 120.0,
+        op_timeout_s: float = 120.0,
+        max_pipeline: int = 64,
+        jax_platforms: str | None = "cpu",
+        name: str = "crum-proxy",
+    ):
+        self.ctx = mp.get_context(mp_context)
+        self.start_timeout_s = start_timeout_s
+        self.op_timeout_s = op_timeout_s
+        self.max_pipeline = int(max_pipeline)
+        self.jax_platforms = jax_platforms
+        self.name = name
+        self.proc: mp.Process | None = None
+        self.conn: Connection | None = None
+        self.inflight = 0  # STEP frames sent since the last barrier
+        self._seq = 0
+
+    # -- lifecycle ---------------------------------------------------------------
+    def start(self) -> "DeviceProxy":
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind(("127.0.0.1", 0))
+        listener.listen(1)
+        host, port = listener.getsockname()
+        cfg = ProxyServiceConfig(
+            host=host, port=port, jax_platforms=self.jax_platforms
+        )
+        self.proc = self.ctx.Process(
+            target=proxy_entry, args=(cfg,), name=self.name, daemon=True
+        )
+        self.proc.start()
+        listener.settimeout(self.start_timeout_s)
+        try:
+            sock, _ = listener.accept()
+        except socket.timeout:
+            raise ProxyDiedError(
+                f"proxy did not connect within {self.start_timeout_s}s"
+            ) from None
+        finally:
+            listener.close()
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.conn = Connection(sock)
+        self.conn.settimeout(1.0)
+        return self
+
+    @property
+    def pid(self) -> int | None:
+        return self.proc.pid if self.proc is not None else None
+
+    def alive(self) -> bool:
+        return self.proc is not None and self.proc.is_alive()
+
+    def kill(self) -> None:
+        """Hard-kill the incarnation (failure drills: SIGKILL mid-pipeline)."""
+        if self.proc is not None and self.proc.is_alive():
+            self.proc.kill()
+            self.proc.join(timeout=10)
+
+    def close(self, *, graceful: bool = True) -> None:
+        if self.conn is not None:
+            if graceful and self.alive():
+                try:
+                    self.conn.send(MSG_SHUTDOWN)
+                except OSError:
+                    pass
+            self.conn.close()
+            self.conn = None
+        if self.proc is not None:
+            self.proc.join(timeout=10)
+            if self.proc.is_alive():
+                self.proc.kill()
+                self.proc.join(timeout=10)
+            self.proc = None
+
+    # -- transport helpers --------------------------------------------------------
+    def _send(self, mtype: str, **fields: Any) -> None:
+        if self.conn is None:
+            raise ProxyDiedError("proxy connection is closed")
+        try:
+            self.conn.send(mtype, **fields)
+        except OSError as e:
+            raise ProxyDiedError(f"send({mtype}) failed: {e}") from e
+
+    def _recv_reply(self, want: str, *, timeout: float | None = None) -> dict:
+        deadline = time.monotonic() + (timeout or self.op_timeout_s)
+        while True:
+            if time.monotonic() > deadline:
+                raise ProxyDiedError(
+                    f"no {want} reply within {timeout or self.op_timeout_s}s "
+                    f"(proxy {'alive' if self.alive() else 'dead'})"
+                )
+            try:
+                msg = self.conn.recv()
+            except (socket.timeout, TimeoutError):
+                if not self.alive():
+                    raise ProxyDiedError(
+                        f"proxy died while waiting for {want}"
+                    ) from None
+                continue
+            except OSError as e:
+                raise ProxyDiedError(f"recv failed: {e}") from e
+            if msg is None:
+                raise ProxyDiedError(f"proxy EOF while waiting for {want}")
+            mtype = msg.get("type")
+            if mtype == MSG_ERR:
+                raise RuntimeError(
+                    f"proxy call {msg.get('op')} failed: {msg.get('error')}"
+                )
+            if mtype == want:
+                return msg
+            # stale frame from before a died-and-replayed call: drop it
+
+    def _call(self, mtype: str, *, reply: str = MSG_OK, **fields: Any) -> dict:
+        self._send(mtype, **fields)
+        return self._recv_reply(reply)
+
+    # -- the proxied API -----------------------------------------------------------
+    def send_program(self, spec: dict) -> None:
+        self._call(MSG_PROGRAM, spec=spec)
+
+    def register(self, workdir: str, layout: dict, *, chunk_bytes: int) -> None:
+        self._call(
+            MSG_REGISTER, workdir=workdir, layout=layout, chunk_bytes=chunk_bytes
+        )
+        self.inflight = 0
+
+    def upload(self, *, step: int, paths: list[str] | None = None) -> dict:
+        return self._call(MSG_UPLOAD, step=step, paths=paths)
+
+    def step(self, step: int) -> None:
+        """Pipelined: returns as soon as the frame is written. Auto-flushes
+        at the watermark so the app never runs unboundedly ahead."""
+        self._send(MSG_STEP, step=int(step))
+        self.inflight += 1
+        if self.inflight >= self.max_pipeline:
+            self.flush()
+
+    def flush(self) -> dict:
+        """Pipeline barrier: the proxy has executed everything sent so far."""
+        self._seq += 1
+        self._send(MSG_FLUSH, seq=self._seq)
+        msg = self._recv_reply(MSG_FLUSHED)
+        self.inflight = 0
+        return msg
+
+    def sync(self, *, timeout: float | None = None) -> dict:
+        """Flush + device->segments sync; returns the SYNCED frame."""
+        self._send(MSG_SYNC)
+        msg = self._recv_reply(MSG_SYNCED, timeout=timeout)
+        self.inflight = 0
+        return msg

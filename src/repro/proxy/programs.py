@@ -1,0 +1,221 @@
+"""Step programs — the replayable compute the proxy executes.
+
+CRUM's proxy does not receive closures from the application; it receives
+*API calls*. A step program is the analogue: a named factory plus a
+msgpack-able kwargs dict, reconstructible inside any proxy incarnation
+(spawned processes share no closures) and inside replay. Determinism is
+the contract: ``step(state, n)`` must be a pure function of (state, n) —
+batches are derived from the step number, never streamed — so replaying
+the API log into a fresh proxy reproduces device state bit-identically.
+
+Built-ins:
+
+    numpy_sgd   momentum-SGD-shaped numpy update (fast; tests/benchmarks)
+    jax_tiny    jitted 2-layer transformer (the coord worker's jax loop)
+    train_arch  a real config from repro.configs (launch/train.py --device-runner proxy)
+
+The cluster worker's inline loops delegate their device math here too, so
+inline and proxied execution share one definition of "a step".
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+
+class StepProgram:
+    """Protocol: deterministic device-state transition, replayable by spec."""
+
+    def init_state(self) -> Any:
+        raise NotImplementedError
+
+    def step(self, device_state: Any, step: int) -> tuple[Any, dict]:
+        """(new_device_state, metrics) — pure in (device_state, step)."""
+        raise NotImplementedError
+
+    def on_restore(self, device_state: Any) -> Any:
+        """Adapt a freshly-restored (numpy) state for this program."""
+        return device_state
+
+
+_PROGRAMS: dict[str, Callable[..., StepProgram]] = {}
+
+
+def register_step_program(
+    name: str, factory: Callable[..., StepProgram], *, replace: bool = False
+) -> None:
+    if name in _PROGRAMS and not replace:
+        raise ValueError(f"step program {name!r} already registered")
+    _PROGRAMS[name] = factory
+
+
+def list_step_programs() -> list[str]:
+    return sorted(_PROGRAMS)
+
+
+def make_program(spec: dict[str, Any]) -> StepProgram:
+    """Build a program from its spec: {"name": ..., **kwargs}."""
+    spec = dict(spec)
+    name = spec.pop("name", None)
+    try:
+        factory = _PROGRAMS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown step program {name!r}; have {sorted(_PROGRAMS)}"
+        ) from None
+    return factory(**spec)
+
+
+# -- built-ins -----------------------------------------------------------------
+
+class NumpySGD(StepProgram):
+    """Deterministic momentum-SGD-shaped update (the coord numpy loop)."""
+
+    def __init__(self, *, rows: int = 16, width: int = 64, seed: int = 0,
+                 step_time_s: float = 0.0):
+        self.rows, self.width, self.seed = int(rows), int(width), int(seed)
+        self.step_time_s = float(step_time_s)
+
+    def init_state(self):
+        rng = np.random.default_rng(self.seed)
+        shape = (self.rows, self.width)
+        return {
+            "w": rng.standard_normal(shape).astype(np.float32),
+            "m": np.zeros(shape, np.float32),
+        }
+
+    def step(self, d, step):
+        g = np.sin(d["w"] * 0.05 + np.float32(step) * 0.001, dtype=np.float32)
+        m = (0.9 * d["m"] + g).astype(np.float32)
+        w = (d["w"] - 0.01 * m).astype(np.float32)
+        if self.step_time_s:
+            time.sleep(self.step_time_s)
+        return {"w": w, "m": m}, {"w_norm": float(np.linalg.norm(w))}
+
+
+class JaxTiny(StepProgram):
+    """A real jitted train step over a small dense transformer."""
+
+    def __init__(self, *, width: int = 64, seed: int = 0, batch: int = 2,
+                 seq: int = 32):
+        import jax
+
+        from repro.models import ModelConfig, build
+        from repro.optim import get_optimizer
+
+        self.jax = jax
+        self.seed, self.batch, self.seq = int(seed), int(batch), int(seq)
+        mc = ModelConfig(
+            name="proxy-tiny", family="dense", num_layers=2,
+            d_model=width, vocab_size=256, num_heads=4, num_kv_heads=2,
+            head_dim=max(width // 4, 8), d_ff=2 * width,
+            param_dtype="float32", compute_dtype="float32",
+        )
+        self.model = build(mc)
+        self.opt = get_optimizer("adamw", 1e-3)
+        self.vocab = mc.vocab_size
+
+        @jax.jit
+        def step_fn(dstate, batch):
+            (l, _), g = jax.value_and_grad(self.model.loss, has_aux=True)(
+                dstate["params"], batch
+            )
+            p2, o2 = self.opt.update(
+                g, dstate["opt"], dstate["params"], dstate["step"]
+            )
+            return {"params": p2, "opt": o2, "step": dstate["step"] + 1}, l
+
+        self.step_fn = step_fn
+
+    def _batch(self, step: int):
+        # deterministic in (seed, step): identical across incarnations and
+        # after replay — no iterator state to persist or re-push
+        k = self.jax.random.fold_in(self.jax.random.key(self.seed), step)
+        toks = self.jax.random.randint(k, (self.batch, self.seq), 0, self.vocab)
+        return {"inputs": toks, "targets": toks}
+
+    def init_state(self):
+        import jax.numpy as jnp
+
+        params = self.model.init(self.jax.random.key(self.seed))
+        return {
+            "params": params,
+            "opt": self.opt.init(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def step(self, d, step):
+        d2, loss = self.step_fn(d, self._batch(step))
+        return d2, {"loss": float(loss)}
+
+    def on_restore(self, d):
+        import jax.numpy as jnp
+
+        return self.jax.tree.map(jnp.asarray, d)
+
+
+class TrainArch(StepProgram):
+    """A real architecture from ``repro.configs``, deterministic synthetic
+    batches — what ``launch/train.py --device-runner proxy`` ships to its
+    proxy instead of a closure."""
+
+    def __init__(self, *, arch: str, smoke: bool = True, batch: int = 8,
+                 seq: int = 128, lr: float = 3e-4, total_steps: int = 100,
+                 seed: int = 0):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import build
+        from repro.optim import get_optimizer, warmup_cosine
+
+        self.jax = jax
+        self.batch, self.seq, self.seed = int(batch), int(seq), int(seed)
+        self.cfg = get_config(arch, smoke=smoke)
+        self.model = build(self.cfg)
+        self.opt = get_optimizer(
+            self.cfg.optimizer, warmup_cosine(lr, 10, total_steps)
+        )
+        self.vocab = self.cfg.vocab_size
+
+        @jax.jit
+        def step_fn(dstate, b):
+            (l, _), g = jax.value_and_grad(self.model.loss, has_aux=True)(
+                dstate["params"], b
+            )
+            p2, o2 = self.opt.update(
+                g, dstate["opt"], dstate["params"], dstate["step"]
+            )
+            return {"params": p2, "opt": o2, "step": dstate["step"] + 1}, l
+
+        self.step_fn = step_fn
+
+    def _batch(self, step: int):
+        k = self.jax.random.fold_in(self.jax.random.key(self.seed), step)
+        toks = self.jax.random.randint(k, (self.batch, self.seq), 0, self.vocab)
+        return {"inputs": toks, "targets": toks}
+
+    def init_state(self):
+        import jax.numpy as jnp
+
+        params = self.model.init(self.jax.random.key(self.seed))
+        return {
+            "params": params,
+            "opt": self.opt.init(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def step(self, d, step):
+        d2, loss = self.step_fn(d, self._batch(step))
+        return d2, {"loss": float(loss)}
+
+    def on_restore(self, d):
+        import jax.numpy as jnp
+
+        return self.jax.tree.map(jnp.asarray, d)
+
+
+register_step_program("numpy_sgd", NumpySGD)
+register_step_program("jax_tiny", JaxTiny)
+register_step_program("train_arch", TrainArch)

@@ -1,0 +1,73 @@
+"""Device-proxy wire protocol (paper §3: application <-> proxy process).
+
+CRUM's application process is "device-clean": it never owns device state;
+every device API call is forwarded to the proxy. Here the control plane is
+u32-length-prefixed msgpack frames over loopback TCP — the exact framing of
+``repro.coord.protocol`` (``Connection``/``send_frame``/``recv_frame`` are
+re-exported from there) — while the data plane is file-backed MAP_SHARED
+mmap segments (``repro.proxy.segments``): step inputs/outputs never pickle
+through the pipe, only tiny control frames do.
+
+Application -> proxy::
+
+    PROGRAM   {spec}                 construct the step program (replayable)
+    REGISTER  {layout, chunk_bytes}  attach data-plane segments; init state
+    UPLOAD    {paths, step}          ingest segment bytes into device state
+    STEP      {step}                 run one train step — pipelined, NO reply
+    FLUSH     {seq}                  pipeline barrier (control-plane only)
+    SYNC      {}                     flush + write device state to segments
+    SHUTDOWN  {}                     clean exit
+
+Proxy -> application::
+
+    OK        {op, ...}              ack for PROGRAM/REGISTER/UPLOAD
+    ERR       {op, error}            the call failed; proxy stays up
+    FLUSHED   {seq, step}            pipeline empty up to ``seq``
+    SYNCED    {step, digest, metrics, chunks_synced, bytes_synced}
+
+STEP carrying no reply is the proxying economy the paper measures in
+Fig. 4: the app runs ahead of the proxy exactly like JAX's async dispatch
+runs ahead of the device (see ``core/drain.py``); SYNC is the flush.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.coord.protocol import (  # noqa: F401  (re-exported framing)
+    Connection,
+    connect,
+    recv_frame,
+    send_frame,
+)
+
+MSG_PROGRAM = "PROGRAM"
+MSG_REGISTER = "REGISTER"
+MSG_UPLOAD = "UPLOAD"
+MSG_STEP = "STEP"
+MSG_FLUSH = "FLUSH"
+MSG_SYNC = "SYNC"
+MSG_SHUTDOWN = "SHUTDOWN"
+
+MSG_OK = "OK"
+MSG_ERR = "ERR"
+MSG_FLUSHED = "FLUSHED"
+MSG_SYNCED = "SYNCED"
+
+
+class ProxyDiedError(RuntimeError):
+    """The proxy process is gone (EOF/broken pipe/timeout past liveness)."""
+
+
+@dataclass
+class ProxyServiceConfig:
+    """Everything a fresh proxy incarnation needs to come up and connect.
+
+    Deliberately minimal: program/layout/data arrive as *replayed API
+    calls* over the connection, never as spawn arguments — that is what
+    makes a respawned proxy reconstructible from the API log alone.
+    """
+
+    host: str
+    port: int
+    jax_platforms: str | None = "cpu"
+    sock_timeout_s: float = 1.0

@@ -1,0 +1,192 @@
+"""Data plane: file-backed MAP_SHARED mmap segments shared app <-> proxy.
+
+The control pipe carries only tiny msgpack frames; bulk state crosses
+process boundaries through these segments, the same split CRUM makes
+between its proxy RPC channel and the UVM pages both sides can touch.
+Segments are plain files (preferring ``/dev/shm`` so the pages are
+RAM-backed) mapped MAP_SHARED by both the application and the proxy — and,
+because the files outlive any one proxy incarnation, a respawned proxy
+attaches the *same* pages and replay's data push is a segment read, not a
+network transfer.
+
+One segment per device-state leaf. The ``layout`` dict (sent in REGISTER
+and recorded in the API log) is the allocation table: path -> file name,
+byte size, shape, dtype.
+"""
+from __future__ import annotations
+
+import mmap
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import ml_dtypes  # noqa: F401  (registers bfloat16 & friends with numpy)
+import numpy as np
+
+from repro.utils.tree import flatten_with_paths, unflatten_from_paths
+
+
+def default_segment_dir(prefix: str = "crum-proxy-") -> str:
+    """A fresh directory for segment files, RAM-backed when possible."""
+    base = "/dev/shm" if os.path.isdir("/dev/shm") and os.access(
+        "/dev/shm", os.W_OK
+    ) else None
+    return tempfile.mkdtemp(prefix=prefix, dir=base)
+
+
+class SharedSegment:
+    """One MAP_SHARED mapping of one segment file."""
+
+    def __init__(self, path: str, nbytes: int, *, create: bool):
+        self.path = path
+        self.nbytes = int(nbytes)
+        flags = os.O_RDWR | (os.O_CREAT if create else 0)
+        fd = os.open(path, flags, 0o600)
+        try:
+            if create and os.fstat(fd).st_size != self.nbytes:
+                os.ftruncate(fd, self.nbytes)
+            if self.nbytes > 0:
+                self._mm = mmap.mmap(fd, self.nbytes, mmap.MAP_SHARED)
+            else:  # zero-length leaves still need a (trivial) buffer
+                self._mm = None
+        finally:
+            os.close(fd)  # the mapping keeps the pages; the fd is done
+
+    def view(self) -> np.ndarray:
+        if self._mm is None:
+            return np.empty(0, np.uint8)
+        return np.frombuffer(self._mm, dtype=np.uint8, count=self.nbytes)
+
+    def close(self) -> None:
+        if self._mm is not None:
+            try:
+                self._mm.close()
+            except BufferError:  # a numpy view is still alive; GC frees it
+                pass
+            self._mm = None
+
+
+class SegmentTable:
+    """The full segment set for one registered device state.
+
+    The application side *creates* it from a state pytree (recording the
+    treedef so synced state can be rebuilt); the proxy side *attaches* to
+    an existing layout. Either side hands ``factory`` to a
+    ``ShadowStateManager(segment_factory=...)`` so shadow buffers ARE the
+    shared segments.
+    """
+
+    def __init__(self, workdir: str):
+        self.workdir = workdir
+        self.layout: dict[str, dict[str, Any]] = {}
+        self._segments: dict[str, SharedSegment] = {}
+        self._treedef = None
+        self._owns_dir = False
+
+    # -- application side ------------------------------------------------------
+    @classmethod
+    def create(cls, state: Any, *, workdir: str | None = None) -> "SegmentTable":
+        """Allocate one segment per leaf and fill it with the leaf bytes."""
+        t = cls(workdir or default_segment_dir())
+        t._owns_dir = workdir is None
+        flat, treedef = flatten_with_paths(state)
+        t._treedef = treedef
+        for i, (path, leaf) in enumerate(flat.items()):
+            arr = np.asarray(leaf)
+            fname = f"seg-{i:04d}.bin"
+            t.layout[path] = {
+                "file": fname,
+                "nbytes": int(arr.nbytes),
+                "shape": list(arr.shape),
+                "dtype": arr.dtype.name,
+            }
+            seg = SharedSegment(
+                os.path.join(t.workdir, fname), arr.nbytes, create=True
+            )
+            t._segments[path] = seg
+            if arr.nbytes:
+                seg.view()[:] = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+        return t
+
+    def write_state(self, state: Any) -> int:
+        """Overwrite segment content with ``state``'s bytes; returns bytes."""
+        flat, _ = flatten_with_paths(state)
+        total = 0
+        for path, leaf in flat.items():
+            spec = self.layout.get(path)
+            if spec is None:
+                raise KeyError(f"leaf {path!r} not in segment layout")
+            arr = np.asarray(leaf)
+            if int(arr.nbytes) != spec["nbytes"]:
+                raise ValueError(
+                    f"leaf {path!r} is {arr.nbytes}B, segment is "
+                    f"{spec['nbytes']}B — re-register for shape changes"
+                )
+            if arr.nbytes:
+                self.view(path)[:] = (
+                    np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+                )
+            total += int(arr.nbytes)
+        return total
+
+    def read_state(self) -> Any:
+        """Rebuild the state pytree from current segment content (copies)."""
+        if self._treedef is None:
+            raise RuntimeError("read_state() needs the creating side's treedef")
+        leaves = {}
+        for path, spec in self.layout.items():
+            arr = self.view(path).copy().view(np.dtype(spec["dtype"]))
+            leaves[path] = arr.reshape(tuple(spec["shape"]))
+        return unflatten_from_paths(self._treedef, leaves)
+
+    # -- proxy side ------------------------------------------------------------
+    @classmethod
+    def attach(cls, workdir: str, layout: dict[str, dict]) -> "SegmentTable":
+        t = cls(workdir)
+        t.layout = {p: dict(s) for p, s in layout.items()}
+        return t
+
+    # -- both sides ------------------------------------------------------------
+    def view(self, path: str) -> np.ndarray:
+        seg = self._segments.get(path)
+        if seg is None:
+            spec = self.layout[path]
+            seg = SharedSegment(
+                os.path.join(self.workdir, spec["file"]),
+                spec["nbytes"],
+                create=False,
+            )
+            self._segments[path] = seg
+        return seg.view()
+
+    def factory(self, key: tuple[str, int], nbytes: int) -> np.ndarray:
+        """``ShadowStateManager.segment_factory`` adapter (shard 0 only —
+        proxy device state is host-local, one stream per leaf)."""
+        path, ordinal = key
+        if ordinal != 0:
+            raise ValueError("proxy segments are single-shard (ordinal 0)")
+        spec = self.layout[path]
+        if int(nbytes) != spec["nbytes"]:
+            raise ValueError(
+                f"shadow stream {key} wants {nbytes}B, segment holds "
+                f"{spec['nbytes']}B"
+            )
+        return self.view(path)
+
+    def total_bytes(self) -> int:
+        return sum(s["nbytes"] for s in self.layout.values())
+
+    def close(self, *, unlink: bool = False) -> None:
+        for seg in self._segments.values():
+            seg.close()
+        self._segments.clear()
+        if unlink:
+            if self._owns_dir:
+                shutil.rmtree(self.workdir, ignore_errors=True)
+            else:
+                for spec in self.layout.values():
+                    try:
+                        os.unlink(os.path.join(self.workdir, spec["file"]))
+                    except OSError:
+                        pass

@@ -1,0 +1,161 @@
+"""The proxy process: owns device state, executes forwarded API calls.
+
+This is the paper's proxy half of the split: the application process stays
+device-clean (checkpointable with ordinary host-memory tools) while this
+process holds the "device" (the step program's state) and executes the
+pipelined call stream. The shadow machinery is reused in reverse: a
+``ShadowStateManager`` whose buffers ARE the shared segments gives
+
+  - ``sync``:   device -> segments, digest-gated so unchanged chunks never
+                recopy (the paper's read-fault economy on the data plane),
+  - ``upload``: segments -> device, HOST_DIRTY chunks only — the replay
+                data-push primitive after a respawn or restore.
+
+The service exits on EOF (application gone), SHUTDOWN, or a SIGKILL drill;
+it keeps no durable state of its own — everything needed to rebuild it
+lives in the application's API log plus the segment bytes.
+"""
+from __future__ import annotations
+
+import os
+import socket
+from typing import Any
+
+from repro.proxy.protocol import (
+    MSG_ERR,
+    MSG_FLUSH,
+    MSG_FLUSHED,
+    MSG_OK,
+    MSG_PROGRAM,
+    MSG_REGISTER,
+    MSG_SHUTDOWN,
+    MSG_STEP,
+    MSG_SYNC,
+    MSG_SYNCED,
+    MSG_UPLOAD,
+    ProxyServiceConfig,
+    connect,
+)
+
+
+def proxy_entry(cfg: ProxyServiceConfig) -> int:
+    """Process entry point (multiprocessing spawn target)."""
+    if cfg.jax_platforms:
+        os.environ.setdefault("JAX_PLATFORMS", cfg.jax_platforms)
+    conn = connect((cfg.host, cfg.port), timeout=60.0)
+    conn.settimeout(cfg.sock_timeout_s)
+    service = _ProxyService(conn)
+    try:
+        service.serve()
+    finally:
+        conn.close()
+    return 0
+
+
+class _ProxyService:
+    def __init__(self, conn):
+        self.conn = conn
+        self.program = None
+        self.segments = None
+        self.shadow = None
+        self.dstate: Any = None
+        self.last_step = 0
+        self.last_metrics: dict = {}
+
+    def serve(self) -> None:
+        while True:
+            try:
+                msg = self.conn.recv()
+            except (socket.timeout, TimeoutError):
+                continue
+            if msg is None:  # application died or closed: this incarnation ends
+                return
+            if not self._dispatch(msg):
+                return
+
+    def _dispatch(self, msg: dict) -> bool:
+        mtype = msg.get("type")
+        try:
+            if mtype == MSG_PROGRAM:
+                self._on_program(msg)
+            elif mtype == MSG_REGISTER:
+                self._on_register(msg)
+            elif mtype == MSG_UPLOAD:
+                self._on_upload(msg)
+            elif mtype == MSG_STEP:
+                # pipelined: no reply — the app is already issuing the next call
+                self.dstate, self.last_metrics = self.program.step(
+                    self.dstate, int(msg["step"])
+                )
+                self.last_step = int(msg["step"])
+            elif mtype == MSG_FLUSH:
+                self.conn.send(MSG_FLUSHED, seq=msg.get("seq", 0),
+                               step=self.last_step)
+            elif mtype == MSG_SYNC:
+                self._on_sync()
+            elif mtype == MSG_SHUTDOWN:
+                return False
+            else:
+                self.conn.send(MSG_ERR, op=str(mtype), error="unknown message")
+        except Exception as e:  # surface per-call failures, stay alive
+            if mtype == MSG_STEP:
+                raise  # a failed step poisons the pipeline: die loudly
+            self.conn.send(
+                MSG_ERR, op=str(mtype), error=f"{type(e).__name__}: {e}"
+            )
+        return True
+
+    # -- state-creating calls (the replayed ones) ------------------------------
+    def _on_program(self, msg: dict) -> None:
+        from repro.proxy.programs import make_program
+
+        self.program = make_program(msg["spec"])
+        self.conn.send(MSG_OK, op=MSG_PROGRAM)
+
+    def _on_register(self, msg: dict) -> None:
+        from repro.core.shadow import ShadowStateManager
+        from repro.proxy.segments import SegmentTable
+
+        self.segments = SegmentTable.attach(msg["workdir"], msg["layout"])
+        self.shadow = ShadowStateManager(
+            chunk_bytes=int(msg.get("chunk_bytes", 1 << 20)),
+            digest_on_device=False,
+            segment_factory=self.segments.factory,
+        )
+        # the program defines the structure; uploads overwrite the content
+        self.dstate = self.program.init_state()
+        self.shadow.register(self.dstate)
+        self.last_step = 0
+        self.conn.send(MSG_OK, op=MSG_REGISTER)
+
+    def _on_upload(self, msg: dict) -> None:
+        paths = msg.get("paths")
+        if paths is None:
+            from repro.utils.tree import flatten_with_paths
+
+            paths = list(flatten_with_paths(self.dstate)[0])
+        for p in paths:
+            self.shadow.mark_host_write(p)
+        self.dstate, stats = self.shadow.upload(self.dstate)
+        self.dstate = self.program.on_restore(self.dstate)
+        self.last_step = int(msg.get("step", self.last_step))
+        self.conn.send(
+            MSG_OK,
+            op=MSG_UPLOAD,
+            bytes_uploaded=stats.bytes_uploaded,
+            chunks_uploaded=stats.chunks_uploaded,
+        )
+
+    def _on_sync(self) -> None:
+        from repro.utils.tree import tree_digest
+
+        self.shadow.mark_device_step()
+        stats = self.shadow.sync(self.dstate)
+        self.conn.send(
+            MSG_SYNCED,
+            step=self.last_step,
+            digest=tree_digest(self.dstate),
+            metrics={k: float(v) for k, v in (self.last_metrics or {}).items()},
+            chunks_synced=stats.chunks_fetched,
+            bytes_synced=stats.bytes_fetched,
+        )

@@ -1,0 +1,250 @@
+"""ProxyRunner — supervised, restartable proxied execution.
+
+The process-level half of the proxy subsystem (modeled on
+``coord/supervisor.py``): owns the durable API log, the shared-segment
+data plane, and the current :class:`DeviceProxy` incarnation. Any
+transport failure is treated as proxy death and answered with the paper's
+restart protocol, mid-training:
+
+    1. spend one unit of the restart budget (``core.failure.RestartBudget``),
+    2. spawn a fresh proxy process,
+    3. replay the API log: PROGRAM, REGISTER, then push the last synced
+       snapshot back through the segments (UPLOAD — served by
+       ``ShadowStateManager.upload`` on the proxy side),
+    4. re-issue every logged STEP after the last SYNC.
+
+Deterministic step programs make the recovered state bit-identical to an
+uninterrupted run, so training simply continues.
+
+Torn-sync hazard (CRAC's "streams in flight"): a SIGKILL mid-SYNC can
+leave segment bytes mixed between two steps, so the segments alone are not
+a safe replay source. The runner therefore keeps a host-side mirror of the
+last *acknowledged* sync (``sync_state()`` returns it to the caller anyway
+— checkpointing needs the copy) and rewrites the segments from that mirror
+before the replay UPLOAD.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any
+
+from repro.core.failure import RestartBudget
+from repro.proxy.api_log import ApiLog
+from repro.proxy.client import DeviceProxy
+from repro.proxy.protocol import ProxyDiedError
+from repro.proxy.segments import SegmentTable
+
+
+class ProxyRunner:
+    """The trainer-facing device runner for ``device_runner="proxy"``."""
+
+    def __init__(
+        self,
+        program_spec: dict[str, Any],
+        *,
+        workdir: str | None = None,
+        log_path: str | None = None,
+        chunk_bytes: int = 1 << 20,
+        max_restarts: int = 3,
+        max_pipeline: int = 64,
+        sync_timeout_s: float = 120.0,
+        op_timeout_s: float = 120.0,
+        mp_context: str = "spawn",
+        jax_platforms: str | None = "cpu",
+        fsync_log: bool = False,
+    ):
+        self.program_spec = dict(program_spec)
+        self.chunk_bytes = int(chunk_bytes)
+        self.sync_timeout_s = sync_timeout_s
+        self._proxy_opts = dict(
+            mp_context=mp_context,
+            max_pipeline=max_pipeline,
+            op_timeout_s=op_timeout_s,
+            jax_platforms=jax_platforms,
+        )
+        self.budget = RestartBudget(max_restarts, what="device proxy")
+        self.segments: SegmentTable | None = None
+        self._explicit_workdir = workdir
+        self._log_path = log_path
+        self._fsync_log = fsync_log
+        self.log: ApiLog | None = None
+        self.proxy: DeviceProxy | None = None
+        self.started = False
+        self.last_synced_step = 0
+        self.last_digest: str | None = None
+        self._last_state: Any = None  # host mirror of the last acked sync
+        self.recoveries: list[dict[str, Any]] = []
+
+    # -- lifecycle ---------------------------------------------------------------
+    def start(self, device_state: Any = None, *, base_step: int = 0) -> Any:
+        """Spawn the proxy and create device state in it.
+
+        ``device_state=None`` asks the program for a fresh init (built
+        app-side too — both sides share the registry, so the layout is
+        known without a round-trip). A restored state (the RestoreManager
+        proxy path) is pushed as-is. Returns the host mirror of the state.
+        """
+        if self.started:
+            raise RuntimeError("ProxyRunner already started; use push()")
+        if device_state is None:
+            from repro.proxy.programs import make_program
+
+            device_state = make_program(self.program_spec).init_state()
+        self.segments = SegmentTable.create(
+            device_state, workdir=self._explicit_workdir
+        )
+        self.log = ApiLog(
+            self._log_path or os.path.join(self.segments.workdir, "API_LOG.bin"),
+            truncate=True,
+            fsync=self._fsync_log,
+        )
+        self.log.append({"call": "program", "spec": self.program_spec})
+        self.log.append({
+            "call": "register",
+            "workdir": self.segments.workdir,
+            "layout": self.segments.layout,
+            "chunk_bytes": self.chunk_bytes,
+        })
+        self.log.append({"call": "upload", "step": int(base_step), "paths": None})
+        self.last_synced_step = int(base_step)
+        self._last_state = self.segments.read_state()
+        self._spawn_and_replay(upload_only=True)
+        self.started = True
+        return self._last_state
+
+    def push(self, device_state: Any) -> None:
+        """Overwrite proxy device state (restore path on a live runner)."""
+        self._require_started()
+        self.segments.write_state(device_state)
+        self._last_state = self.segments.read_state()
+        self.log.append({
+            "call": "upload", "step": self.last_synced_step, "paths": None,
+        })
+        try:
+            self.proxy.upload(step=self.last_synced_step)
+        except ProxyDiedError:
+            self._recover()
+
+    def close(self) -> None:
+        if self.proxy is not None:
+            self.proxy.close()
+            self.proxy = None
+        if self.log is not None:
+            self.log.close()
+        if self.segments is not None:
+            self.segments.close(unlink=True)
+            self.segments = None
+        self.started = False
+
+    # -- the pipelined call stream -------------------------------------------------
+    def step(self, step: int) -> None:
+        """Forward one train step; returns immediately (pipelined)."""
+        self._require_started()
+        self.log.append({"call": "step", "step": int(step)})
+        try:
+            self.proxy.step(int(step))
+        except ProxyDiedError:
+            self._recover()  # the log already holds this step: replay runs it
+
+    def drain(self) -> None:
+        """Pipeline barrier (``core.drain.drain(runner=...)`` hook)."""
+        self._require_started()
+        try:
+            self.proxy.flush()
+        except ProxyDiedError:
+            self._recover()
+
+    def sync_state(self) -> tuple[Any, dict[str, Any]]:
+        """Flush the pipeline, sync device->segments, return (state, info).
+
+        The returned state is a host-side copy (safe to checkpoint, safe to
+        keep as the recovery mirror). ``info`` carries the proxy's step,
+        state digest, per-sync transfer stats and last step metrics.
+        """
+        self._require_started()
+        while True:
+            try:
+                msg = self.proxy.sync(timeout=self.sync_timeout_s)
+                break
+            except ProxyDiedError:
+                self._recover()
+        self.last_synced_step = int(msg["step"])
+        self.last_digest = msg.get("digest")
+        self.log.append({
+            "call": "sync",
+            "step": self.last_synced_step,
+            "digest": self.last_digest,
+        })
+        self._last_state = self.segments.read_state()
+        info = {
+            "step": self.last_synced_step,
+            "digest": self.last_digest,
+            "metrics": msg.get("metrics", {}),
+            "chunks_synced": msg.get("chunks_synced", 0),
+            "bytes_synced": msg.get("bytes_synced", 0),
+            "restarts": self.budget.count,
+        }
+        return self._last_state, info
+
+    # -- failure drills ------------------------------------------------------------
+    def kill(self) -> int | None:
+        """SIGKILL the current incarnation (drills/benchmarks); returns pid."""
+        pid = self.proxy.pid if self.proxy else None
+        if self.proxy is not None:
+            self.proxy.kill()
+        return pid
+
+    @property
+    def restarts(self) -> int:
+        return self.budget.count
+
+    # -- respawn + replay ------------------------------------------------------------
+    def _require_started(self) -> None:
+        if not self.started or self.proxy is None:
+            raise RuntimeError("ProxyRunner is not started")
+
+    def _spawn_and_replay(self, *, upload_only: bool = False) -> list[int]:
+        """Bring up a fresh incarnation from the API log (+ the mirror);
+        returns the step numbers replayed."""
+        self.proxy = DeviceProxy(**self._proxy_opts).start()
+        self.proxy.send_program(self.program_spec)
+        self.proxy.register(
+            self.segments.workdir,
+            self.segments.layout,
+            chunk_bytes=self.chunk_bytes,
+        )
+        self.proxy.upload(step=self.last_synced_step)
+        if upload_only:
+            return []
+        _prog, _reg, steps = self.log.replay_plan()
+        for s in steps:
+            self.proxy.step(s)
+        return steps
+
+    def _recover(self) -> None:
+        """The kill-replay path: respawn, rewrite segments from the last
+        acked sync, replay logged steps past it. A fresh incarnation dying
+        *during* the replay spends more budget and retries, rather than
+        aborting while budget remains."""
+        t0 = time.perf_counter()
+        while True:
+            self.budget.spend(f"last synced step {self.last_synced_step}")
+            old = self.proxy
+            self.proxy = None
+            if old is not None:
+                old.close(graceful=False)
+            # a SIGKILL mid-SYNC may have torn the segment bytes: restore
+            # them from the host mirror before the replay upload reads them
+            if self._last_state is not None:
+                self.segments.write_state(self._last_state)
+            try:
+                steps = self._spawn_and_replay()
+                break
+            except ProxyDiedError:
+                continue
+        self.recoveries.append({
+            "recovery_s": time.perf_counter() - t0,
+            "replayed_steps": len(steps),
+            "resumed_from_step": self.last_synced_step,
+        })

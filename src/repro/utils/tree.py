@@ -7,6 +7,7 @@ order, so adding/removing leaves does not invalidate unrelated chunks.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Any, Callable
 
 import jax
@@ -70,6 +71,21 @@ def map_with_paths(fn: Callable[[str, Any], Any], tree: Any) -> Any:
     return jax.tree_util.tree_map_with_path(
         lambda p, x: fn(path_str(p), x), tree
     )
+
+
+def tree_digest(tree: Any) -> str:
+    """Order-stable content hash of a pytree of arrays.
+
+    Used for lockstep-convergence assertions (cluster workers) and for the
+    device proxy's bit-identical replay guarantee: two states digest equal
+    iff every leaf's bytes are equal, independent of dict insertion order.
+    """
+    flat, _ = flatten_with_paths(tree)
+    h = hashlib.sha256()
+    for path in sorted(flat):
+        h.update(path.encode())
+        h.update(np.ascontiguousarray(np.asarray(flat[path])).tobytes())
+    return h.hexdigest()[:16]
 
 
 def tree_equal(a: Any, b: Any) -> bool:

@@ -98,6 +98,30 @@ def test_crash_mid_commit_aborts_and_restores_previous(tmp_path, backend):
     assert deaths and deaths[0]["latest_committed"] == 2
 
 
+def test_proxy_device_runner_lockstep_and_kill(tmp_path):
+    """Each worker hosts its own device-proxy process; digests still
+    converge, and a killed worker (whose proxy dies with it) respawns,
+    restores, re-pushes into a fresh proxy and reconverges."""
+    root = str(tmp_path / "cluster")
+    report = run_cluster(
+        root=root, n_hosts=2, total_steps=6, ckpt_every=2,
+        backend="thread", loop="numpy", device_runner="proxy",
+        deadline_s=300.0, kill_host=1, kill_at_step=4,
+    )
+    assert report.restarts[1] == 1
+    assert report.lockstep()
+    assert report.latest_committed == 6
+    # proxied and inline execution are the same math: an inline cluster
+    # over the same config lands on the same digest
+    inline = run_cluster(
+        root=str(tmp_path / "cluster-inline"), n_hosts=2, total_steps=6,
+        ckpt_every=2, backend="thread", loop="numpy", deadline_s=300.0,
+    )
+    assert inline.lockstep()
+    assert (set(report.final_digests.values())
+            == set(inline.final_digests.values()))
+
+
 def test_straggler_flagged_but_never_blocks_commit(tmp_path):
     root = str(tmp_path / "cluster")
     report = run_cluster(

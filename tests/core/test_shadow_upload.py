@@ -1,0 +1,142 @@
+"""ShadowStateManager.upload() — the write-back half of Algorithm 1 — and
+the re-registration pin/retire discipline for in-flight fork children."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChunkState, HostShardView, ShadowStateManager
+
+
+def _state(n=4096):
+    return {"w": jnp.arange(n, dtype=jnp.float32), "b": jnp.ones((16,), jnp.float32)}
+
+
+def test_upload_pushes_all_host_dirty(tmp_path):
+    s = _state()
+    sh = ShadowStateManager(chunk_bytes=1024)
+    sh.register(s)
+    sh.sync(s)
+    w = sh.snapshot()[("w", 0)]["data"].view(np.float32)
+    w[:] = -np.arange(len(w), dtype=np.float32)
+    sh.mark_host_write("w")
+    s2, stats = sh.upload(s)
+    assert np.array_equal(np.asarray(s2["w"]), w)
+    assert np.array_equal(np.asarray(s2["b"]), np.asarray(s["b"]))  # untouched
+    nw = sh._streams[("w", 0)]
+    assert stats.chunks_uploaded == nw.n_chunks
+    assert stats.per_stream[("w", 0)] == nw.nbytes
+    assert stats.per_stream.get(("b", 0)) is None
+    assert all(c is ChunkState.CLEAN for c in nw.states)
+
+
+def test_upload_only_moves_dirty_chunks():
+    s = _state()
+    sh = ShadowStateManager(chunk_bytes=1024)
+    sh.register(s)
+    sh.sync(s)
+    stream = sh._streams[("w", 0)]
+    buf = stream.buffer.view(np.float32)
+    per_chunk = 1024 // 4
+    buf[0] = 111.0                 # chunk 0: mutated but NOT marked
+    buf[per_chunk] = 222.0         # chunk 1: mutated and marked
+    stream.states[1] = ChunkState.HOST_DIRTY
+    s2, stats = sh.upload(s)
+    assert stats.chunks_uploaded == 1
+    assert stats.bytes_uploaded == 1024
+    out = np.asarray(s2["w"])
+    assert out[per_chunk] == 222.0     # dirty chunk pushed
+    assert out[0] == 0.0               # clean chunk NOT pushed (FSM honesty)
+
+
+def test_upload_after_sync_roundtrips_digests():
+    """Uploaded chunks become CLEAN with correct digests: a following
+    mark_device_step + sync fetches nothing."""
+    s = _state()
+    sh = ShadowStateManager(chunk_bytes=1024)
+    sh.register(s)
+    sh.sync(s)
+    w = sh.snapshot()[("w", 0)]["data"].view(np.float32)
+    w[7] = 99.0
+    sh.mark_host_write("w")
+    s2, _ = sh.upload(s)
+    sh.mark_device_step()
+    stats = sh.sync(s2)
+    assert stats.chunks_fetched == 0
+
+
+def test_upload_hostshardview_patches_in_place():
+    data = np.arange(64, dtype=np.float32).reshape(8, 8)
+    leaf = HostShardView(
+        data, start=[4, 0], stop=[8, 8], global_shape=(16, 8), dtype=np.float32
+    )
+    s = {"w": leaf}
+    sh = ShadowStateManager(chunk_bytes=64, digest_on_device=False)
+    sh.register(s)
+    sh.sync(s)
+    buf = sh.snapshot()[("w", 0)]["data"].view(np.float32)
+    buf[:] = 5.0
+    sh.mark_host_write("w")
+    s2, stats = sh.upload(s)
+    assert np.all(s2["w"].data == 5.0)
+    assert stats.bytes_uploaded == data.nbytes
+
+
+def test_upload_without_register_raises():
+    sh = ShadowStateManager()
+    with pytest.raises(RuntimeError, match="register"):
+        sh.upload({"w": np.zeros(4, np.float32)})
+
+
+def test_upload_never_synced_without_factory_raises():
+    s = {"w": np.zeros(64, np.float32)}
+    sh = ShadowStateManager(chunk_bytes=64)
+    sh.register(s)
+    sh.mark_host_write("w")
+    with pytest.raises(RuntimeError, match="no shadow content"):
+        sh.upload(s)
+
+
+# -- re-registration vs in-flight consumers -----------------------------------
+
+def test_reregister_unpinned_drops_old_generation():
+    s = {"w": np.arange(256, dtype=np.float32)}
+    sh = ShadowStateManager(chunk_bytes=256, shared_buffers=True)
+    sh.register(s)
+    sh.sync(s)
+    old_mm = sh._mmaps[0]
+    sh.register(s)  # nobody pinned: release immediately
+    assert not sh._retired
+    assert old_mm.closed
+
+
+def test_reregister_pinned_retires_until_unpin():
+    """A persisting fork child still reads the old MAP_SHARED pages:
+    register() must retire them and unpin() must release them."""
+    s = {"w": np.arange(256, dtype=np.float32)}
+    sh = ShadowStateManager(chunk_bytes=256, shared_buffers=True)
+    sh.register(s)
+    sh.sync(s)
+    old_mm = sh._mmaps[0]
+    sh.pin()
+    sh.register(s)
+    assert sh._retired            # deferred, not dropped
+    assert not old_mm.closed      # child could still be reading
+    sh.sync(s)                    # the new generation works independently
+    sh.unpin()
+    assert not sh._retired
+    assert old_mm.closed
+
+
+def test_nested_pins_release_only_at_zero():
+    s = {"w": np.arange(256, dtype=np.float32)}
+    sh = ShadowStateManager(chunk_bytes=256, shared_buffers=True)
+    sh.register(s)
+    sh.sync(s)
+    old_mm = sh._mmaps[0]
+    sh.pin()
+    sh.pin()
+    sh.register(s)
+    sh.unpin()
+    assert not old_mm.closed      # one consumer still holds the generation
+    sh.unpin()
+    assert old_mm.closed

@@ -1,0 +1,98 @@
+"""API log: durable append/replay, torn tails, replay-plan selection."""
+import os
+
+from repro.proxy import ApiLog, iter_records
+
+
+def test_append_read_roundtrip(tmp_path):
+    p = str(tmp_path / "log.bin")
+    log = ApiLog(p, truncate=True)
+    recs = [
+        {"call": "program", "spec": {"name": "numpy_sgd", "width": 8}},
+        {"call": "register", "workdir": "/x", "layout": {"w": {"nbytes": 4}},
+         "chunk_bytes": 1024},
+        {"call": "upload", "step": 0, "paths": None},
+        {"call": "step", "step": 1},
+        {"call": "step", "step": 2},
+        {"call": "sync", "step": 2, "digest": "abc"},
+        {"call": "step", "step": 3},
+    ]
+    for r in recs:
+        log.append(r)
+    log.close()
+    assert list(iter_records(p)) == recs
+
+
+def test_replay_plan_selects_steps_after_last_sync(tmp_path):
+    p = str(tmp_path / "log.bin")
+    log = ApiLog(p, truncate=True)
+    log.append({"call": "program", "spec": {"name": "numpy_sgd"}})
+    log.append({"call": "register", "workdir": "/x", "layout": {},
+                "chunk_bytes": 1024})
+    for s in (1, 2, 3):
+        log.append({"call": "step", "step": s})
+    log.append({"call": "sync", "step": 3, "digest": "d3"})
+    for s in (4, 5):
+        log.append({"call": "step", "step": s})
+    program, register, steps = log.replay_plan()
+    assert program == {"name": "numpy_sgd"}
+    assert register["chunk_bytes"] == 1024
+    assert steps == [4, 5]
+    assert log.last_synced_step() == 3
+    log.close()
+
+
+def test_replay_plan_upload_supersedes_earlier_steps(tmp_path):
+    """A push (upload) onto a live runner captures device state just like
+    a sync: steps issued before it must not replay on top of it."""
+    p = str(tmp_path / "log.bin")
+    log = ApiLog(p, truncate=True)
+    log.append({"call": "program", "spec": {"name": "numpy_sgd"}})
+    log.append({"call": "register", "workdir": "/x", "layout": {},
+                "chunk_bytes": 1024})
+    log.append({"call": "upload", "step": 0, "paths": None})
+    for s in (1, 2):
+        log.append({"call": "step", "step": s})
+    log.append({"call": "upload", "step": 7, "paths": None})  # restore push
+    log.append({"call": "step", "step": 8})
+    _, _, steps = log.replay_plan()
+    assert steps == [8]
+    log.close()
+
+
+def test_truncate_vs_append_mode(tmp_path):
+    p = str(tmp_path / "log.bin")
+    log = ApiLog(p, truncate=True)
+    log.append({"call": "step", "step": 1})
+    log.close()
+    # append mode continues the existing log (a same-process reopen)
+    log2 = ApiLog(p)
+    log2.append({"call": "step", "step": 2})
+    log2.close()
+    assert [r["step"] for r in iter_records(p)] == [1, 2]
+    # truncate starts a new incarnation's log
+    log3 = ApiLog(p, truncate=True)
+    log3.append({"call": "step", "step": 9})
+    log3.close()
+    assert [r["step"] for r in iter_records(p)] == [9]
+
+
+def test_torn_tail_is_dropped_cleanly(tmp_path):
+    p = str(tmp_path / "log.bin")
+    log = ApiLog(p, truncate=True)
+    log.append({"call": "step", "step": 1})
+    log.append({"call": "step", "step": 2})
+    log.close()
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:  # crash mid-append: half a record at the tail
+        f.truncate(size - 3)
+    assert [r["step"] for r in iter_records(p)] == [1]
+
+
+def test_empty_and_missing_logs(tmp_path):
+    missing = str(tmp_path / "nope.bin")
+    assert list(iter_records(missing)) == []
+    p = str(tmp_path / "empty.bin")
+    ApiLog(p, truncate=True).close()
+    assert list(iter_records(p)) == []
+    assert ApiLog(p).last_synced_step() == 0

@@ -1,0 +1,161 @@
+"""The acceptance drill (CI smoke, ``integration``-marked): SIGKILL the
+proxy mid-training -> supervisor respawns it, replays the API log, and the
+final trained state is bit-identical to an uninterrupted run. Checkpoints
+taken under ``device_runner=proxy`` restore correctly through BOTH persist
+backends."""
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import CheckpointedTrainer, CheckpointPolicy, RestoreManager
+from repro.proxy import ProxyRunner, make_program
+from repro.utils.tree import tree_digest, tree_equal
+
+pytestmark = pytest.mark.integration
+
+BACKENDS = ["thread"] + (["fork"] if hasattr(os, "fork") else [])
+SPEC = {"name": "numpy_sgd", "rows": 8, "width": 32, "seed": 0}
+
+
+def _inline_run(n_steps, spec=SPEC):
+    prog = make_program(spec)
+    s = prog.init_state()
+    for step in range(1, n_steps + 1):
+        s, _ = prog.step(s, step)
+    return s
+
+
+def test_sigkill_mid_training_replays_bit_identical():
+    ref = _inline_run(20)
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10, max_restarts=2)
+    r.start()
+    try:
+        for s in range(1, 9):
+            r.step(s)
+        _, info = r.sync_state()
+        assert info["step"] == 8
+
+        pid = r.kill()  # SIGKILL with steps about to be in flight
+        assert pid is not None
+        for s in range(9, 21):
+            r.step(s)  # death detected here -> respawn + replay
+        state, info = r.sync_state()
+
+        assert r.restarts == 1
+        assert r.recoveries and r.recoveries[0]["resumed_from_step"] == 8
+        assert info["step"] == 20
+        assert tree_equal(state, ref)
+        assert info["digest"] == tree_digest(ref)
+    finally:
+        r.close()
+
+
+def test_sigkill_detected_at_sync_replays_bit_identical():
+    """Death between the last step and the sync barrier: the sync itself
+    must detect it, recover, and return the correct state."""
+    ref = _inline_run(10)
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10, max_restarts=2, sync_timeout_s=60)
+    r.start()
+    try:
+        for s in range(1, 11):
+            r.step(s)
+        r.proxy.flush()  # everything executed; now kill before SYNC
+        os.kill(r.proxy.pid, signal.SIGKILL)
+        state, info = r.sync_state()
+        assert r.restarts == 1
+        assert info["step"] == 10
+        assert tree_equal(state, ref)
+    finally:
+        r.close()
+
+
+def test_restart_budget_exhaustion_surfaces():
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10, max_restarts=0)
+    r.start()
+    try:
+        r.step(1)
+        r.sync_state()
+        r.kill()
+        with pytest.raises(RuntimeError, match="giving up"):
+            for s in range(2, 6):
+                r.step(s)
+            r.sync_state()
+    finally:
+        r.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_trainer_proxy_checkpoints_restore_through_backend(tmp_path, backend):
+    """CheckpointedTrainer(device_runner='proxy'): checkpoints taken from
+    the proxy's host mirror restore correctly (and restart resumes into a
+    fresh proxy) over each persist backend."""
+    root = str(tmp_path / f"ckpt-{backend}")
+    ref = _inline_run(12)
+
+    trainer = CheckpointedTrainer(
+        None,
+        store_root=root,
+        policy=CheckpointPolicy(interval_steps=4),
+        chunk_bytes=1 << 10,
+        backend=backend,
+        device_runner="proxy",
+        program=SPEC,
+    )
+
+    def init_state():
+        return {"device": None, "host": {"step": np.int64(0)}}
+
+    state, start = trainer.resume_or(init_state)
+    assert start == 0
+    state = trainer.run(state, num_steps=8, start_step=0)
+    trainer.finish()
+    assert [r.step for r in trainer.results] == [4, 8]
+    assert all(r.error is None for r in trainer.results)
+
+    # restart: a fresh trainer restores step 8 and pushes it into a new proxy
+    trainer2 = CheckpointedTrainer(
+        None,
+        store_root=root,
+        policy=CheckpointPolicy(interval_steps=4),
+        chunk_bytes=1 << 10,
+        backend=backend,
+        device_runner="proxy",
+        program=SPEC,
+    )
+    state2, start2 = trainer2.resume_or(init_state)
+    assert start2 == 8
+    assert tree_equal(state2["device"], _inline_run(8))
+    state2 = trainer2.run(state2, num_steps=4, start_step=8)
+    trainer2.finish()
+    assert tree_equal(state2["device"], ref)
+
+    # and the persisted image itself round-trips
+    restored, manifest = RestoreManager(trainer2.store).restore()
+    assert manifest.step == 12
+    assert tree_equal(restored["device"], ref)
+
+
+def test_trainer_survives_proxy_kill_mid_run(tmp_path):
+    """Kill the proxy in the middle of trainer.run(): training continues
+    transparently and the final state matches the uninterrupted run."""
+    root = str(tmp_path / "ckpt")
+    ref = _inline_run(10)
+    trainer = CheckpointedTrainer(
+        None,
+        store_root=root,
+        policy=CheckpointPolicy(interval_steps=5),
+        chunk_bytes=1 << 10,
+        device_runner="proxy",
+        program=SPEC,
+    )
+    state, _ = trainer.resume_or(lambda: {"device": None,
+                                          "host": {"step": np.int64(0)}})
+    state = trainer.run(state, num_steps=6, start_step=0)
+    trainer.runner.kill()
+    state = trainer.run(state, num_steps=4, start_step=6)
+    trainer.finish()
+    assert all(r.error is None for r in trainer.results)
+    assert trainer.runner.restarts == 1
+    assert tree_equal(state["device"], ref)
