@@ -19,6 +19,7 @@ import sys
 
 from benchmarks import ckpt_restart, coord_commit, incremental, overhead, roofline
 from benchmarks import proxy_overhead, strategies_real, strategies_synthetic
+from benchmarks import uvm_paging
 from benchmarks.common import ROWS
 
 ALL = {
@@ -29,6 +30,7 @@ ALL = {
     "strategies_real": strategies_real.run,      # Table 3
     "incremental": incremental.run,              # beyond-paper
     "coord_commit": coord_commit.run,            # cluster 2-phase commit
+    "uvm_paging": uvm_paging.run,                # UVM oversubscription + paged deltas
     "roofline": roofline.run,                    # §Roofline emitter
 }
 

@@ -1,0 +1,215 @@
+"""UVM paging benchmark — oversubscription, eviction policy, paged deltas.
+
+Three questions, mirroring the paper's UVM scenarios (and UVMBench's
+oversubscription sweeps):
+
+  1. What does paging cost per step as the working set exceeds the device
+     budget? (oversubscription ratio x{1.0, 1.5, 2.0}, both eviction
+     policies; ratio 1.0 is the no-oversubscription envelope row)
+  2. Do the eviction policies differ where they should? (a hot/cold access
+     pattern: LRU keeps the hot set, a cyclic scan is its worst case)
+  3. Does a paged checkpoint's delta bill scale with PAGES DIRTIED, not
+     state size? (k dirty pages -> chunks_synced/chunks_written ~ k while
+     total chunks stay constant)
+
+CSV rows land in benchmarks.common.ROWS like every other table, so
+``benchmarks.run --json`` ships them in the CI artifact.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.checkpoint.store import ChunkStore
+from repro.core.forked import ForkedCheckpointer
+from repro.uvm import ManagedSpace
+
+PAGE = 16 << 10          # 16 KiB pages: enough pages to make policies matter
+LEAF_ELEMS = 192 * 1024  # 768 KiB f32 per leaf
+N_LEAVES = 4             # ~3 MiB total state — CPU-friendly, still ~200 pages
+
+
+def _state() -> dict:
+    return {
+        f"layer{i}": (np.arange(LEAF_ELEMS, dtype=np.float32) + i)
+        for i in range(N_LEAVES)
+    }
+
+
+def _total_bytes(state: dict) -> int:
+    return sum(v.nbytes for v in state.values())
+
+
+def _managed(state: dict, ratio: float, policy: str) -> ManagedSpace:
+    cap = max(PAGE, int(_total_bytes(state) / ratio))
+    sp = ManagedSpace(cap, page_bytes=PAGE, eviction_policy=policy)
+    sp.register(state)
+    return sp
+
+
+def bench_step_overhead() -> None:
+    """Per-step cost vs oversubscription ratio, both policies."""
+    state = _state()
+
+    def raw_step() -> None:
+        for k in state:
+            state[k] = state[k] * 1.0001
+
+    base_s = timeit(raw_step, warmup=1, iters=5)
+    row("uvm_step_unmanaged", base_s * 1e6, total_mb=_total_bytes(state) >> 20)
+
+    for policy in ("lru", "clock"):
+        for ratio in (1.0, 1.5, 2.0):
+            sp = _managed(_state(), ratio, policy)
+
+            def paged_step() -> None:
+                dev = sp.read_state()
+                for k in dev:
+                    dev[k] = dev[k] * 1.0001
+                sp.write_state(dev)
+
+            t = timeit(paged_step, warmup=1, iters=5)
+            s = sp.stats
+            steps = 6  # warmup + iters
+            row(
+                f"uvm_step_{policy}_x{ratio:g}",
+                t * 1e6,
+                overhead_pct=round(100.0 * (t - base_s) / base_s, 1),
+                faults_per_step=round(s.faults / steps, 1),
+                evictions_per_step=round(s.evictions / steps, 1),
+                writebacks_per_step=round(s.writebacks / steps, 1),
+                h2d_mb=round(s.h2d_bytes / 1e6, 2),
+                d2h_mb=round(s.d2h_bytes / 1e6, 2),
+            )
+
+
+def bench_eviction_policy() -> None:
+    """Hot/cold reuse: the pattern where policies separate.
+
+    90% of accesses hit a hot 25% of pages; a good policy keeps the hot
+    set resident (high hit rate), a bad fit re-faults it continually.
+    """
+    for policy in ("lru", "clock"):
+        # budget = half of the ONE leaf being hammered: the hot quarter
+        # fits, the cold tail forces evictions through it
+        leaf = {"layer0": _state()["layer0"]}
+        sp = ManagedSpace(
+            max(PAGE, leaf["layer0"].nbytes // 2),
+            page_bytes=PAGE,
+            eviction_policy=policy,
+        )
+        sp.register(leaf)
+        path = "layer0"
+        n_pages = sp.table(path).n_pages
+        hot = max(1, n_pages // 4)
+        rng = np.random.default_rng(0)
+        ones = np.ones(PAGE // 4, np.float32)
+
+        def access_round() -> None:
+            for _ in range(64):
+                if rng.random() < 0.9:
+                    p = int(rng.integers(0, hot))
+                else:
+                    p = int(rng.integers(hot, n_pages))
+                sp.read_range(path, p * PAGE, min((p + 1) * PAGE, sp.table(path).nbytes))
+                if rng.random() < 0.3:
+                    sp.write_range(path, p * PAGE, ones[: sp.table(path).page_nbytes(p) // 4])
+
+        t = timeit(access_round, warmup=1, iters=5)
+        s = sp.stats
+        total_accesses = s.hits + s.faults
+        row(
+            f"uvm_hotcold_{policy}",
+            t * 1e6,
+            hit_rate_pct=round(100.0 * s.hits / max(1, total_accesses), 1),
+            faults=s.faults,
+            evictions=s.evictions,
+            writebacks=s.writebacks,
+        )
+
+
+def bench_ckpt_delta() -> None:
+    """Paged-checkpoint economics: delta bytes scale with pages dirtied."""
+    state = {"device": _state(), "host": {"step": np.int64(0)}}
+    sp = ManagedSpace(_total_bytes(state["device"]), page_bytes=PAGE)
+    sp.register(state["device"])
+    chunk_bytes = 32 << 10
+    with tempfile.TemporaryDirectory() as root:
+        ck = ForkedCheckpointer(
+            ChunkStore(root),
+            chunk_bytes=chunk_bytes,
+            incremental=True,
+            dirty_source=sp.as_dirty_source("device/"),
+        )
+        state["device"] = sp.peek_state()
+        ck.save_async(0, state).wait()  # the full base image
+        patch = np.ones(16, np.float32)
+        table = sp.table("layer0")
+        # distinct pages only: wrapping modulo n_pages would overstate the
+        # x-axis of the scaling claim
+        ks = sorted({1, 8, min(64, table.n_pages)})
+        for step, k_pages in enumerate(ks, start=1):
+            for p in range(k_pages):
+                sp.write_range("layer0", p * PAGE, patch)
+            state["device"] = sp.peek_state()
+            state["host"]["step"] = np.int64(step)
+            r = ck.save_async(step, state).wait()
+            row(
+                f"uvm_ckpt_delta_k{k_pages}",
+                r.blocking_s * 1e6,
+                pages_dirtied=k_pages,
+                chunks_synced=r.chunks_synced,
+                chunks_clean=r.chunks_clean,
+                chunks_written=r.chunks_written,
+                chunks_reused=r.chunks_reused,
+                bytes_written=r.bytes_written,
+                bytes_skipped=r.bytes_skipped,
+            )
+        ck.close()
+
+
+def bench_ckpt_blocking_envelope() -> None:
+    """x1.0 (no oversubscription) paged checkpointing vs the plain path:
+    the managed space must not cost blocking time when it is not paging."""
+    plain = {"device": _state(), "host": {"step": np.int64(0)}}
+    with tempfile.TemporaryDirectory() as root:
+        ck = ForkedCheckpointer(ChunkStore(root), chunk_bytes=32 << 10)
+        ck.save_async(0, plain).wait()
+        r_plain = ck.save_async(1, plain).wait()  # steady-state: digest gate
+        ck.close()
+
+    managed = {"device": _state(), "host": {"step": np.int64(0)}}
+    sp = ManagedSpace(_total_bytes(managed["device"]), page_bytes=PAGE)
+    sp.register(managed["device"])
+    with tempfile.TemporaryDirectory() as root:
+        ck = ForkedCheckpointer(
+            ChunkStore(root),
+            chunk_bytes=32 << 10,
+            dirty_source=sp.as_dirty_source("device/"),
+        )
+        managed["device"] = sp.peek_state()
+        ck.save_async(0, managed).wait()
+        managed["device"] = sp.peek_state()
+        managed["host"]["step"] = np.int64(1)
+        r_paged = ck.save_async(1, managed).wait()  # steady-state: page marks
+        ck.close()
+    row(
+        "uvm_ckpt_blocking_x1",
+        r_paged.blocking_s * 1e6,
+        plain_us=round(r_plain.blocking_s * 1e6, 1),
+        paged_chunks_synced=r_paged.chunks_synced,
+        plain_chunks_synced=r_plain.chunks_synced,
+    )
+
+
+def run() -> None:
+    bench_step_overhead()
+    bench_eviction_policy()
+    bench_ckpt_delta()
+    bench_ckpt_blocking_envelope()
+
+
+if __name__ == "__main__":
+    run()

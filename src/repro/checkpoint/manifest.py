@@ -280,6 +280,27 @@ def latest_committed_step(root: str) -> int | None:
     return steps[-1] if steps else None
 
 
+_STEP_FILE_RE = re.compile(r"^step_(\d{8})/")
+
+
+def referenced_steps(manifest: Manifest) -> set[int]:
+    """Steps whose payload files this (possibly delta) manifest references.
+
+    An incremental manifest's chunk records point into *earlier* steps'
+    ``data-h*.bin`` files; collecting one of those steps strands the delta.
+    GC planners (policy.gc_keep), the store-level GC safety net and the
+    checkpointer's in-flight-base pinning all consume this.
+    """
+    out: set[int] = set()
+    for lv in manifest.leaves.values():
+        for s in lv.shards:
+            for c in s.chunks:
+                m = _STEP_FILE_RE.match(c.file.replace("\\", "/"))
+                if m:
+                    out.add(int(m.group(1)))
+    return out
+
+
 def load_manifest(root: str, step: int) -> Manifest:
     if not is_committed(root, step):
         raise FileNotFoundError(f"step {step} not committed under {root}")

@@ -109,19 +109,40 @@ class ChunkStore:
         return raw
 
     # -- garbage collection ----------------------------------------------------
-    def gc(self, keep_steps: list[int]) -> list[int]:
+    def gc(self, keep_steps: list[int], *, pin_referenced: bool = True) -> list[int]:
         """Delete committed step dirs not in ``keep_steps``.
 
-        Never deletes a step that a kept delta manifest references: callers
-        pass the transitive closure (see policy.referenced_steps). Safe
-        against a concurrent collector on the same root (two trainers, or
-        trainer + cluster coordinator): a step another GC got to first is
-        simply skipped.
+        Never deletes a step that a surviving delta manifest references.
+        Policy callers already pass the transitive closure (see
+        policy.gc_keep), but the store re-derives it itself
+        (``pin_referenced``) as a safety net: a caller with a naive keep
+        list — or a manifest committed between the caller's plan and this
+        collection — must not strand an incremental chain. Safe against a
+        concurrent collector on the same root (two trainers, or trainer +
+        cluster coordinator): a step another GC got to first is simply
+        skipped.
         """
-        from repro.checkpoint.manifest import committed_steps
+        from repro.checkpoint.manifest import (
+            committed_steps,
+            load_manifest_if_committed,
+            referenced_steps,
+        )
         removed = []
         keep = set(keep_steps)
-        for s in committed_steps(self.root):
+        committed = committed_steps(self.root)
+        if pin_referenced:
+            # closure over the manifests that will survive: anything they
+            # reference survives too (and transitively its own references)
+            frontier = [s for s in committed if s in keep]
+            while frontier:
+                m = load_manifest_if_committed(self.root, frontier.pop())
+                if m is None:
+                    continue
+                for ref in referenced_steps(m):
+                    if ref not in keep:
+                        keep.add(ref)
+                        frontier.append(ref)
+        for s in committed:
             if s in keep:
                 continue
             d = step_dir(self.root, s)

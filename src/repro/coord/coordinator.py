@@ -68,6 +68,11 @@ class RoundRecord:
     round_s: float = 0.0          # first READY -> decision
     persist_s_max: float = 0.0    # slowest host's persist time
     bytes_written: int = 0
+    # incremental sync economy, summed over participants: how much of the
+    # cluster state the digest gate / page dirty bits proved unchanged
+    chunks_synced: int = 0        # chunks fetched device->host this round
+    chunks_clean: int = 0         # chunks proven (or known) unchanged
+    bytes_skipped: int = 0        # bytes the clean chunks did not move
 
 
 @dataclass
@@ -323,6 +328,15 @@ class Coordinator:
         )
         rec.bytes_written = sum(
             int(m.get("bytes_written", 0)) for m in r.acks.values()
+        )
+        rec.chunks_synced = sum(
+            int(m.get("chunks_synced", 0)) for m in r.acks.values()
+        )
+        rec.chunks_clean = sum(
+            int(m.get("chunks_clean", 0)) for m in r.acks.values()
+        )
+        rec.bytes_skipped = sum(
+            int(m.get("bytes_skipped", 0)) for m in r.acks.values()
         )
         rec.stragglers = self.stragglers.stragglers()
         rec.status = "committed"

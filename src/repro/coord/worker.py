@@ -427,4 +427,11 @@ def _persist_shards(conn, cfg: WorkerConfig, ck, state, step: int) -> None:
         bytes_written=r.bytes_written,
         chunks_written=r.chunks_written,
         chunks_reused=r.chunks_reused,
+        # incremental sync economy: what the digest gate (or page dirty
+        # bits) spared this host in phase 1 — the coordinator aggregates
+        # these into the round record so CLUSTER_LOG.jsonl shows per-round
+        # delta efficiency, not just bytes that did move
+        chunks_synced=r.chunks_synced,
+        chunks_clean=r.chunks_clean,
+        bytes_skipped=r.bytes_skipped,
     )

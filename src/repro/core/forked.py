@@ -76,6 +76,10 @@ class CheckpointResult:
     bytes_written: int = 0     # bytes written to storage (compressed)
     chunks_written: int = 0
     chunks_reused: int = 0     # delta references (incremental mode)
+    # phase-1 sync economy (what the digest gate / page dirty bits saved):
+    chunks_synced: int = 0     # chunks actually fetched device->host
+    chunks_clean: int = 0      # chunks the sync proved (or knew) unchanged
+    bytes_skipped: int = 0     # bytes the clean chunks did NOT move
     error: str | None = None
     done: threading.Event = field(default_factory=threading.Event, repr=False)
 
@@ -99,6 +103,7 @@ class PersistJob:
     shapes_dtypes: dict[str, tuple[list, str]]
     prev: Manifest | None
     meta: dict
+    shadow_gen: int = 0        # buffer generation the snapshot belongs to
 
 
 def _persist_image(
@@ -155,8 +160,19 @@ def _persist_image(
             for shard in by_path.get(path, []):
                 srec = ShardRecord(start=shard["start"], stop=shard["stop"])
                 shard_digests: list[int] = []
+                # digests the shadow already knows (maintained by sync and
+                # upload) need not be re-hashed; negative entries are the
+                # "unknown / backfill pending" sentinels and are recomputed
+                known = shard.get("digests")
                 for key, raw in iter_chunks(path, shard["data"], chunk_bytes):
-                    digest = chunk_digest_np(raw)
+                    if (
+                        known is not None
+                        and key.index < len(known)
+                        and known[key.index] >= 0
+                    ):
+                        digest = known[key.index]
+                    else:
+                        digest = chunk_digest_np(raw)
                     shard_digests.append(digest)
                     old = prev_map.get(
                         (path, tuple(srec.start), tuple(srec.stop), key.index)
@@ -264,7 +280,7 @@ class ThreadPersistBackend(PersistBackend):
                 external_commit=ck.external_commit,
             )
             for key, d in digests.items():
-                job.shadow.set_digests(key, d)
+                job.shadow.set_digests(key, d, generation=job.shadow_gen)
             ck._note_manifest(manifest)
         except Exception as e:  # surfaced at wait()
             result.error = f"{type(e).__name__}: {e}"
@@ -445,7 +461,7 @@ class ForkPersistBackend(PersistBackend):
                     result.error = final["error"]
                 else:
                     for key, d in final["digests"].items():
-                        job.shadow.set_digests(key, d)
+                        job.shadow.set_digests(key, d, generation=job.shadow_gen)
                     ck._note_manifest(Manifest.from_bytes(final["manifest"]))
             if result.error is None and final is None:
                 result.error = (
@@ -533,6 +549,7 @@ class ForkedCheckpointer:
         fsync: bool = False,
         backend: str = "thread",
         external_commit: bool = False,
+        dirty_source: Any = None,
         timings: Timings | None = None,
     ):
         self.store = store
@@ -550,6 +567,11 @@ class ForkedCheckpointer:
         # commit_confirmed(), never implicitly (an aborted round's chunks
         # may be overwritten by the retry).
         self.external_commit = external_commit
+        # dirty_source: page-granular dirty history (a ManagedSpace adapter:
+        # tick() + dirty_chunk_marks_since(tick, chunk_bytes)). When set,
+        # phase 1 marks exactly the chunks written since THIS buffer's last
+        # sync — page-delta sync instead of whole-leaf digest scans.
+        self.dirty_source = dirty_source
         self.timings = timings or Timings()
         self._pending: list[CheckpointResult] = []
         self._prev_manifest: Manifest | None = None
@@ -571,6 +593,13 @@ class ForkedCheckpointer:
         # race for the buffer freed by the oldest pending checkpoint
         self._buf_cond = threading.Condition()
         self._buf_busy = [False] * len(self._buffers)
+        # per-buffer dirty-source watermark: buffer i's shadow content is
+        # current as of tick _buf_tick[i]; each buffer diffs against its OWN
+        # last sync (double buffering means buffers alternate checkpoints)
+        self._buf_tick = [-1] * len(self._buffers)
+        # steps whose payload an in-flight (uncommitted) delta persist still
+        # references — GC must not collect them out from under the child
+        self._inflight_bases: dict[int, set[int]] = {}
 
     # -- the checkpoint entry point ------------------------------------------
     def save_async(
@@ -583,11 +612,22 @@ class ForkedCheckpointer:
             # pick a free snapshot buffer (waits if all are persisting)
             buf_i = self._acquire_buffer()
             shadow = self._buffers[buf_i]
+            marks = None
+            now_tick = None
+            if self.dirty_source is not None:
+                # capture the tick BEFORE reading state: a write racing the
+                # capture lands after it and stays dirty for the next sync
+                now_tick = self.dirty_source.tick()
+                marks = self.dirty_source.dirty_chunk_marks_since(
+                    self._buf_tick[buf_i], self.chunk_bytes
+                )
             with self.timings.measure("ckpt/drain"):
                 drain(state)
             with self.timings.measure("ckpt/snapshot"):
-                shadow.mark_device_step()
+                shadow.mark_device_step(marks)
                 stats = shadow.sync(state)
+            if now_tick is not None:
+                self._buf_tick[buf_i] = now_tick
             skeleton = build_skeleton(state)
             shapes_dtypes = {
                 p: (list(np.shape(l)), np.dtype(
@@ -596,6 +636,9 @@ class ForkedCheckpointer:
                 for p, l in flatten_with_paths(state)[0].items()
             }
             result.bytes_snapshot = stats.bytes_fetched
+            result.chunks_synced = stats.chunks_fetched
+            result.chunks_clean = stats.chunks_total - stats.chunks_fetched
+            result.bytes_skipped = stats.bytes_total - stats.bytes_fetched
             result.blocking_s = time.perf_counter() - t0
 
         job = PersistJob(
@@ -607,6 +650,7 @@ class ForkedCheckpointer:
             shapes_dtypes=shapes_dtypes,
             prev=self._prev_manifest if self.incremental else None,
             meta=meta or {},
+            shadow_gen=shadow.generation,
         )
         # phase 2 (possibly a fork child) reads this buffer generation: a
         # re-registration must retire, not release, it until the job is done
@@ -614,12 +658,22 @@ class ForkedCheckpointer:
         self._reap()
         with self._lock:
             self._pending.append(result)
+            if job.prev is not None:
+                # the delta being written references the base image's chunk
+                # payloads: GC must keep them until this persist resolves
+                from repro.checkpoint.manifest import referenced_steps
+
+                self._inflight_bases[id(job)] = (
+                    {job.prev.step} | referenced_steps(job.prev)
+                )
         try:
             self.backend.submit(job)
         except BaseException as e:
             # never strand the claimed buffer or leave a result that can't
             # complete (close()/wait_all() would hang on it)
             result.error = f"persist submit failed: {type(e).__name__}: {e}"
+            with self._lock:
+                self._inflight_bases.pop(id(job), None)
             shadow.unpin()
             self._release_buffer(buf_i)
             result.done.set()
@@ -673,9 +727,24 @@ class ForkedCheckpointer:
     def _finish_job(self, job: PersistJob) -> None:
         """Common phase-2 epilogue: timing, buffer release, completion."""
         self.timings.add("ckpt/persist", job.result.persist_s)
+        with self._lock:
+            self._inflight_bases.pop(id(job), None)
         job.shadow.unpin()
         self._release_buffer(job.buf_index)
         job.result.done.set()
+
+    def inflight_delta_bases(self) -> set[int]:
+        """Steps an uncommitted in-flight delta persist still reads from.
+
+        ``trainer._gc`` passes these to the policy as extra pins: without
+        them a GC planned between submit and commit could collect a base
+        image whose chunks the pending manifest will reference.
+        """
+        with self._lock:
+            out: set[int] = set()
+            for bases in self._inflight_bases.values():
+                out |= bases
+            return out
 
     # -- lifecycle ---------------------------------------------------------------
     def wait_all(self, timeout: float | None = None) -> list[CheckpointResult]:

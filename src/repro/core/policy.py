@@ -8,25 +8,13 @@ references so GC never strands an incremental checkpoint's base chunks.
 """
 from __future__ import annotations
 
-import re
 import time
 from dataclasses import dataclass, field
 
-from repro.checkpoint.manifest import Manifest
-
-_STEP_FILE_RE = re.compile(r"^step_(\d{8})/")
-
-
-def referenced_steps(manifest: Manifest) -> set[int]:
-    """Steps whose payload files this (possibly delta) manifest references."""
-    out: set[int] = set()
-    for lv in manifest.leaves.values():
-        for s in lv.shards:
-            for c in s.chunks:
-                m = _STEP_FILE_RE.match(c.file.replace("\\", "/"))
-                if m:
-                    out.add(int(m.group(1)))
-    return out
+from repro.checkpoint.manifest import (  # noqa: F401  (re-exported; it lives
+    Manifest,                            # with the manifest format now)
+    referenced_steps,
+)
 
 
 @dataclass
@@ -55,13 +43,17 @@ class CheckpointPolicy:
         """Hook for SIGTERM/preemption notice: checkpoint at the next step."""
         self._preempt = True
 
-    def run_gc(self, store) -> list[int]:
+    def run_gc(self, store, *, extra_keep=()) -> list[int]:
         """Scan, plan and collect under this policy; returns removed steps.
 
         Tolerates a concurrent collector on the same root end to end: steps
         that vanish between the scan and the manifest read are treated as
         already collected (see load_manifest_if_committed), and the
         store-side deletion skips steps a racing GC got to first.
+
+        ``extra_keep`` pins additional steps (and their delta closure) —
+        the trainer passes the bases of in-flight incremental persists,
+        whose manifests are not on disk yet and so invisible to the scan.
         """
         from repro.checkpoint.manifest import (
             committed_steps,
@@ -76,18 +68,25 @@ class CheckpointPolicy:
         }
         if not manifests:
             return []
-        keep = self.gc_keep(sorted(manifests), manifests)
+        keep = self.gc_keep(sorted(manifests), manifests, extra_keep=extra_keep)
         if set(keep) == set(manifests):
             return []
         return store.gc(keep)
 
-    def gc_keep(self, committed: list[int], manifests: dict[int, Manifest]) -> list[int]:
+    def gc_keep(
+        self,
+        committed: list[int],
+        manifests: dict[int, Manifest],
+        *,
+        extra_keep=(),
+    ) -> list[int]:
         """Which steps to keep: keep_last + keep_every + delta closure."""
         keep: set[int] = set()
         for s in sorted(committed)[-self.keep_last :] if self.keep_last else []:
             keep.add(s)
         if self.keep_every:
             keep.update(s for s in committed if s % self.keep_every == 0)
+        keep.update(s for s in extra_keep if s in committed)
         # transitive closure over delta references
         frontier = list(keep)
         while frontier:

@@ -59,6 +59,10 @@ class _ShardStream:
     states: list[ChunkState]
     digests: list[int]                    # digest of current *shadow* content
     buffer: np.ndarray | None = None      # host shadow bytes (u8), lazily alloc'd
+    # True: the current DEVICE_DIRTY marks are page-granular truth (a
+    # ManagedSpace's write_tick history), so sync may fetch exactly those
+    # chunks and skip the digest compare entirely. Reset by every sync.
+    precise: bool = False
 
 
 @dataclass
@@ -195,6 +199,10 @@ class ShadowStateManager:
         self._pin_lock = threading.Lock()
         self._pins = 0
         self._retired: list[tuple[dict, list]] = []
+        # buffer generation: bumped by register() so a digest backfill from
+        # a persist of the *previous* generation can be recognized and
+        # dropped instead of installing stale digests into fresh streams
+        self.generation = 0
 
     def _alloc_buffer(self, nbytes: int, key: tuple[str, int] | None = None) -> np.ndarray:
         if self.segment_factory is not None and key is not None:
@@ -270,21 +278,56 @@ class ShadowStateManager:
                     states=[ChunkState.DEVICE_DIRTY] * nc,
                     digests=[-1] * nc,
                 )
+        self.generation += 1
         self._registered = True
 
     # -- Algorithm-1 events -----------------------------------------------------
-    def mark_device_step(self) -> None:
-        """Paper: a CUDA call may mutate real pages -> mark shadows stale."""
-        for s in self._streams.values():
-            for i, st in enumerate(s.states):
-                if st is ChunkState.CLEAN:
-                    s.states[i] = ChunkState.DEVICE_DIRTY
+    def mark_device_step(self, marks: dict[str, list[int]] | None = None) -> None:
+        """Paper: a CUDA call may mutate real pages -> mark shadows stale.
+
+        Without ``marks`` every CLEAN chunk becomes DEVICE_DIRTY (the
+        conservative pre-UVM behaviour: any step may have touched any
+        byte). With ``marks`` — ``{path: chunk indices}`` from a managed
+        space's page-granular write history — a path present in the dict
+        gets *exactly* those chunks marked, flagged ``precise`` so the next
+        sync fetches them without a digest scan; paths absent from the dict
+        (e.g. host-side leaves outside the managed space) stay
+        conservative. Precision only applies to single-stream (whole-leaf,
+        ordinal-0) paths; sharded leaves fall back to the digest path,
+        whose chunk indexing is per-shard, not per-leaf.
+        """
+        if marks is not None:
+            per_path: dict[str, int] = {}
+            for p, _ in self._streams:
+                per_path[p] = per_path.get(p, 0) + 1
+        for (path, ordinal), s in self._streams.items():
+            idx = marks.get(path) if marks is not None else None
+            if idx is not None and ordinal == 0 and per_path.get(path) == 1:
+                for i in idx:
+                    if 0 <= i < s.n_chunks and s.states[i] is ChunkState.CLEAN:
+                        s.states[i] = ChunkState.DEVICE_DIRTY
+                s.precise = True
+            else:
+                for i, st in enumerate(s.states):
+                    if st is ChunkState.CLEAN:
+                        s.states[i] = ChunkState.DEVICE_DIRTY
+                s.precise = False
 
     def mark_host_write(self, path: str) -> None:
         """Paper: write fault on a shadow page -> HOST_DIRTY."""
         for (p, _), s in self._streams.items():
             if p == path:
                 s.states = [ChunkState.HOST_DIRTY] * s.n_chunks
+
+    def mark_host_chunks(self, path: str, indices: list[int], *, ordinal: int = 0) -> None:
+        """Chunk-granular host-write marks (the proxy's delta-UPLOAD path):
+        only the listed chunks will be pushed by the next ``upload()``."""
+        s = self._streams.get((path, ordinal))
+        if s is None:
+            raise KeyError(f"no stream for {(path, ordinal)}")
+        for i in indices:
+            if 0 <= i < s.n_chunks:
+                s.states[i] = ChunkState.HOST_DIRTY
 
     # -- sync (the read-fault path, batched) ------------------------------------
     def sync(self, state: Any) -> SyncStats:
@@ -315,6 +358,7 @@ class ShadowStateManager:
         if stream.buffer is None:
             # first sync: everything must move regardless — bulk copy; the
             # digest pass is skipped when a persist phase will backfill it
+            stream.precise = False
             with self.timings.measure("shadow/fetch"):
                 stream.buffer = self._alloc_buffer(
                     stream.nbytes, (stream.path, stream.shard_ordinal)
@@ -334,19 +378,27 @@ class ShadowStateManager:
             i for i, st in enumerate(stream.states)
             if st is ChunkState.DEVICE_DIRTY
         ]
+        precise, stream.precise = stream.precise, False
         if not dirty:
             return stats
 
-        with self.timings.measure("shadow/digest"):
-            dev_digests = self._device_digests(data, stream)
+        if precise:
+            # page-granular marks are authoritative: fetch exactly them, no
+            # digest scan over the (mostly clean) rest of the leaf — the
+            # whole point of the UVM dirty-bit integration
+            dev_digests = None
+            changed = dirty
+        else:
+            with self.timings.measure("shadow/digest"):
+                dev_digests = self._device_digests(data, stream)
 
-        changed = [
-            i for i in dirty if dev_digests[i] != stream.digests[i]
-        ]
-        # unchanged-but-marked chunks are clean after the compare
-        for i in dirty:
-            if i not in changed:
-                stream.states[i] = ChunkState.CLEAN
+            changed = [
+                i for i in dirty if dev_digests[i] != stream.digests[i]
+            ]
+            # unchanged-but-marked chunks are clean after the compare
+            for i in dirty:
+                if i not in changed:
+                    stream.states[i] = ChunkState.CLEAN
 
         if not changed:
             return stats
@@ -361,7 +413,15 @@ class ShadowStateManager:
                 # everything dirty (first sync / full update): one bulk copy
                 host = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
                 np.copyto(stream.buffer, host)
-                stream.digests = list(dev_digests)
+                if dev_digests is not None:
+                    stream.digests = list(dev_digests)
+                else:
+                    stream.digests = [
+                        chunk_digest_np(
+                            stream.buffer[i * cb : min(stream.nbytes, (i + 1) * cb)]
+                        )
+                        for i in range(stream.n_chunks)
+                    ]
                 stream.states = [ChunkState.CLEAN] * stream.n_chunks
                 stats.chunks_fetched = stream.n_chunks
                 stats.bytes_fetched = stream.nbytes
@@ -370,7 +430,10 @@ class ShadowStateManager:
             for i in changed:
                 lo, hi = i * cb, min(stream.nbytes, (i + 1) * cb)
                 stream.buffer[lo:hi] = fetch(i, lo, hi)
-                stream.digests[i] = dev_digests[i]
+                stream.digests[i] = (
+                    dev_digests[i] if dev_digests is not None
+                    else chunk_digest_np(stream.buffer[lo:hi])
+                )
                 stream.states[i] = ChunkState.CLEAN
                 stats.chunks_fetched += 1
                 stats.bytes_fetched += hi - lo
@@ -553,19 +616,44 @@ class ShadowStateManager:
 
     # -- snapshot access ----------------------------------------------------------
     def snapshot(self) -> dict[tuple[str, int], dict]:
-        """The current shadow: {(path, ordinal): {start, stop, bytes}}."""
+        """The current shadow: {(path, ordinal): {start, stop, bytes}}.
+
+        ``digests`` carries the per-chunk shadow digests where known
+        (negative entries are the -1 "never computed" / -2 "backfill
+        pending" sentinels): the persist path uses a known digest instead
+        of re-hashing the chunk, so a page-delta sync is followed by a
+        page-delta digest bill, not a full-state rescan.
+        """
         out = {}
         for key, s in self._streams.items():
             if s.buffer is None:
                 raise RuntimeError(f"stream {key} never synced")
-            out[key] = {"start": s.start, "stop": s.stop, "data": s.buffer}
+            out[key] = {
+                "start": s.start, "stop": s.stop, "data": s.buffer,
+                "digests": list(s.digests),
+            }
         return out
 
     def chunk_states(self) -> dict[tuple[str, int], list[ChunkState]]:
         return {k: list(s.states) for k, s in self._streams.items()}
 
-    def set_digests(self, key: tuple[str, int], digests: list[int]) -> None:
-        """Backfill digests computed during persist (phase 2)."""
+    def set_digests(
+        self,
+        key: tuple[str, int],
+        digests: list[int],
+        *,
+        generation: int | None = None,
+    ) -> None:
+        """Backfill digests computed during persist (phase 2).
+
+        ``generation`` (when given) must match the buffer generation the
+        persist snapshotted: a backfill racing a re-registration would
+        otherwise install the *old* generation's digests into fresh
+        streams, and a later delta persist would silently reuse chunks
+        against the wrong baseline.
+        """
+        if generation is not None and generation != self.generation:
+            return
         s = self._streams.get(key)
         if s is not None and len(digests) == s.n_chunks:
             s.digests = list(digests)

@@ -21,6 +21,14 @@ architecture — compute runs in a separate restartable proxy process
 the app holds only the host mirror, and ``state["device"]`` is refreshed
 from the proxy at every sync/checkpoint boundary. A killed proxy is
 respawned and its API log replayed transparently mid-``run()``.
+
+Managed-memory axis (``device_capacity_bytes=``): when set, the device
+state lives in a ``repro.uvm.ManagedSpace`` — a paged managed address
+space with a hard device budget — so training states *larger than device
+memory* work: each step faults its working set in (evicting/writing back
+under pressure) and the checkpointer consumes the space's page-granular
+dirty history (page-delta sync instead of whole-leaf digest scans). In
+proxy mode the budget applies inside the proxy process instead.
 """
 from __future__ import annotations
 
@@ -56,6 +64,9 @@ class CheckpointedTrainer:
         device_runner: str = "inline",
         program: dict | None = None,
         proxy_opts: dict | None = None,
+        device_capacity_bytes: int | None = None,
+        page_bytes: int | None = None,
+        eviction_policy: str = "lru",
         timings: Timings | None = None,
     ):
         if device_runner not in DEVICE_RUNNERS:
@@ -67,6 +78,12 @@ class CheckpointedTrainer:
         self.store = ChunkStore(store_root)
         self.policy = policy or CheckpointPolicy(interval_steps=100)
         self.timings = timings or Timings()
+        self.device_capacity_bytes = (
+            int(device_capacity_bytes) if device_capacity_bytes else None
+        )
+        self.page_bytes = page_bytes
+        self.eviction_policy = eviction_policy
+        self.space = None  # ManagedSpace, created on first run() when capped
         self.checkpointer = ForkedCheckpointer(
             self.store,
             codec=codec,
@@ -85,9 +102,36 @@ class CheckpointedTrainer:
                 raise ValueError("device_runner='proxy' needs a program spec")
             from repro.proxy import ProxyRunner
 
+            popts = dict(proxy_opts or {})
+            if self.device_capacity_bytes is not None:
+                # the budget applies where the device state lives: inside
+                # the proxy process
+                popts.setdefault(
+                    "device_capacity_bytes", self.device_capacity_bytes
+                )
+                if page_bytes is not None:
+                    popts.setdefault("page_bytes", int(page_bytes))
+                popts.setdefault("eviction_policy", eviction_policy)
             self.runner = ProxyRunner(
-                program, chunk_bytes=chunk_bytes, **(proxy_opts or {})
+                program, chunk_bytes=chunk_bytes, **popts
             )
+
+    # -- managed memory -----------------------------------------------------------
+    def _ensure_space(self, device_state: Any) -> None:
+        """Back ``device_state`` with a ManagedSpace (inline managed mode)
+        and hand its dirty history to the checkpointer."""
+        from repro.uvm import DEFAULT_PAGE_BYTES, ManagedSpace
+
+        if self.space is None:
+            self.space = ManagedSpace(
+                self.device_capacity_bytes,
+                page_bytes=self.page_bytes or DEFAULT_PAGE_BYTES,
+                eviction_policy=self.eviction_policy,
+            )
+        self.space.register(device_state)
+        # state["device"] leaves appear under the "device/" prefix in the
+        # checkpointed pytree; marks must use those paths
+        self.checkpointer.dirty_source = self.space.as_dirty_source("device/")
 
     # -- restart ----------------------------------------------------------------
     def resume_or(
@@ -137,7 +181,11 @@ class CheckpointedTrainer:
         num_steps: int,
         start_step: int = 0,
         on_metrics: Callable[[int, Any], None] | None = None,
+        stop: Callable[[], bool] | None = None,
     ) -> Any:
+        """``stop`` (checked after each step's checkpoint decision) ends
+        the loop early — the preemption hook for callers that delegate
+        their loop here instead of hand-rolling one."""
         if self.runner is not None:
             if batches is not None:
                 raise ValueError(
@@ -148,21 +196,42 @@ class CheckpointedTrainer:
                 )
             return self._run_proxied(
                 state, num_steps=num_steps, start_step=start_step,
-                on_metrics=on_metrics,
+                on_metrics=on_metrics, stop=stop,
             )
         if batches is None:
             raise ValueError("inline device runner needs a batches iterator")
+        managed = self.device_capacity_bytes is not None
+        if managed:
+            self._ensure_space(state["device"])
         step = start_step
         for _ in range(num_steps):
             batch = next(batches)
             with self.timings.measure("train/step"):
-                state["device"], metrics = self.train_step(state["device"], batch)
+                if managed:
+                    # device access: fault the working set in under the
+                    # budget, compute, write-allocate the results back
+                    with self.timings.measure("train/page_in"):
+                        dev = self.space.read_state()
+                    dev, metrics = self.train_step(dev, batch)
+                    with self.timings.measure("train/page_out"):
+                        self.space.write_state(dev)
+                else:
+                    state["device"], metrics = self.train_step(
+                        state["device"], batch
+                    )
             step += 1
             state["host"]["step"] = np.int64(step)
             if on_metrics is not None:
                 on_metrics(step, metrics)
             if self.policy.should_checkpoint(step):
+                if managed:
+                    # coherent host view, no migrations: the sync source
+                    state["device"] = self.space.peek_state()
                 self.checkpoint_now(step, state)
+            if stop is not None and stop():
+                break
+        if managed:
+            state["device"] = self.space.peek_state()
         return state
 
     def _run_proxied(
@@ -172,6 +241,7 @@ class CheckpointedTrainer:
         num_steps: int,
         start_step: int,
         on_metrics: Callable[[int, Any], None] | None,
+        stop: Callable[[], bool] | None = None,
     ) -> Any:
         """Proxy mode: forward pipelined STEP calls, materialize the host
         mirror only at sync points (checkpoints and the final step).
@@ -190,6 +260,8 @@ class CheckpointedTrainer:
                 if on_metrics is not None:
                     on_metrics(step, info.get("metrics", {}))
                 self.checkpoint_now(step, state)
+            if stop is not None and stop():
+                break
         if synced_at != step:
             state["device"], info = self._sync_mirror()
             if on_metrics is not None:
@@ -200,6 +272,18 @@ class CheckpointedTrainer:
         with self.timings.measure("train/proxy_sync"):
             return self.runner.sync_state()
 
+    def materialize(self, state: Any) -> Any:
+        """Refresh ``state["device"]`` from the managed space (no-op when
+        unmanaged). Callers outside :meth:`run` — preemption handlers, the
+        launch CLI — use this before ``checkpoint_now``."""
+        if self.space is not None:
+            state["device"] = self.space.peek_state()
+        return state
+
+    def paging_stats(self) -> dict | None:
+        """The managed space's fault/eviction/migration counters."""
+        return self.space.stats_dict() if self.space is not None else None
+
     def checkpoint_now(self, step: int, state: Any) -> CheckpointResult:
         r = self.checkpointer.save_async(step, state, meta={"wall": time.time()})
         self.results.append(r)
@@ -208,7 +292,12 @@ class CheckpointedTrainer:
         return r
 
     def _gc(self) -> None:
-        self.policy.run_gc(self.store)
+        # pin the bases of in-flight incremental persists: their manifests
+        # are not on disk yet, so the policy's scan alone cannot see that
+        # an older step's chunks are still referenced
+        self.policy.run_gc(
+            self.store, extra_keep=self.checkpointer.inflight_delta_bases()
+        )
 
     # -- teardown ---------------------------------------------------------------
     def finish(self) -> list[CheckpointResult]:

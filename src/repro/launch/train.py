@@ -55,6 +55,17 @@ def main(argv=None) -> int:
              "architecture — compute in a restartable proxy process with "
              "API log-and-replay recovery",
     )
+    ap.add_argument(
+        "--device-capacity", default=None, metavar="BYTES|PCT%",
+        help="managed-memory (UVM) mode: hard device budget for the model "
+             "state, either absolute bytes or a percentage of the state "
+             "size (e.g. '50%%' = oversubscription ratio 2x). Pages "
+             "migrate on fault; the checkpointer syncs page deltas",
+    )
+    ap.add_argument("--page-bytes", type=int, default=None,
+                    help="managed-memory page size (default 64 KiB)")
+    ap.add_argument("--eviction-policy", choices=["lru", "clock"],
+                    default="lru", help="managed-memory eviction policy")
     ap.add_argument("--no-incremental", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
@@ -83,6 +94,8 @@ def main(argv=None) -> int:
         incremental=not args.no_incremental,
         chunk_bytes=1 << 20,
         backend=args.backend,
+        page_bytes=args.page_bytes,
+        eviction_policy=args.eviction_policy,
     )
     preempt = PreemptionHandler(trainer.policy).install()
 
@@ -120,6 +133,9 @@ def main(argv=None) -> int:
         )
         print(f"[train] arch={cfg.name} start_step={start} mesh={dict(mesh.shape)}")
 
+        if args.device_capacity is not None:
+            return _run_managed(args, trainer, state, start, data, preempt)
+
         step = start
         for _ in range(args.steps - start):
             batch = jax.tree.map(jnp.asarray, next(data))
@@ -142,7 +158,8 @@ def main(argv=None) -> int:
                 )
             if preempt.received.is_set():
                 print("[train] preemption: checkpointing and exiting")
-                trainer.checkpoint_now(step, state)
+                if _needs_preempt_ckpt(trainer, step):
+                    trainer.checkpoint_now(step, state)
                 break
 
         done = trainer.finish()
@@ -154,6 +171,71 @@ def main(argv=None) -> int:
             )
     preempt.uninstall()
     print(json.dumps({"final_step": step, "timings": trainer.timings.summary()}, indent=2))
+    return 0
+
+
+def _tree_nbytes(tree) -> int:
+    flat, _ = flatten_with_paths(tree)
+    return sum(int(np.asarray(l).nbytes) for l in flat.values())
+
+
+def _needs_preempt_ckpt(trainer, step: int) -> bool:
+    """SIGTERM sets the policy's preempt flag too, so the train loop may
+    already have checkpointed this very step before exiting — saving it
+    again would run two concurrent persists of the same step directory."""
+    return not trainer.results or trainer.results[-1].step != step
+
+
+def _resolve_capacity(spec: str, state_nbytes: int) -> int:
+    """'BYTES' or 'PCT%' (of the device state size) -> absolute bytes."""
+    s = str(spec).strip()
+    if s.endswith("%"):
+        return max(1, int(state_nbytes * float(s[:-1]) / 100.0))
+    return int(s)
+
+
+def _run_managed(args, trainer, state, start, data, preempt) -> int:
+    """Inline training through a ManagedSpace (the UVM oversubscription
+    path): the device budget is hard, pages migrate on fault, and the
+    checkpointer syncs page deltas instead of digest-scanning every leaf."""
+    state_nbytes = _tree_nbytes(state["device"])
+    cap = _resolve_capacity(args.device_capacity, state_nbytes)
+    trainer.device_capacity_bytes = cap
+    print(f"[uvm] device_capacity={cap}B state={state_nbytes}B "
+          f"oversubscription=x{state_nbytes / cap:.2f} "
+          f"policy={args.eviction_policy}", flush=True)
+
+    def batches():
+        while True:
+            yield jax.tree.map(jnp.asarray, next(data))
+
+    def on_metrics(step, metrics):
+        state["host"]["data"] = data.state()
+        if step % args.log_every == 0 or step == args.steps:
+            print(f"[train] step={step} loss={float(metrics['loss']):.4f}",
+                  flush=True)
+
+    state = trainer.run(
+        state, batches(), num_steps=args.steps - start, start_step=start,
+        on_metrics=on_metrics, stop=preempt.received.is_set,
+    )
+    step = int(np.asarray(state["host"]["step"]))
+    if preempt.received.is_set() and _needs_preempt_ckpt(trainer, step):
+        print("[train] preemption: checkpointing and exiting", flush=True)
+        trainer.checkpoint_now(step, trainer.materialize(state))
+    done = trainer.finish()
+    for r in done:
+        print(
+            f"[ckpt-done] step={r.step} blocking={r.blocking_s*1e3:.1f}ms "
+            f"synced={r.chunks_synced} clean={r.chunks_clean} "
+            f"written={r.chunks_written} reused={r.chunks_reused}"
+        )
+    preempt.uninstall()
+    print(json.dumps({
+        "final_step": step,
+        "paging": trainer.paging_stats(),
+        "timings": trainer.timings.summary(),
+    }, indent=2))
     return 0
 
 
@@ -176,6 +258,21 @@ def _main_proxy(args) -> int:
         "lr": args.lr,
         "total_steps": args.steps,
     }
+    capacity = None
+    if args.device_capacity is not None:
+        spec = str(args.device_capacity).strip()
+        if spec.endswith("%"):
+            # percentage of the program's device state, sized abstractly
+            # (eval_shape): the app must never materialize the state it is
+            # keeping out of its own process
+            from repro.proxy.programs import make_program
+
+            nbytes = make_program(program).state_nbytes()
+            capacity = _resolve_capacity(spec, nbytes)
+            print(f"[uvm] proxy device_capacity={capacity}B "
+                  f"state={nbytes}B", flush=True)
+        else:
+            capacity = int(spec)
     trainer = CheckpointedTrainer(
         None,
         store_root=args.ckpt_dir,
@@ -186,6 +283,9 @@ def _main_proxy(args) -> int:
         backend=args.backend,
         device_runner="proxy",
         program=program,
+        device_capacity_bytes=capacity,
+        page_bytes=args.page_bytes,
+        eviction_policy=args.eviction_policy,
     )
     preempt = PreemptionHandler(trainer.policy).install()
 
@@ -206,10 +306,10 @@ def _main_proxy(args) -> int:
 
     state = trainer.run(
         state, num_steps=args.steps - start, start_step=start,
-        on_metrics=on_metrics,
+        on_metrics=on_metrics, stop=preempt.received.is_set,
     )
     step = int(np.asarray(state["host"]["step"]))
-    if preempt.received.is_set():
+    if preempt.received.is_set() and _needs_preempt_ckpt(trainer, step):
         print("[train] preemption: checkpointing and exiting", flush=True)
         trainer.checkpoint_now(step, state)
     done = trainer.finish()

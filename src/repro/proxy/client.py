@@ -163,14 +163,40 @@ class DeviceProxy:
     def send_program(self, spec: dict) -> None:
         self._call(MSG_PROGRAM, spec=spec)
 
-    def register(self, workdir: str, layout: dict, *, chunk_bytes: int) -> None:
-        self._call(
-            MSG_REGISTER, workdir=workdir, layout=layout, chunk_bytes=chunk_bytes
+    def register(
+        self,
+        workdir: str,
+        layout: dict,
+        *,
+        chunk_bytes: int,
+        device_capacity_bytes: int | None = None,
+        page_bytes: int | None = None,
+        eviction_policy: str = "lru",
+    ) -> None:
+        fields: dict[str, Any] = dict(
+            workdir=workdir, layout=layout, chunk_bytes=chunk_bytes
         )
+        if device_capacity_bytes is not None:
+            # the proxy hosts its device state in a ManagedSpace: a state
+            # larger than this budget pages under the proxy's own arena
+            fields.update(
+                device_capacity_bytes=int(device_capacity_bytes),
+                page_bytes=page_bytes,
+                eviction_policy=eviction_policy,
+            )
+        self._call(MSG_REGISTER, **fields)
         self.inflight = 0
 
-    def upload(self, *, step: int, paths: list[str] | None = None) -> dict:
-        return self._call(MSG_UPLOAD, step=step, paths=paths)
+    def upload(
+        self,
+        *,
+        step: int,
+        paths: list[str] | None = None,
+        chunks: dict[str, list[int]] | None = None,
+    ) -> dict:
+        """Full upload (``paths``/None) or chunk-delta (``chunks``: only
+        those segment chunk ranges are ingested)."""
+        return self._call(MSG_UPLOAD, step=step, paths=paths, chunks=chunks)
 
     def step(self, step: int) -> None:
         """Pipelined: returns as soon as the frame is written. Auto-flushes

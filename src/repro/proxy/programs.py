@@ -39,6 +39,18 @@ class StepProgram:
         """Adapt a freshly-restored (numpy) state for this program."""
         return device_state
 
+    def state_nbytes(self) -> int:
+        """Total bytes of :meth:`init_state` WITHOUT materializing it where
+        possible (the app sizes a proxy's --device-capacity percentage from
+        this; allocating a giant state app-side would defeat the
+        device-clean split). Fallback: build one and measure."""
+        import numpy as np
+
+        from repro.utils.tree import flatten_with_paths
+
+        flat, _ = flatten_with_paths(self.init_state())
+        return sum(int(np.asarray(l).nbytes) for l in flat.values())
+
 
 _PROGRAMS: dict[str, Callable[..., StepProgram]] = {}
 
@@ -93,6 +105,9 @@ class NumpySGD(StepProgram):
         if self.step_time_s:
             time.sleep(self.step_time_s)
         return {"w": w, "m": m}, {"w_norm": float(np.linalg.norm(w))}
+
+    def state_nbytes(self) -> int:
+        return 2 * self.rows * self.width * 4  # w + m, float32
 
 
 class JaxTiny(StepProgram):
@@ -155,6 +170,9 @@ class JaxTiny(StepProgram):
 
         return self.jax.tree.map(jnp.asarray, d)
 
+    def state_nbytes(self) -> int:
+        return _abstract_state_nbytes(self.jax, self.init_state)
+
 
 class TrainArch(StepProgram):
     """A real architecture from ``repro.configs``, deterministic synthetic
@@ -214,6 +232,20 @@ class TrainArch(StepProgram):
         import jax.numpy as jnp
 
         return self.jax.tree.map(jnp.asarray, d)
+
+    def state_nbytes(self) -> int:
+        return _abstract_state_nbytes(self.jax, self.init_state)
+
+
+def _abstract_state_nbytes(jax, init_fn) -> int:
+    """Size a jax init under eval_shape: shapes/dtypes only, no buffers."""
+    import numpy as np
+
+    shapes = jax.eval_shape(init_fn)
+    return sum(
+        int(np.prod(l.shape, dtype=np.int64)) * np.dtype(l.dtype).itemsize
+        for l in jax.tree.leaves(shapes)
+    )
 
 
 register_step_program("numpy_sgd", NumpySGD)

@@ -11,8 +11,17 @@ through the pipe, only tiny control frames do.
 Application -> proxy::
 
     PROGRAM   {spec}                 construct the step program (replayable)
-    REGISTER  {layout, chunk_bytes}  attach data-plane segments; init state
-    UPLOAD    {paths, step}          ingest segment bytes into device state
+    REGISTER  {layout, chunk_bytes,  attach data-plane segments; init state.
+               device_capacity_bytes?, page_bytes?, eviction_policy?}
+                                     with a capacity the proxy hosts its
+                                     device state in a ManagedSpace (UVM
+                                     paging under a hard budget)
+    UPLOAD    {paths, step, chunks?} ingest segment bytes into device state.
+                                     ``chunks`` ({path: [chunk indices]})
+                                     is the delta form: only those chunk
+                                     ranges are read from the segments —
+                                     bytes-on-wire scales with dirty
+                                     chunks, not state size
     STEP      {step}                 run one train step — pipelined, NO reply
     FLUSH     {seq}                  pipeline barrier (control-plane only)
     SYNC      {}                     flush + write device state to segments
@@ -23,7 +32,7 @@ Proxy -> application::
     OK        {op, ...}              ack for PROGRAM/REGISTER/UPLOAD
     ERR       {op, error}            the call failed; proxy stays up
     FLUSHED   {seq, step}            pipeline empty up to ``seq``
-    SYNCED    {step, digest, metrics, chunks_synced, bytes_synced}
+    SYNCED    {step, digest, metrics, chunks_synced, bytes_synced, paging?}
 
 STEP carrying no reply is the proxying economy the paper measures in
 Fig. 4: the app runs ahead of the proxy exactly like JAX's async dispatch

@@ -83,6 +83,10 @@ class SegmentTable:
         self._segments: dict[str, SharedSegment] = {}
         self._treedef = None
         self._owns_dir = False
+        # cumulative bytes this side has written INTO the segments — the
+        # data-plane half of "bytes on the wire" (the wire-level delta
+        # tests assert it scales with dirty chunks, not state size)
+        self.bytes_written = 0
 
     # -- application side ------------------------------------------------------
     @classmethod
@@ -107,6 +111,7 @@ class SegmentTable:
             t._segments[path] = seg
             if arr.nbytes:
                 seg.view()[:] = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+                t.bytes_written += int(arr.nbytes)
         return t
 
     def write_state(self, state: Any) -> int:
@@ -128,6 +133,39 @@ class SegmentTable:
                     np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
                 )
             total += int(arr.nbytes)
+        self.bytes_written += total
+        return total
+
+    def write_chunks(
+        self, state: Any, chunks: dict[str, list[int]], chunk_bytes: int
+    ) -> int:
+        """Overwrite only the given chunk byte-ranges of each leaf's
+        segment — the delta half of a chunk-delta UPLOAD. Returns bytes
+        actually written (what crossed the data plane)."""
+        flat, _ = flatten_with_paths(state)
+        cb = int(chunk_bytes)
+        total = 0
+        for path, idxs in chunks.items():
+            spec = self.layout.get(path)
+            if spec is None:
+                raise KeyError(f"leaf {path!r} not in segment layout")
+            arr = np.asarray(flat[path])
+            if int(arr.nbytes) != spec["nbytes"]:
+                raise ValueError(
+                    f"leaf {path!r} is {arr.nbytes}B, segment is "
+                    f"{spec['nbytes']}B — re-register for shape changes"
+                )
+            if not idxs or not arr.nbytes:
+                continue
+            raw = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+            view = self.view(path)
+            for i in idxs:
+                lo, hi = i * cb, min(int(arr.nbytes), (i + 1) * cb)
+                if i < 0 or lo >= hi:
+                    raise IndexError(f"chunk {i} outside leaf {path!r}")
+                view[lo:hi] = raw[lo:hi]
+                total += hi - lo
+        self.bytes_written += total
         return total
 
     def read_state(self) -> Any:

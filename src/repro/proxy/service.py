@@ -59,6 +59,12 @@ class _ProxyService:
         self.segments = None
         self.shadow = None
         self.dstate: Any = None
+        # managed-memory mode (REGISTER with device_capacity_bytes): the
+        # device state lives in a ManagedSpace under a hard frame budget —
+        # the proxy can host a state larger than its "device" memory, and
+        # sync pushes page deltas instead of digest-scanning every leaf
+        self.space = None
+        self._space_sync_tick = -1
         self.last_step = 0
         self.last_metrics: dict = {}
 
@@ -84,9 +90,18 @@ class _ProxyService:
                 self._on_upload(msg)
             elif mtype == MSG_STEP:
                 # pipelined: no reply — the app is already issuing the next call
-                self.dstate, self.last_metrics = self.program.step(
-                    self.dstate, int(msg["step"])
-                )
+                if self.space is not None:
+                    # device access through the pager: fault the working
+                    # set in under the budget, write-allocate results back
+                    dstate = self.space.read_state()
+                    dstate, self.last_metrics = self.program.step(
+                        dstate, int(msg["step"])
+                    )
+                    self.space.write_state(dstate)
+                else:
+                    self.dstate, self.last_metrics = self.program.step(
+                        self.dstate, int(msg["step"])
+                    )
                 self.last_step = int(msg["step"])
             elif mtype == MSG_FLUSH:
                 self.conn.send(MSG_FLUSHED, seq=msg.get("seq", 0),
@@ -123,21 +138,91 @@ class _ProxyService:
             segment_factory=self.segments.factory,
         )
         # the program defines the structure; uploads overwrite the content
-        self.dstate = self.program.init_state()
-        self.shadow.register(self.dstate)
+        init = self.program.init_state()
+        capacity = msg.get("device_capacity_bytes")
+        if capacity:
+            from repro.uvm import DEFAULT_PAGE_BYTES, ManagedSpace
+
+            self.space = ManagedSpace(
+                int(capacity),
+                page_bytes=int(msg.get("page_bytes") or DEFAULT_PAGE_BYTES),
+                eviction_policy=msg.get("eviction_policy") or "lru",
+            )
+            self.space.register(init)
+            self._space_sync_tick = -1
+            self.dstate = None  # authoritative bytes live in the space
+            self.shadow.register(self.space.peek_state())
+        else:
+            self.space = None
+            self.dstate = init
+            self.shadow.register(self.dstate)
         self.last_step = 0
         self.conn.send(MSG_OK, op=MSG_REGISTER)
 
-    def _on_upload(self, msg: dict) -> None:
-        paths = msg.get("paths")
-        if paths is None:
-            from repro.utils.tree import flatten_with_paths
+    def _device_view(self) -> Any:
+        """The device state as a host pytree (coherent, no migrations)."""
+        return self.space.peek_state() if self.space is not None else self.dstate
 
-            paths = list(flatten_with_paths(self.dstate)[0])
-        for p in paths:
-            self.shadow.mark_host_write(p)
-        self.dstate, stats = self.shadow.upload(self.dstate)
-        self.dstate = self.program.on_restore(self.dstate)
+    def _on_upload(self, msg: dict) -> None:
+        chunks = msg.get("chunks")
+        if self.space is not None and chunks is not None:
+            self._delta_upload_into_space(msg, chunks)
+            return
+        state = self._device_view()
+        if chunks is not None:
+            # delta form: only the listed segment chunk ranges are stale
+            for p, idxs in chunks.items():
+                self.shadow.mark_host_chunks(p, [int(i) for i in idxs])
+        else:
+            paths = msg.get("paths")
+            if paths is None:
+                from repro.utils.tree import flatten_with_paths
+
+                paths = list(flatten_with_paths(state)[0])
+            for p in paths:
+                self.shadow.mark_host_write(p)
+        state, stats = self.shadow.upload(state)
+        state = self.program.on_restore(state)
+        if self.space is not None:
+            self.space.load_state(state)
+        else:
+            self.dstate = state
+        self.last_step = int(msg.get("step", self.last_step))
+        self.conn.send(
+            MSG_OK,
+            op=MSG_UPLOAD,
+            bytes_uploaded=stats.bytes_uploaded,
+            chunks_uploaded=stats.chunks_uploaded,
+        )
+
+    def _delta_upload_into_space(self, msg: dict, chunks: dict) -> None:
+        """Chunk-delta upload into a paged device: splice ONLY the uploaded
+        byte ranges into the managed space, so untouched pages keep their
+        write history and the next page-delta SYNC stays a delta.
+
+        No ``on_restore`` here: a delta targets a live, already-adapted
+        state and is bytes-identical by construction (the full-upload path
+        keeps the adaptation hook).
+        """
+        from repro.utils.tree import flatten_with_paths
+
+        import numpy as np
+
+        cb = self.shadow.chunk_bytes
+        touched = {}
+        for p, idxs in chunks.items():
+            self.shadow.mark_host_chunks(p, [int(i) for i in idxs])
+            # a flat {full-path: leaf} dict flattens back to the same path
+            # strings, so the shadow finds its streams
+            touched[p] = self.space.peek_leaf(p)
+        patched, stats = self.shadow.upload(touched)
+        flat, _ = flatten_with_paths(patched)
+        for p, leaf in flat.items():
+            raw = np.ascontiguousarray(np.asarray(leaf)).reshape(-1).view(np.uint8)
+            nbytes = raw.nbytes
+            for i in sorted(int(i) for i in chunks[p]):
+                lo, hi = i * cb, min(nbytes, (i + 1) * cb)
+                self.space.load_range(p, lo, raw[lo:hi])
         self.last_step = int(msg.get("step", self.last_step))
         self.conn.send(
             MSG_OK,
@@ -149,13 +234,30 @@ class _ProxyService:
     def _on_sync(self) -> None:
         from repro.utils.tree import tree_digest
 
-        self.shadow.mark_device_step()
-        stats = self.shadow.sync(self.dstate)
+        fields: dict[str, Any] = {}
+        if self.space is not None:
+            # page-delta sync: mark exactly the chunks written since the
+            # last SYNC (the space's write-tick history), captured before
+            # the peek so nothing can fall between
+            tick = self.space.tick()
+            marks = self.space.dirty_chunk_marks_since(
+                self._space_sync_tick, self.shadow.chunk_bytes
+            )
+            state = self.space.peek_state()
+            self.shadow.mark_device_step(marks)
+            stats = self.shadow.sync(state)
+            self._space_sync_tick = tick
+            fields["paging"] = self.space.stats_dict()
+        else:
+            state = self.dstate
+            self.shadow.mark_device_step()
+            stats = self.shadow.sync(state)
         self.conn.send(
             MSG_SYNCED,
             step=self.last_step,
-            digest=tree_digest(self.dstate),
+            digest=tree_digest(state),
             metrics={k: float(v) for k, v in (self.last_metrics or {}).items()},
             chunks_synced=stats.chunks_fetched,
             bytes_synced=stats.bytes_fetched,
+            **fields,
         )

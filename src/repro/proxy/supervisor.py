@@ -29,6 +29,8 @@ import os
 import time
 from typing import Any
 
+import numpy as np
+
 from repro.core.failure import RestartBudget
 from repro.proxy.api_log import ApiLog
 from repro.proxy.client import DeviceProxy
@@ -46,6 +48,9 @@ class ProxyRunner:
         workdir: str | None = None,
         log_path: str | None = None,
         chunk_bytes: int = 1 << 20,
+        device_capacity_bytes: int | None = None,
+        page_bytes: int | None = None,
+        eviction_policy: str = "lru",
         max_restarts: int = 3,
         max_pipeline: int = 64,
         sync_timeout_s: float = 120.0,
@@ -56,6 +61,13 @@ class ProxyRunner:
     ):
         self.program_spec = dict(program_spec)
         self.chunk_bytes = int(chunk_bytes)
+        # UVM mode: the proxy hosts its device state in a ManagedSpace with
+        # this hard budget — states larger than "device" memory page
+        self.device_capacity_bytes = (
+            int(device_capacity_bytes) if device_capacity_bytes else None
+        )
+        self.page_bytes = page_bytes
+        self.eviction_policy = eviction_policy
         self.sync_timeout_s = sync_timeout_s
         self._proxy_opts = dict(
             mp_context=mp_context,
@@ -74,6 +86,11 @@ class ProxyRunner:
         self.last_synced_step = 0
         self.last_digest: str | None = None
         self._last_state: Any = None  # host mirror of the last acked sync
+        # STEP frames issued since the last acked sync/upload: while any
+        # are outstanding the proxy's device state has moved PAST the
+        # mirror, so a chunk-delta push diffed against the mirror would
+        # under-upload — push() falls back to a full upload then
+        self._steps_since_sync = 0
         self.recoveries: list[dict[str, Any]] = []
 
     # -- lifecycle ---------------------------------------------------------------
@@ -105,26 +122,78 @@ class ProxyRunner:
             "workdir": self.segments.workdir,
             "layout": self.segments.layout,
             "chunk_bytes": self.chunk_bytes,
+            "device_capacity_bytes": self.device_capacity_bytes,
+            "page_bytes": self.page_bytes,
+            "eviction_policy": self.eviction_policy,
         })
         self.log.append({"call": "upload", "step": int(base_step), "paths": None})
         self.last_synced_step = int(base_step)
         self._last_state = self.segments.read_state()
+        self._steps_since_sync = 0
         self._spawn_and_replay(upload_only=True)
         self.started = True
         return self._last_state
 
-    def push(self, device_state: Any) -> None:
-        """Overwrite proxy device state (restore path on a live runner)."""
+    def push(self, device_state: Any) -> dict[str, Any]:
+        """Overwrite proxy device state (restore path on a live runner).
+
+        Delta-aware: when the last acked sync mirror is structurally
+        compatible with ``device_state``, only the chunk ranges whose bytes
+        differ are rewritten into the segments and named in the UPLOAD
+        frame — bytes on the wire scale with dirty chunks, not state size.
+        Returns the proxy's UPLOAD ack ({bytes_uploaded, chunks_uploaded}).
+        """
         self._require_started()
-        self.segments.write_state(device_state)
+        chunks = (
+            self._chunk_delta(device_state)
+            if self._steps_since_sync == 0 else None
+        )
+        if chunks is None:
+            self.segments.write_state(device_state)
+        else:
+            self.segments.write_chunks(device_state, chunks, self.chunk_bytes)
         self._last_state = self.segments.read_state()
         self.log.append({
             "call": "upload", "step": self.last_synced_step, "paths": None,
+            "chunks": chunks,
         })
         try:
-            self.proxy.upload(step=self.last_synced_step)
+            reply = self.proxy.upload(step=self.last_synced_step, chunks=chunks)
         except ProxyDiedError:
+            # recovery rewrites the segments from the (already updated)
+            # mirror and replays a FULL upload — the pushed state lands
             self._recover()
+            return {"op": "UPLOAD", "replayed": True}
+        self._steps_since_sync = 0  # device == mirror again
+        return reply
+
+    def _chunk_delta(self, new_state: Any) -> dict[str, list[int]] | None:
+        """{path: chunk indices} whose bytes differ from the last acked
+        sync mirror; None when no mirror (or the tree changed shape) and a
+        full rewrite is required."""
+        if self._last_state is None:
+            return None
+        from repro.utils.tree import flatten_with_paths
+
+        old, _ = flatten_with_paths(self._last_state)
+        new, _ = flatten_with_paths(new_state)
+        if old.keys() != new.keys():
+            return None
+        cb = self.chunk_bytes
+        delta: dict[str, list[int]] = {}
+        for path, leaf in new.items():
+            a = np.ascontiguousarray(np.asarray(old[path]))
+            b = np.ascontiguousarray(np.asarray(leaf))
+            if a.nbytes != b.nbytes or a.dtype != b.dtype:
+                return None
+            if a.nbytes == 0:
+                continue
+            diff = np.flatnonzero(
+                a.reshape(-1).view(np.uint8) != b.reshape(-1).view(np.uint8)
+            )
+            if diff.size:
+                delta[path] = np.unique(diff // cb).tolist()
+        return delta
 
     def close(self) -> None:
         if self.proxy is not None:
@@ -142,6 +211,7 @@ class ProxyRunner:
         """Forward one train step; returns immediately (pipelined)."""
         self._require_started()
         self.log.append({"call": "step", "step": int(step)})
+        self._steps_since_sync += 1
         try:
             self.proxy.step(int(step))
         except ProxyDiedError:
@@ -177,6 +247,7 @@ class ProxyRunner:
             "digest": self.last_digest,
         })
         self._last_state = self.segments.read_state()
+        self._steps_since_sync = 0
         info = {
             "step": self.last_synced_step,
             "digest": self.last_digest,
@@ -185,6 +256,8 @@ class ProxyRunner:
             "bytes_synced": msg.get("bytes_synced", 0),
             "restarts": self.budget.count,
         }
+        if "paging" in msg:
+            info["paging"] = msg["paging"]
         return self._last_state, info
 
     # -- failure drills ------------------------------------------------------------
@@ -213,6 +286,9 @@ class ProxyRunner:
             self.segments.workdir,
             self.segments.layout,
             chunk_bytes=self.chunk_bytes,
+            device_capacity_bytes=self.device_capacity_bytes,
+            page_bytes=self.page_bytes,
+            eviction_policy=self.eviction_policy,
         )
         self.proxy.upload(step=self.last_synced_step)
         if upload_only:
@@ -243,6 +319,9 @@ class ProxyRunner:
                 break
             except ProxyDiedError:
                 continue
+        # the fresh incarnation re-executed exactly the steps past the
+        # last watermark: the mirror is stale by that many steps again
+        self._steps_since_sync = len(steps)
         self.recoveries.append({
             "recovery_s": time.perf_counter() - t0,
             "replayed_steps": len(steps),

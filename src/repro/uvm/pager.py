@@ -1,0 +1,349 @@
+"""Fault-driven host<->device migration under a hard frame budget.
+
+The device is modeled honestly as a bounded frame arena: ``capacity_bytes``
+divided into page frames, each holding the *actual bytes* of whichever page
+is resident. A device access to a non-resident page is a fault: the pager
+allocates a frame (evicting a victim when the arena is full — writing the
+victim back to the host backing store first if its device copy is newer)
+and migrates the page's bytes h2d. This makes oversubscription real: a
+working set larger than the arena physically cannot be resident at once,
+and every byte a policy decision saves or wastes is counted.
+
+Eviction policies (``cudaMemAdvise`` §: UVM's LRU vs the Volta+ access
+counters):
+
+    lru     strict least-recently-used over resident frames
+    clock   access-counter clock (second chance): a frame touched since the
+            hand last passed gets its reference bit cleared and is skipped
+            once; cold frames are evicted on first encounter
+
+Pages advised PREFERRED_HOST are evicted preferentially; PREFERRED_DEVICE
+pages are passed over while any unadvised victim exists.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.uvm.pagetable import PageTable, Residency
+
+
+@dataclass
+class PagingStats:
+    """Counters the benchmarks and round logs report."""
+
+    faults_read: int = 0
+    faults_write: int = 0
+    hits: int = 0               # device accesses to already-resident pages
+    prefetches: int = 0         # pages migrated ahead of a fault
+    evictions: int = 0
+    writebacks: int = 0         # evictions that had to copy d2h first
+    invalidations: int = 0      # frames dropped by load/overwrite (no copy)
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    resident_high_water: int = 0  # peak resident bytes
+
+    @property
+    def faults(self) -> int:
+        return self.faults_read + self.faults_write
+
+    def as_dict(self) -> dict:
+        d = {k: int(getattr(self, k)) for k in (
+            "faults_read", "faults_write", "hits", "prefetches", "evictions",
+            "writebacks", "invalidations", "h2d_bytes", "d2h_bytes",
+            "resident_high_water",
+        )}
+        d["faults"] = self.faults
+        return d
+
+
+class EvictionPolicy:
+    """Victim selection over device frames. Frames are identified by index
+    into the arena; the pager reports inserts/accesses/releases."""
+
+    name = "?"
+
+    def note_insert(self, fid: int) -> None:
+        raise NotImplementedError
+
+    def note_access(self, fid: int) -> None:
+        raise NotImplementedError
+
+    def forget(self, fid: int) -> None:
+        raise NotImplementedError
+
+    def pick_victim(self, eligible: Callable[[int], bool]) -> int | None:
+        """A frame id with ``eligible(fid)`` true, or None if none is."""
+        raise NotImplementedError
+
+
+class LRUPolicy(EvictionPolicy):
+    """Strict LRU: evict the least recently accessed eligible frame."""
+
+    name = "lru"
+
+    def __init__(self):
+        self._order: OrderedDict[int, None] = OrderedDict()
+
+    def note_insert(self, fid: int) -> None:
+        self._order[fid] = None
+        self._order.move_to_end(fid)
+
+    def note_access(self, fid: int) -> None:
+        if fid in self._order:
+            self._order.move_to_end(fid)
+
+    def forget(self, fid: int) -> None:
+        self._order.pop(fid, None)
+
+    def pick_victim(self, eligible: Callable[[int], bool]) -> int | None:
+        for fid in self._order:  # oldest first
+            if eligible(fid):
+                return fid
+        return None
+
+
+class ClockPolicy(EvictionPolicy):
+    """Access-counter clock (second chance). Referenced frames survive one
+    pass of the hand; a frame untouched between passes is evicted."""
+
+    name = "clock"
+
+    def __init__(self, n_frames: int):
+        self.ref = np.zeros(n_frames, np.bool_)
+        self.live = np.zeros(n_frames, np.bool_)
+        self._hand = 0
+
+    def note_insert(self, fid: int) -> None:
+        self.live[fid] = True
+        self.ref[fid] = True
+
+    def note_access(self, fid: int) -> None:
+        self.ref[fid] = True
+
+    def forget(self, fid: int) -> None:
+        self.live[fid] = False
+        self.ref[fid] = False
+
+    def pick_victim(self, eligible: Callable[[int], bool]) -> int | None:
+        n = len(self.live)
+        # two full sweeps: the first may only clear reference bits
+        for _ in range(2 * n):
+            fid = self._hand
+            self._hand = (self._hand + 1) % n
+            if not self.live[fid] or not eligible(fid):
+                continue
+            if self.ref[fid]:
+                self.ref[fid] = False  # second chance
+                continue
+            return fid
+        # everything referenced+eligible was given its chance: fall back to
+        # the first eligible frame so eviction always terminates
+        for fid in range(n):
+            if self.live[fid] and eligible(fid):
+                return fid
+        return None
+
+
+def make_eviction_policy(name: str, n_frames: int) -> EvictionPolicy:
+    if name == "lru":
+        return LRUPolicy()
+    if name == "clock":
+        return ClockPolicy(n_frames)
+    raise ValueError(f"unknown eviction policy {name!r}; have ['clock', 'lru']")
+
+
+class DeviceArena:
+    """The simulated device memory: ``n_frames`` page-sized byte frames."""
+
+    def __init__(self, capacity_bytes: int, page_bytes: int):
+        if capacity_bytes < page_bytes:
+            raise ValueError(
+                f"device capacity {capacity_bytes}B is smaller than one page "
+                f"({page_bytes}B) — nothing could ever be resident"
+            )
+        self.page_bytes = int(page_bytes)
+        self.n_frames = int(capacity_bytes) // self.page_bytes
+        self.frames = np.zeros((self.n_frames, self.page_bytes), np.uint8)
+        self.owner: list[tuple[PageTable, int] | None] = [None] * self.n_frames
+        self.free: list[int] = list(range(self.n_frames - 1, -1, -1))
+
+    @property
+    def resident_frames(self) -> int:
+        return self.n_frames - len(self.free)
+
+
+@dataclass
+class Pager:
+    """The fault/evict/write-back state machine over one arena.
+
+    ``host_of`` maps a PageTable to its host backing bytes (u8 view) —
+    supplied by the ManagedSpace that owns the regions.
+    """
+
+    arena: DeviceArena
+    policy: EvictionPolicy
+    host_of: Callable[[PageTable], np.ndarray]
+    stats: PagingStats = field(default_factory=PagingStats)
+    _pinned: set = field(default_factory=set)
+
+    # -- faulting ---------------------------------------------------------------
+    def fault_in(
+        self,
+        table: PageTable,
+        pages,
+        *,
+        write: bool,
+        tick: int,
+        prefetch: bool = False,
+        overwrite: bool = False,
+        pin: bool = False,
+        read_mostly: bool = False,
+    ) -> None:
+        """Make ``pages`` device-resident; count faults/hits/migrations.
+
+        ``overwrite`` is the write-allocate fast path: the caller is about
+        to overwrite the whole page, so the stale h2d copy is skipped.
+        ``pin`` keeps the faulted frames ineligible for eviction until
+        :meth:`unpin_all` — used while a windowed reader copies them out.
+        """
+        host = None  # lazy: only touched when a migration actually happens
+        for p in (int(x) for x in np.atleast_1d(pages)):
+            res = table.residency[p]
+            if res != Residency.HOST:
+                fid = int(table.frame[p])
+                if not prefetch:
+                    self.stats.hits += 1
+                self.policy.note_access(fid)
+                if write and res == Residency.BOTH:
+                    # a write collapses read-mostly duplication: the host
+                    # copy is stale from here until write-back
+                    table.residency[p] = Residency.DEVICE
+            else:
+                fid = self._take_frame()
+                self.arena.owner[fid] = (table, p)
+                table.frame[p] = fid
+                n = table.page_nbytes(p)
+                if not (write and overwrite):
+                    if host is None:
+                        host = self.host_of(table)
+                    lo, hi = table.page_span(p)
+                    self.arena.frames[fid, : hi - lo] = host[lo:hi]
+                    self.stats.h2d_bytes += n
+                if prefetch:
+                    self.stats.prefetches += 1
+                elif write:
+                    self.stats.faults_write += 1
+                else:
+                    self.stats.faults_read += 1
+                table.residency[p] = (
+                    Residency.BOTH
+                    if (not write and read_mostly)
+                    else Residency.DEVICE
+                )
+                self.policy.note_insert(fid)
+                self.stats.resident_high_water = max(
+                    self.stats.resident_high_water,
+                    self.arena.resident_frames * self.arena.page_bytes,
+                )
+            if write:
+                table.wb_dirty[p] = True
+                table.write_tick[p] = tick
+            table.access_tick[p] = tick
+            table.access_count[p] += 1
+            if pin:
+                self._pinned.add(int(table.frame[p]))
+
+    def unpin_all(self) -> None:
+        self._pinned.clear()
+
+    # -- eviction ---------------------------------------------------------------
+    def _take_frame(self) -> int:
+        if self.arena.free:
+            return self.arena.free.pop()
+        fid = self._pick_victim()
+        if fid is None:
+            raise RuntimeError(
+                "device arena exhausted with every frame pinned — shrink the "
+                "fault window or raise device_capacity_bytes"
+            )
+        self.evict(fid)
+        return self.arena.free.pop()
+
+    def _pick_victim(self) -> int | None:
+        from repro.uvm.advice import Advice
+
+        def unpinned(fid: int) -> bool:
+            return fid not in self._pinned
+
+        # eviction preference: advised-host pages first, unadvised next,
+        # advised-device pages only when nothing else remains
+        def advised_host(fid: int) -> bool:
+            if not unpinned(fid):
+                return False
+            owner = self.arena.owner[fid]
+            return owner is not None and bool(
+                owner[0].advice & Advice.PREFERRED_HOST
+            )
+
+        def not_device_preferred(fid: int) -> bool:
+            if not unpinned(fid):
+                return False
+            owner = self.arena.owner[fid]
+            return owner is None or not bool(
+                owner[0].advice & Advice.PREFERRED_DEVICE
+            )
+
+        for eligible in (advised_host, not_device_preferred, unpinned):
+            fid = self.policy.pick_victim(eligible)
+            if fid is not None:
+                return fid
+        return None
+
+    def evict(self, fid: int) -> None:
+        """Release one frame. A dirty page is ALWAYS written back first —
+        the invariant the property tests pin down."""
+        owner = self.arena.owner[fid]
+        if owner is None:
+            return
+        table, p = owner
+        if table.wb_dirty[p]:
+            lo, hi = table.page_span(p)
+            self.host_of(table)[lo:hi] = self.arena.frames[fid, : hi - lo]
+            table.wb_dirty[p] = False
+            self.stats.writebacks += 1
+            self.stats.d2h_bytes += hi - lo
+        table.residency[p] = Residency.HOST
+        table.frame[p] = -1
+        self.policy.forget(fid)
+        self.arena.owner[fid] = None
+        self.arena.free.append(fid)
+        self.stats.evictions += 1
+
+    def evict_table(self, table: PageTable) -> None:
+        """Write back and release every frame ``table`` holds."""
+        for p in table.device_pages():
+            self.evict(int(table.frame[p]))
+
+    def invalidate_page(self, table: PageTable, page: int) -> None:
+        """Drop one page's frame WITHOUT write-back — only valid when the
+        caller is about to overwrite that page's host backing (load /
+        restore): the device copy is superseded, not lost."""
+        if table.residency[page] == Residency.HOST:
+            return
+        fid = int(table.frame[page])
+        table.wb_dirty[page] = False
+        table.residency[page] = Residency.HOST
+        table.frame[page] = -1
+        self.policy.forget(fid)
+        self.arena.owner[fid] = None
+        self.arena.free.append(fid)
+        self.stats.invalidations += 1
+
+    def invalidate_table(self, table: PageTable) -> None:
+        """Whole-region :meth:`invalidate_page` (load_state/re-register)."""
+        for p in table.device_pages():
+            self.invalidate_page(table, int(p))

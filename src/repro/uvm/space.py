@@ -1,0 +1,404 @@
+"""ManagedSpace — the managed (UVM) address space backing a pytree.
+
+The public face of the paging subsystem. One space owns:
+
+  - a host backing buffer per pytree leaf (the managed allocation),
+  - one :class:`PageTable` per leaf (residency / dirty / access bits),
+  - one :class:`DeviceArena` bounded by ``device_capacity_bytes`` — the
+    hard budget that makes oversubscription mean something,
+  - the :class:`Pager` that migrates pages on fault and writes dirty
+    victims back on eviction.
+
+Access model (matching managed-memory semantics, not mirroring them):
+
+    read_leaf / read_state    device access: faults every touched page in
+                              (windowed, pinned, budget-respecting) and
+                              returns the assembled array — what a kernel
+                              sees.
+    write_leaf / write_state  device write access: write-allocates frames
+                              (no stale h2d copy), marks wb_dirty and
+                              stamps the page's write_tick.
+    peek_leaf / peek_state    coherent host read WITHOUT migration (the
+                              cudaMemcpy-from-managed path): host backing
+                              overlaid with any newer device frames. The
+                              checkpoint sync reads through this.
+    load_leaf / load_state    host overwrite (restore/upload): device
+                              frames are invalidated (superseded, not
+                              dropped), all pages become epoch-dirty.
+
+Dirty history is tick-based, not a single clearable bit: every write
+stamps ``write_tick``; ``dirty_chunk_marks_since(tick)`` answers "which
+checkpoint chunks changed after T?" for any T, so multiple shadow buffers
+(the forked checkpointer's double buffering) can each diff against their
+own last-sync tick without stepping on each other.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator
+
+import numpy as np
+
+from repro.uvm.advice import Advice
+from repro.uvm.pagetable import PageTable, Residency
+from repro.uvm.pager import (
+    DeviceArena,
+    Pager,
+    PagingStats,
+    make_eviction_policy,
+)
+from repro.utils.tree import flatten_with_paths, unflatten_from_paths
+
+DEFAULT_PAGE_BYTES = 64 << 10  # 64 KiB — x86 UVM's effective fault granule
+
+
+class _Region:
+    __slots__ = ("path", "shape", "dtype", "host", "table")
+
+    def __init__(self, path: str, arr: np.ndarray, page_bytes: int):
+        self.path = path
+        self.shape = tuple(arr.shape)
+        self.dtype = arr.dtype
+        self.host = np.ascontiguousarray(arr).reshape(-1).view(np.uint8).copy()
+        self.table = PageTable(path, self.host.nbytes, page_bytes)
+
+
+class ManagedSpace:
+    def __init__(
+        self,
+        device_capacity_bytes: int,
+        *,
+        page_bytes: int = DEFAULT_PAGE_BYTES,
+        eviction_policy: str = "lru",
+        fault_window_pages: int = 32,
+    ):
+        self.device_capacity_bytes = int(device_capacity_bytes)
+        self.page_bytes = int(page_bytes)
+        self.policy_name = eviction_policy
+        self.arena = DeviceArena(self.device_capacity_bytes, self.page_bytes)
+        self.pager = Pager(
+            arena=self.arena,
+            policy=make_eviction_policy(eviction_policy, self.arena.n_frames),
+            host_of=self._host_of,
+        )
+        # windowed access: pages pinned per window so faulting page k+1
+        # cannot evict page k before its bytes are copied out
+        self.fault_window = max(1, min(int(fault_window_pages), self.arena.n_frames))
+        self._regions: dict[str, _Region] = {}
+        self._treedef = None
+        self._tick = 0
+
+    # -- plumbing ---------------------------------------------------------------
+    def _host_of(self, table: PageTable) -> np.ndarray:
+        return self._regions[table.path].host
+
+    def table(self, path: str) -> PageTable:
+        return self._regions[path].table
+
+    def paths(self) -> list[str]:
+        return list(self._regions)
+
+    @property
+    def stats(self) -> PagingStats:
+        return self.pager.stats
+
+    def stats_dict(self) -> dict:
+        d = self.pager.stats.as_dict()
+        d.update(
+            device_capacity_bytes=self.device_capacity_bytes,
+            page_bytes=self.page_bytes,
+            policy=self.policy_name,
+            resident_bytes=self.device_bytes_resident(),
+            total_bytes=self.total_bytes(),
+        )
+        return d
+
+    def tick(self) -> int:
+        """Current write clock; writes after a reader captures this value
+        are guaranteed a strictly larger ``write_tick``."""
+        return self._tick
+
+    def total_bytes(self) -> int:
+        return sum(r.host.nbytes for r in self._regions.values())
+
+    def device_bytes_resident(self) -> int:
+        return self.arena.resident_frames * self.page_bytes
+
+    def oversubscription_ratio(self) -> float:
+        cap = self.device_capacity_bytes
+        return (self.total_bytes() / cap) if cap else float("inf")
+
+    # -- registration -----------------------------------------------------------
+    def register(self, state: Any) -> None:
+        """Back every leaf of ``state`` with a managed region.
+
+        Content starts HOST-resident (pages migrate on first device
+        access) and epoch-dirty relative to any tick before registration,
+        so a checkpoint consumer that has never synced sees everything.
+        """
+        flat, treedef = flatten_with_paths(state)
+        if self.arena.resident_frames:
+            for r in self._regions.values():
+                self.pager.invalidate_table(r.table)
+        self._regions = {
+            path: _Region(path, np.asarray(leaf), self.page_bytes)
+            for path, leaf in flat.items()
+        }
+        self._treedef = treedef
+        # registration replaces ALL content: stamp every page at a fresh
+        # tick so consumers holding a pre-registration watermark see
+        # everything dirty (the tick clock itself survives re-registration)
+        self._tick += 1
+        for r in self._regions.values():
+            r.table.write_tick[:] = self._tick
+
+    # -- device access (faulting) ----------------------------------------------
+    def _windows(self, lo_page: int, hi_page: int) -> Iterator[tuple[int, int]]:
+        for w_lo in range(lo_page, hi_page, self.fault_window):
+            yield w_lo, min(hi_page, w_lo + self.fault_window)
+
+    def read_range(self, path: str, lo: int, hi: int) -> np.ndarray:
+        """Device read of byte range [lo, hi): fault in, return the bytes."""
+        region = self._regions[path]
+        table = region.table
+        out = np.empty(hi - lo, np.uint8)
+        p_lo, p_hi = table.pages_for_range(lo, hi)
+        read_mostly = bool(table.advice & Advice.READ_MOSTLY)
+        for w_lo, w_hi in self._windows(p_lo, p_hi):
+            pages = np.arange(w_lo, w_hi)
+            self.pager.fault_in(
+                table, pages, write=False, tick=self._tick,
+                pin=True, read_mostly=read_mostly,
+            )
+            for p in pages:
+                s_lo, s_hi = table.page_span(int(p))
+                c_lo, c_hi = max(s_lo, lo), min(s_hi, hi)
+                if c_lo < c_hi:
+                    fid = int(table.frame[p])
+                    out[c_lo - lo : c_hi - lo] = self.arena.frames[
+                        fid, c_lo - s_lo : c_hi - s_lo
+                    ]
+            self.pager.unpin_all()
+        return out
+
+    def write_range(self, path: str, lo: int, data: np.ndarray) -> None:
+        """Device write at byte offset ``lo``: write-allocate + dirty."""
+        region = self._regions[path]
+        table = region.table
+        data = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+        hi = lo + data.nbytes
+        if hi > region.host.nbytes:
+            raise ValueError(
+                f"write of {data.nbytes}B at {lo} overruns {path!r} "
+                f"({region.host.nbytes}B)"
+            )
+        if data.nbytes == 0:
+            return
+        self._tick += 1
+        p_lo, p_hi = table.pages_for_range(lo, hi)
+        for w_lo, w_hi in self._windows(p_lo, p_hi):
+            pages = np.arange(w_lo, w_hi)
+            for p in pages:
+                s_lo, s_hi = table.page_span(int(p))
+                full_overwrite = lo <= s_lo and hi >= s_hi
+                self.pager.fault_in(
+                    table, [p], write=True, tick=self._tick,
+                    overwrite=full_overwrite, pin=True,
+                )
+                c_lo, c_hi = max(s_lo, lo), min(s_hi, hi)
+                fid = int(table.frame[p])
+                self.arena.frames[fid, c_lo - s_lo : c_hi - s_lo] = data[
+                    c_lo - lo : c_hi - lo
+                ]
+            self.pager.unpin_all()
+
+    def read_leaf(self, path: str) -> np.ndarray:
+        region = self._regions[path]
+        raw = self.read_range(path, 0, region.host.nbytes)
+        return raw.view(region.dtype).reshape(region.shape)
+
+    def write_leaf(self, path: str, arr: Any) -> None:
+        region = self._regions[path]
+        arr = np.asarray(arr)
+        if arr.nbytes != region.host.nbytes or arr.dtype != region.dtype:
+            raise ValueError(
+                f"leaf {path!r} is {region.host.nbytes}B {region.dtype}; "
+                f"got {arr.nbytes}B {arr.dtype} — re-register for reshapes"
+            )
+        self.write_range(path, 0, arr)
+
+    def read_state(self) -> Any:
+        """Fault the whole tree in (device access) and assemble it."""
+        leaves = {p: self.read_leaf(p) for p in self._regions}
+        return unflatten_from_paths(self._treedef, leaves)
+
+    def write_state(self, state: Any) -> None:
+        flat, _ = flatten_with_paths(state)
+        for path, leaf in flat.items():
+            self.write_leaf(path, leaf)
+
+    # -- coherent host access (no migration) -------------------------------------
+    def peek_range(self, path: str, lo: int, hi: int) -> np.ndarray:
+        """Coherent host read without migration: backing bytes overlaid
+        with device frames that are newer (wb_dirty)."""
+        region = self._regions[path]
+        table = region.table
+        out = region.host[lo:hi].copy()
+        dirty = np.flatnonzero(table.wb_dirty)
+        for p in dirty:
+            s_lo, s_hi = table.page_span(int(p))
+            c_lo, c_hi = max(s_lo, lo), min(s_hi, hi)
+            if c_lo < c_hi:
+                fid = int(table.frame[p])
+                out[c_lo - lo : c_hi - lo] = self.arena.frames[
+                    fid, c_lo - s_lo : c_hi - s_lo
+                ]
+        return out
+
+    def peek_leaf(self, path: str) -> np.ndarray:
+        region = self._regions[path]
+        raw = self.peek_range(path, 0, region.host.nbytes)
+        return raw.view(region.dtype).reshape(region.shape)
+
+    def peek_state(self) -> Any:
+        leaves = {p: self.peek_leaf(p) for p in self._regions}
+        return unflatten_from_paths(self._treedef, leaves)
+
+    # -- host overwrite (restore / upload) ---------------------------------------
+    def load_range(self, path: str, lo: int, data: np.ndarray) -> None:
+        """Host overwrite of byte range [lo, lo+len): the targeted form of
+        :meth:`load_leaf` a chunk-delta upload uses, so only the touched
+        pages become epoch-dirty. Fully-covered resident pages are
+        invalidated (superseded); partially-covered ones are evicted first
+        (write-back) so their untouched bytes survive the splice."""
+        region = self._regions[path]
+        table = region.table
+        data = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+        hi = lo + data.nbytes
+        if hi > region.host.nbytes:
+            raise ValueError(
+                f"load of {data.nbytes}B at {lo} overruns {path!r} "
+                f"({region.host.nbytes}B)"
+            )
+        if data.nbytes == 0:
+            return
+        p_lo, p_hi = table.pages_for_range(lo, hi)
+        for p in range(p_lo, p_hi):
+            if table.residency[p] == Residency.HOST:
+                continue
+            s_lo, s_hi = table.page_span(p)
+            if lo <= s_lo and hi >= s_hi:
+                self.pager.invalidate_page(table, p)
+            else:
+                self.pager.evict(int(table.frame[p]))
+        region.host[lo:hi] = data
+        self._tick += 1
+        table.write_tick[p_lo:p_hi] = self._tick
+
+    def load_leaf(self, path: str, arr: Any) -> None:
+        """Overwrite the host backing; device frames are superseded."""
+        region = self._regions[path]
+        arr = np.asarray(arr)
+        if arr.nbytes != region.host.nbytes:
+            raise ValueError(
+                f"load of {arr.nbytes}B into {path!r} ({region.host.nbytes}B)"
+            )
+        self.pager.invalidate_table(region.table)
+        if arr.nbytes:
+            region.host[:] = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+        self._tick += 1
+        region.table.write_tick[:] = self._tick
+
+    def load_state(self, state: Any) -> None:
+        flat, _ = flatten_with_paths(state)
+        for path, leaf in flat.items():
+            self.load_leaf(path, leaf)
+
+    # -- hints -------------------------------------------------------------------
+    def advise(self, path: str, advice: Advice) -> None:
+        self._regions[path].table.advice = int(advice)
+
+    def prefetch_pages(self, path: str, lo_page: int, hi_page: int) -> int:
+        """Migrate [lo_page, hi_page) h2d ahead of access; returns pages moved."""
+        table = self._regions[path].table
+        hi_page = min(hi_page, table.n_pages)
+        pages = np.arange(lo_page, hi_page)
+        pages = pages[table.residency[pages] == Residency.HOST]
+        if pages.size:
+            self.pager.fault_in(
+                table, pages, write=False, tick=self._tick, prefetch=True,
+                read_mostly=bool(table.advice & Advice.READ_MOSTLY),
+            )
+        return int(pages.size)
+
+    def prefetch(self, path: str, lo_page: int = 0, hi_page: int | None = None) -> int:
+        table = self._regions[path].table
+        return self.prefetch_pages(
+            path, lo_page, table.n_pages if hi_page is None else hi_page
+        )
+
+    # -- checkpoint integration ----------------------------------------------------
+    def dirty_pages_since(self, path: str, tick: int) -> np.ndarray:
+        return self._regions[path].table.dirty_pages_since(tick)
+
+    def dirty_chunk_marks_since(
+        self, tick: int, chunk_bytes: int
+    ) -> dict[str, list[int]]:
+        """{path: sorted chunk indices} dirtied strictly after ``tick``.
+
+        Every registered path appears (clean -> empty list): the shadow
+        treats absence as "unknown, be conservative", presence as an
+        authoritative page-granular answer.
+        """
+        out: dict[str, list[int]] = {}
+        cb = int(chunk_bytes)
+        for path, region in self._regions.items():
+            table = region.table
+            pages = table.dirty_pages_since(tick)
+            if pages.size == 0:
+                out[path] = []
+                continue
+            chunks: set[int] = set()
+            for p in pages:
+                lo, hi = table.page_span(int(p))
+                chunks.update(range(lo // cb, (max(hi, lo + 1) - 1) // cb + 1))
+            out[path] = sorted(chunks)
+        return out
+
+    def as_dirty_source(self, prefix: str = "") -> "SpaceDirtySource":
+        return SpaceDirtySource(self, prefix)
+
+    # -- verification ---------------------------------------------------------------
+    def check_invariants(self) -> None:
+        resident = 0
+        for region in self._regions.values():
+            region.table.check_invariants()
+            resident += region.table.device_pages().size
+        if resident != self.arena.resident_frames:
+            raise RuntimeError(
+                f"frame accounting skew: tables hold {resident}, arena says "
+                f"{self.arena.resident_frames}"
+            )
+        if resident * self.page_bytes > self.device_capacity_bytes:
+            raise RuntimeError("device budget exceeded")
+
+
+class SpaceDirtySource:
+    """Adapter: a ManagedSpace as a ForkedCheckpointer ``dirty_source``.
+
+    ``prefix`` maps space-local leaf paths to the checkpointed pytree's
+    paths (the trainer registers ``state['device']``, so its leaves appear
+    under ``device/`` in the full state).
+    """
+
+    def __init__(self, space: ManagedSpace, prefix: str = ""):
+        self.space = space
+        self.prefix = prefix
+
+    def tick(self) -> int:
+        return self.space.tick()
+
+    def dirty_chunk_marks_since(
+        self, tick: int, chunk_bytes: int
+    ) -> dict[str, list[int]]:
+        marks = self.space.dirty_chunk_marks_since(tick, chunk_bytes)
+        return {self.prefix + p: v for p, v in marks.items()}

@@ -1,0 +1,145 @@
+"""GC vs incremental delta chains: bases must survive their dependents.
+
+Two layers of protection, both tested:
+
+  - store-level: ``ChunkStore.gc`` re-derives the reference closure of the
+    surviving manifests, so even a naive keep list cannot strand a delta,
+  - checkpointer-level: bases of *in-flight* (not yet committed, hence
+    invisible on disk) delta persists are pinned via
+    ``inflight_delta_bases()``, which ``trainer._gc`` feeds to the policy.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manifest import committed_steps, load_manifest, referenced_steps
+from repro.checkpoint.store import ChunkStore
+from repro.core import CheckpointedTrainer, CheckpointPolicy
+from repro.core.forked import (
+    ForkedCheckpointer,
+    ThreadPersistBackend,
+    register_persist_backend,
+)
+from repro.core.restore import RestoreManager
+from repro.utils.tree import tree_equal
+
+
+def _state(step, n=4096):
+    base = np.arange(n, dtype=np.float32)
+    base[:8] += step  # small delta: most chunks reused
+    return {"w": base, "step": np.int64(step)}
+
+
+def test_store_gc_pins_delta_base(tmp_path):
+    """The regression: restore a delta checkpoint after its predecessor was
+    GC-eligible by the caller's naive keep list."""
+    store = ChunkStore(str(tmp_path / "s"))
+    ck = ForkedCheckpointer(store, chunk_bytes=1024, incremental=True)
+    s1 = _state(1)
+    ck.save_async(1, s1).wait()
+    s2 = _state(2)
+    r2 = ck.save_async(2, s2).wait()
+    ck.close()
+    assert r2.chunks_reused > 0, "step 2 must actually be a delta"
+    assert 1 in referenced_steps(load_manifest(store.root, 2))
+
+    removed = store.gc([2])  # naive keep list: step 1 looks collectable
+    assert removed == []  # the safety net pinned it
+    assert committed_steps(store.root) == [1, 2]
+
+    restored, _ = RestoreManager(store).restore(step=2)
+    assert tree_equal(restored, s2)
+
+    # with nothing kept, nothing is pinned: both steps collect
+    assert set(store.gc([])) == {1, 2}
+    assert committed_steps(store.root) == []
+
+
+def test_store_gc_pin_can_be_disabled(tmp_path):
+    store = ChunkStore(str(tmp_path / "s"))
+    ck = ForkedCheckpointer(store, chunk_bytes=1024, incremental=True)
+    ck.save_async(1, _state(1)).wait()
+    ck.save_async(2, _state(2)).wait()
+    ck.close()
+    assert store.gc([2], pin_referenced=False) == [1]  # the old behaviour
+
+
+class _GatedBackend(ThreadPersistBackend):
+    """Thread backend whose phase 2 blocks on a class-level gate — lets a
+    test hold a persist 'in flight' deterministically."""
+
+    name = "gated"
+    gate = threading.Event()
+
+    def _run(self, job):
+        type(self).gate.wait(30)
+        super()._run(job)
+
+
+register_persist_backend(_GatedBackend.name, _GatedBackend, replace=True)
+
+
+def test_inflight_delta_base_pinned_through_trainer_gc(tmp_path):
+    """A delta persist that has not committed yet references a base only
+    the checkpointer knows about; trainer._gc must keep that base alive
+    even when the policy alone would collect it."""
+    _GatedBackend.gate.clear()
+    trainer = CheckpointedTrainer(
+        None,
+        store_root=str(tmp_path / "t"),
+        policy=CheckpointPolicy(interval_steps=0, keep_last=1),
+        chunk_bytes=1024,
+        backend="gated",
+    )
+    ck = trainer.checkpointer
+    store = trainer.store
+
+    # steps 1 and 2 committed (gate open)
+    _GatedBackend.gate.set()
+    ck.save_async(1, _state(1)).wait()
+    ck.save_async(2, _state(2)).wait()
+
+    # step 3: held in flight, its delta base is the step-2 manifest
+    _GatedBackend.gate.clear()
+    r3 = ck.save_async(3, _state(3))
+    bases = ck.inflight_delta_bases()
+    assert 2 in bases
+
+    # keep_last=1 alone would collect step 1 AND step 2 (only 2 is kept by
+    # the policy; 1 is pinned by 2's references) — the in-flight pin is
+    # what keeps 2 itself
+    trainer._gc()
+    assert 2 in committed_steps(store.root), "in-flight delta base collected"
+
+    _GatedBackend.gate.set()
+    r3.wait()
+    trainer.finish()
+    assert ck.inflight_delta_bases() == set()
+
+    # the chain is intact: step 3 restores
+    restored, _ = RestoreManager(store).restore(step=3)
+    assert tree_equal(restored, _state(3))
+
+
+def test_policy_extra_keep_closure(tmp_path):
+    """extra_keep pins transitively: keeping a delta keeps its base."""
+    store = ChunkStore(str(tmp_path / "p"))
+    ck = ForkedCheckpointer(store, chunk_bytes=1024, incremental=True)
+    ck.save_async(1, _state(1)).wait()   # full base
+    ck.save_async(2, _state(2)).wait()   # delta on 1
+    ck.close()
+    # step 3 is a FULL image: keep_last=1 alone would collect 1 and 2
+    ck_full = ForkedCheckpointer(store, chunk_bytes=1024, incremental=False)
+    ck_full.save_async(3, _state(3)).wait()
+    ck_full.close()
+
+    policy = CheckpointPolicy(keep_last=1)
+    policy.run_gc(store, extra_keep={2})
+    # keep_last keeps 3 (self-contained); extra_keep pins 2, and the
+    # closure must then also keep 2's base, step 1
+    assert set(committed_steps(store.root)) == {1, 2, 3}
+
+    # without the extra pin, the window alone survives
+    assert set(policy.run_gc(store)) == {1, 2}
+    assert committed_steps(store.root) == [3]

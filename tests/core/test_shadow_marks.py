@@ -1,0 +1,123 @@
+"""Precise (page-granular) dirty marks on the ShadowStateManager."""
+import numpy as np
+
+from repro.core import ChunkState, ShadowStateManager
+
+
+def _state(n=4096):
+    return {"w": np.arange(n, dtype=np.float32),
+            "h": np.ones(64, np.float32)}
+
+
+def _synced_shadow(s, chunk_bytes=1024):
+    sh = ShadowStateManager(chunk_bytes=chunk_bytes, digest_on_device=False)
+    sh.register(s)
+    sh.sync(s)
+    return sh
+
+
+def test_precise_marks_fetch_exactly_marked_chunks():
+    s = _state()
+    sh = _synced_shadow(s)
+    s2 = dict(s)
+    w = np.array(s["w"])
+    w[300] = -1.0   # chunk 1
+    w[2000] = -2.0  # chunk 7
+    s2["w"] = w
+    sh.mark_device_step({"w": [1, 7], "h": []})
+    stats = sh.sync(s2)
+    # exactly the marked chunks moved — and NO digest pass decided that
+    assert stats.chunks_fetched == 2
+    snap = sh.snapshot()
+    assert np.array_equal(snap[("w", 0)]["data"].view(np.float32), w)
+
+
+def test_precise_marks_trusted_unmarked_changes_skipped():
+    """Trust contract: precise marks are authoritative. An unmarked change
+    is NOT fetched (the page table would have marked it)."""
+    s = _state()
+    sh = _synced_shadow(s)
+    s2 = dict(s)
+    w = np.array(s["w"])
+    w[300] = -1.0  # chunk 1, deliberately NOT marked
+    s2["w"] = w
+    sh.mark_device_step({"w": [], "h": []})
+    stats = sh.sync(s2)
+    assert stats.chunks_fetched == 0
+
+
+def test_unlisted_paths_stay_conservative():
+    """Paths outside the marks dict get the full digest-gated treatment."""
+    s = _state()
+    sh = _synced_shadow(s)
+    s2 = dict(s)
+    s2["h"] = s["h"] * 3.0  # changed, but 'h' is not in the marks dict
+    sh.mark_device_step({"w": []})
+    stats = sh.sync(s2)
+    assert stats.chunks_fetched == 1  # h's single chunk, found via digest
+    snap = sh.snapshot()
+    assert np.array_equal(snap[("h", 0)]["data"].view(np.float32), s2["h"])
+
+
+def test_precise_sync_maintains_digests_for_later_digest_sync():
+    """A precise sync must leave correct digests behind so a later
+    conservative sync's digest compare still works."""
+    s = _state()
+    sh = _synced_shadow(s)
+    s2 = dict(s)
+    w = np.array(s["w"]); w[0] = -5.0
+    s2["w"] = w
+    sh.mark_device_step({"w": [0], "h": []})
+    sh.sync(s2)
+    # now a conservative pass over an UNchanged state fetches nothing —
+    # only possible if the precise pass updated chunk 0's digest
+    sh.mark_device_step()
+    stats = sh.sync(s2)
+    assert stats.chunks_fetched == 0
+
+
+def test_precise_full_mark_bulk_path():
+    s = _state()
+    sh = _synced_shadow(s)
+    s2 = dict(s)
+    s2["w"] = np.array(s["w"]) + 1.0
+    n_chunks = len(sh.chunk_states()[("w", 0)])
+    sh.mark_device_step({"w": list(range(n_chunks)), "h": []})
+    stats = sh.sync(s2)
+    assert stats.chunks_fetched == n_chunks
+    sh.mark_device_step()
+    assert sh.sync(s2).chunks_fetched == 0  # digests correct after bulk
+
+
+def test_mark_host_chunks_partial_upload():
+    s = _state()
+    sh = _synced_shadow(s)
+    # mutate two chunks of the shadow buffer, mark only those
+    snap = sh.snapshot()
+    buf = snap[("w", 0)]["data"]
+    buf[0:4] = 255
+    buf[1024:1028] = 255
+    sh.mark_host_chunks("w", [0, 1])
+    states = sh.chunk_states()[("w", 0)]
+    assert states[0] is ChunkState.HOST_DIRTY
+    assert states[1] is ChunkState.HOST_DIRTY
+    assert all(c is ChunkState.CLEAN for c in states[2:])
+    new_state, stats = sh.upload(s)
+    assert stats.chunks_uploaded == 2
+    assert stats.bytes_uploaded == 2048
+    got = np.asarray(new_state["w"]).view(np.uint8)
+    assert (got[0:4] == 255).all() and (got[1024:1028] == 255).all()
+    ref = np.asarray(s["w"]).view(np.uint8)
+    assert np.array_equal(got[2048:], ref[2048:])
+
+
+def test_generation_guard_drops_stale_backfill():
+    s = _state()
+    sh = _synced_shadow(s)
+    gen = sh.generation
+    sh.register(s)  # re-registration bumps the generation
+    before = list(sh._streams[("w", 0)].digests)
+    sh.set_digests(("w", 0), [123] * len(before), generation=gen)
+    assert sh._streams[("w", 0)].digests == before  # stale backfill ignored
+    sh.set_digests(("w", 0), [123] * len(before), generation=sh.generation)
+    assert sh._streams[("w", 0)].digests == [123] * len(before)

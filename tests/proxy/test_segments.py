@@ -76,3 +76,25 @@ def test_factory_rejects_mismatched_sizes(tmp_path):
     with pytest.raises(ValueError):
         t.factory(("w", 1), 64)  # non-zero shard ordinal
     t.close()
+
+
+def test_write_chunks_delta_and_bounds(tmp_path):
+    s = {"w": np.arange(256, dtype=np.float32)}  # 1024B, 4 chunks of 256
+    t = SegmentTable.create(s, workdir=str(tmp_path))
+    base_bytes = t.bytes_written
+    s2 = {"w": np.array(s["w"])}
+    s2["w"][70] = -1.0  # chunk 1
+    written = t.write_chunks(s2, {"w": [1]}, 256)
+    assert written == 256
+    assert t.bytes_written == base_bytes + 256
+    got = t.view("w").view(np.float32)
+    assert got[70] == -1.0
+    assert np.array_equal(got[:64], s["w"][:64])  # chunk 0 untouched
+    # malformed indices are rejected, never silently "written"
+    with pytest.raises(IndexError):
+        t.write_chunks(s2, {"w": [-1]}, 256)
+    with pytest.raises(IndexError):
+        t.write_chunks(s2, {"w": [4]}, 256)
+    with pytest.raises(KeyError):
+        t.write_chunks(s2, {"nope": [0]}, 256)
+    t.close()

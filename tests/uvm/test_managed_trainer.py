@@ -1,0 +1,206 @@
+"""Oversubscribed training through CheckpointedTrainer: the acceptance
+drill — device_capacity = 50% of the model state; train, checkpoint,
+restore bit-identically, over both persist backends."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import CheckpointedTrainer, CheckpointPolicy
+from repro.utils.tree import tree_equal
+
+BACKENDS = ["thread"] + (["fork"] if hasattr(os, "fork") else [])
+
+N = 32 * 1024  # 128 KiB main leaf
+
+
+def _step_fn(dev, batch):
+    w = np.asarray(dev["w"] * 1.0001 + batch, np.float32)
+    return {"w": w, "b": dev["b"] + 1}, {"loss": float(w.sum())}
+
+
+def _batches(start=0):
+    i = start
+    while True:
+        i += 1
+        yield np.float32(i * 1e-3)
+
+
+def _init_state():
+    return {
+        "device": {"w": np.arange(N, dtype=np.float32) / 1e3,
+                   "b": np.zeros(8, np.float32)},
+        "host": {"step": np.int64(0)},
+    }
+
+
+def _state_bytes() -> int:
+    s = _init_state()["device"]
+    return sum(v.nbytes for v in s.values())
+
+
+def _trainer(root, backend, capacity, **kw):
+    return CheckpointedTrainer(
+        _step_fn,
+        store_root=str(root),
+        policy=CheckpointPolicy(interval_steps=2, keep_last=2),
+        chunk_bytes=8192,
+        backend=backend,
+        device_capacity_bytes=capacity,
+        page_bytes=4096,
+        **kw,
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_oversubscribed_roundtrip_bit_identical(tmp_path, backend):
+    cap = _state_bytes() // 2  # the acceptance ratio: 50% of state
+    tr = _trainer(tmp_path / backend, backend, cap)
+    state, start = tr.resume_or(_init_state)
+    state = tr.run(state, _batches(), num_steps=5, start_step=start)
+    tr.finish()
+    assert tr.space is not None
+    tr.space.check_invariants()
+    assert tr.space.stats.evictions > 0, "50% capacity must actually page"
+    assert tr.space.device_bytes_resident() <= cap
+
+    # reference: identical run, no managed memory
+    ref_tr = CheckpointedTrainer(
+        _step_fn, store_root=str(tmp_path / "ref"),
+        policy=CheckpointPolicy(interval_steps=100),
+    )
+    ref, _ = ref_tr.resume_or(_init_state)
+    ref = ref_tr.run(ref, _batches(), num_steps=5, start_step=0)
+    ref_tr.finish()
+    assert tree_equal(state["device"], ref["device"]), (
+        "paging must be transparent: managed == unmanaged bit-for-bit"
+    )
+
+    # restore (also oversubscribed) lands exactly on the step-4 checkpoint
+    tr2 = _trainer(tmp_path / backend, backend, cap)
+    restored, start2 = tr2.resume_or(_init_state)
+    assert start2 == 4
+    # continue to step 5 and re-converge with the uninterrupted run
+    restored = tr2.run(restored, _batches(4), num_steps=1, start_step=start2)
+    tr2.finish()
+    assert tree_equal(restored["device"], state["device"])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_managed_checkpoints_use_page_delta_sync(tmp_path, backend):
+    """After the first image, phase-1 sync cost tracks pages dirtied (all
+    pages here — but the host leaves prove marks flow: only the managed
+    paths get precise treatment and nothing is missed)."""
+    cap = _state_bytes()  # x1.0: no paging, pure delta accounting
+    tr = _trainer(tmp_path / "d", backend, cap)
+    state, start = tr.resume_or(_init_state)
+    state = tr.run(state, _batches(), num_steps=4, start_step=start)
+    done = tr.finish()
+    assert len(done) == 2
+    first, second = sorted(done, key=lambda r: r.step)
+    assert first.chunks_clean == 0          # everything moves into image 1
+    assert second.chunks_synced > 0         # the steps dirtied real chunks
+    assert second.error is None and first.error is None
+    # restore proves the delta image is complete
+    tr2 = _trainer(tmp_path / "d", backend, cap)
+    restored, start2 = tr2.resume_or(_init_state)
+    assert start2 == 4
+    assert tree_equal(restored["device"], state["device"])
+    tr2.finish()
+
+
+def test_managed_trainer_materialize_and_stats(tmp_path):
+    tr = _trainer(tmp_path / "m", "thread", _state_bytes() // 2)
+    state, start = tr.resume_or(_init_state)
+    state = tr.run(state, _batches(), num_steps=2, start_step=start)
+    # materialize is idempotent and matches the space's coherent view
+    m1 = tr.materialize(dict(state))
+    assert tree_equal(m1["device"], state["device"])
+    stats = tr.paging_stats()
+    assert stats is not None and stats["faults"] > 0
+    assert stats["device_capacity_bytes"] == _state_bytes() // 2
+    tr.finish()
+
+
+def test_preemption_checkpoints_step_exactly_once(tmp_path):
+    """SIGTERM sets BOTH the policy preempt flag and the stop event: the
+    loop checkpoints the step via the policy, and the caller-side guard
+    must not save the same step a second time (two concurrent persists of
+    one step directory would tear its files)."""
+    from repro.core import PreemptionHandler
+    from repro.launch.train import _needs_preempt_ckpt
+
+    tr = _trainer(tmp_path / "p", "thread", _state_bytes() // 2)
+    tr.policy.interval_steps = 50  # no cadence checkpoint in this window
+    preempt = PreemptionHandler(tr.policy).install()
+    try:
+        state, start = tr.resume_or(_init_state)
+
+        def on_metrics(step, m):
+            if step == 3:
+                preempt.received.set()
+                tr.policy.request_preempt_checkpoint()
+
+        state = tr.run(state, _batches(), num_steps=100, start_step=start,
+                       on_metrics=on_metrics, stop=preempt.received.is_set)
+        step = int(np.asarray(state["host"]["step"]))
+        assert step == 3
+        assert [r.step for r in tr.results] == [3]
+        assert not _needs_preempt_ckpt(tr, step)
+        tr.finish()
+    finally:
+        preempt.uninstall()
+
+
+def test_run_stop_hook_exits_early(tmp_path):
+    """The preemption seam: run(stop=...) ends the loop after the current
+    step instead of grinding out the remaining budget."""
+    tr = _trainer(tmp_path / "s", "thread", _state_bytes() // 2)
+    state, start = tr.resume_or(_init_state)
+    seen = []
+    state = tr.run(
+        state, _batches(), num_steps=1000, start_step=start,
+        on_metrics=lambda s, m: seen.append(s),
+        stop=lambda: len(seen) >= 3,
+    )
+    tr.finish()
+    assert seen == [1, 2, 3]
+    assert int(np.asarray(state["host"]["step"])) == 3
+
+
+@pytest.mark.paging_stress
+@pytest.mark.parametrize("policy", ["lru", "clock"])
+def test_paging_stress_large_oversubscription(tmp_path, policy):
+    """Heavy drill (excluded from tier-1): a 4 MiB state at 4x
+    oversubscription, many checkpoint rounds, restore at the end."""
+    big_n = 1 << 20  # 4 MiB f32
+
+    def init():
+        return {
+            "device": {"w": np.arange(big_n, dtype=np.float32),
+                       "b": np.zeros(64, np.float32)},
+            "host": {"step": np.int64(0)},
+        }
+
+    cap = (big_n * 4 + 256) // 4  # x4 oversubscription
+    tr = CheckpointedTrainer(
+        _step_fn, store_root=str(tmp_path / policy),
+        policy=CheckpointPolicy(interval_steps=2, keep_last=2),
+        chunk_bytes=1 << 18, backend="thread",
+        device_capacity_bytes=cap, page_bytes=1 << 16,
+        eviction_policy=policy,
+    )
+    state, start = tr.resume_or(init)
+    state = tr.run(state, _batches(), num_steps=8, start_step=start)
+    tr.finish()
+    tr.space.check_invariants()
+    assert tr.space.stats.evictions > 100
+    tr2 = CheckpointedTrainer(
+        _step_fn, store_root=str(tmp_path / policy),
+        device_capacity_bytes=cap, page_bytes=1 << 16,
+        eviction_policy=policy,
+    )
+    restored, start2 = tr2.resume_or(init)
+    assert start2 == 8
+    assert tree_equal(restored["device"], state["device"])
+    tr2.finish()

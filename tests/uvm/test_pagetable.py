@@ -1,0 +1,174 @@
+"""Page-table + pager state machine: fault/evict/write-back transitions."""
+import numpy as np
+import pytest
+
+from repro.uvm import (
+    Advice,
+    DeviceArena,
+    ManagedSpace,
+    PageTable,
+    PageTableError,
+    Residency,
+)
+
+PAGE = 1024
+
+
+def _space(total_pages=8, capacity_pages=4, policy="lru", **kw):
+    sp = ManagedSpace(capacity_pages * PAGE, page_bytes=PAGE,
+                      eviction_policy=policy, **kw)
+    sp.register({"x": np.arange(total_pages * PAGE // 4, dtype=np.float32)})
+    return sp
+
+
+def test_pages_start_host_resident():
+    sp = _space()
+    t = sp.table("x")
+    assert np.all(t.residency == Residency.HOST)
+    assert np.all(t.frame == -1)
+    sp.check_invariants()
+
+
+def test_read_fault_migrates_to_device():
+    sp = _space()
+    sp.read_range("x", 0, PAGE)
+    t = sp.table("x")
+    assert t.residency[0] == Residency.DEVICE
+    assert t.frame[0] >= 0
+    assert not t.wb_dirty[0]
+    assert sp.stats.faults_read == 1
+    assert sp.stats.h2d_bytes == PAGE
+    sp.check_invariants()
+
+
+def test_resident_access_is_a_hit_not_a_fault():
+    sp = _space()
+    sp.read_range("x", 0, PAGE)
+    sp.read_range("x", 0, PAGE)
+    assert sp.stats.faults == 1
+    assert sp.stats.hits == 1
+
+
+def test_write_fault_sets_dirty_and_tick():
+    sp = _space()
+    t0 = sp.tick()
+    sp.write_range("x", 0, np.ones(PAGE // 4, np.float32))
+    t = sp.table("x")
+    assert t.wb_dirty[0]
+    assert t.write_tick[0] > t0
+    assert sp.stats.faults_write == 1
+    # full-page overwrite is write-allocate: no stale h2d copy
+    assert sp.stats.h2d_bytes == 0
+
+
+def test_partial_page_write_pulls_page_first():
+    sp = _space()
+    sp.write_range("x", 16, np.ones(4, np.float32))
+    # the rest of the page must survive the partial write
+    got = sp.peek_leaf("x")
+    ref = np.arange(8 * PAGE // 4, dtype=np.float32)
+    ref[4:8] = 1.0
+    assert np.array_equal(got, ref)
+    assert sp.stats.h2d_bytes == PAGE  # the pull
+
+
+def test_eviction_writes_back_dirty_page():
+    """The core invariant: dirty pages are never dropped without write-back."""
+    sp = _space(total_pages=8, capacity_pages=2)
+    sp.write_range("x", 0, np.full(PAGE // 4, 7.0, np.float32))  # page 0 dirty
+    # touch enough other pages to force page 0 out of the 2-frame arena
+    for p in range(1, 8):
+        sp.read_range("x", p * PAGE, (p + 1) * PAGE)
+    t = sp.table("x")
+    assert t.residency[0] == Residency.HOST, "no DEVICE-resident page after eviction"
+    assert t.frame[0] == -1
+    assert not t.wb_dirty[0]
+    assert sp.stats.writebacks >= 1
+    # and the written bytes survived in the host backing
+    assert np.all(sp.peek_leaf("x")[: PAGE // 4] == 7.0)
+    # eviction does NOT erase checkpoint dirty history
+    assert 0 in sp.dirty_pages_since("x", -1)
+    sp.check_invariants()
+
+
+def test_budget_is_hard():
+    sp = _space(total_pages=16, capacity_pages=3)
+    sp.read_range("x", 0, 16 * PAGE)
+    assert sp.device_bytes_resident() <= sp.device_capacity_bytes
+    sp.check_invariants()
+
+
+def test_read_mostly_duplicates_and_write_collapses():
+    sp = _space()
+    sp.advise("x", Advice.READ_MOSTLY)
+    sp.read_range("x", 0, PAGE)
+    t = sp.table("x")
+    assert t.residency[0] == Residency.BOTH
+    sp.check_invariants()
+    sp.write_range("x", 0, np.ones(PAGE // 4, np.float32))
+    assert t.residency[0] == Residency.DEVICE  # duplication collapsed
+    assert t.wb_dirty[0]
+    sp.check_invariants()
+
+
+def test_prefetch_counts_as_prefetch_not_fault():
+    sp = _space()
+    moved = sp.prefetch("x", 0, 3)
+    assert moved == 3
+    assert sp.stats.prefetches == 3
+    assert sp.stats.faults == 0
+    # subsequent reads are hits
+    sp.read_range("x", 0, 3 * PAGE)
+    assert sp.stats.faults == 0
+    assert sp.stats.hits == 3
+
+
+def test_preferred_host_evicted_first():
+    state = {"a": np.zeros(2 * PAGE, np.uint8), "b": np.zeros(4 * PAGE, np.uint8)}
+    sp = ManagedSpace(2 * PAGE, page_bytes=PAGE)
+    sp.register(state)
+    sp.advise("a", Advice.PREFERRED_HOST)
+    sp.read_range("b", 0, PAGE)       # b0 resident (LRU-oldest)
+    sp.read_range("a", 0, PAGE)       # a0 resident; arena full
+    sp.read_range("b", PAGE, 2 * PAGE)  # needs a frame: victim must be a0,
+    ta, tb = sp.table("a"), sp.table("b")  # not the LRU-oldest b0
+    assert ta.residency[0] == Residency.HOST
+    assert tb.residency[0] != Residency.HOST
+    assert tb.residency[1] != Residency.HOST
+    sp.check_invariants()
+
+
+def test_preferred_device_evicted_last():
+    state = {"a": np.zeros(2 * PAGE, np.uint8), "b": np.zeros(4 * PAGE, np.uint8)}
+    sp = ManagedSpace(2 * PAGE, page_bytes=PAGE)
+    sp.register(state)
+    sp.advise("a", Advice.PREFERRED_DEVICE)
+    sp.read_range("a", 0, PAGE)       # a0 resident (LRU-oldest)
+    sp.read_range("b", 0, PAGE)       # b0 resident; arena full
+    sp.read_range("b", PAGE, 2 * PAGE)  # victim must be b0, not advised a0
+    ta, tb = sp.table("a"), sp.table("b")
+    assert ta.residency[0] != Residency.HOST
+    assert tb.residency[0] == Residency.HOST
+    sp.check_invariants()
+
+
+def test_invariant_checker_catches_corruption():
+    sp = _space()
+    sp.read_range("x", 0, PAGE)
+    t = sp.table("x")
+    t.wb_dirty[1] = True  # HOST page marked dirty = dropped write
+    with pytest.raises(PageTableError):
+        t.check_invariants()
+
+
+def test_arena_smaller_than_one_page_rejected():
+    with pytest.raises(ValueError):
+        DeviceArena(PAGE - 1, PAGE)
+
+
+def test_clock_policy_round_trip():
+    sp = _space(total_pages=12, capacity_pages=3, policy="clock")
+    out = sp.read_leaf("x")
+    assert np.array_equal(out, np.arange(12 * PAGE // 4, dtype=np.float32))
+    assert sp.stats.evictions >= 9
+    sp.check_invariants()

@@ -1,0 +1,131 @@
+"""Property tests: random op sequences vs a flat reference model.
+
+The reference model is the simplest possible semantics — a plain byte
+array per region that every write lands in immediately. Whatever the
+pager does (fault, duplicate, evict, write back, prefetch, invalidate),
+three things must hold after every op:
+
+  - coherent reads (peek AND faulting read) equal the reference bytes
+    ("dirty pages are never dropped without write-back"),
+  - the device budget is never exceeded and the page-table invariants
+    hold ("no DEVICE-resident page after eviction" etc.),
+  - dirty history is complete: every chunk whose reference bytes changed
+    since a captured tick appears in dirty_chunk_marks_since(tick).
+"""
+import numpy as np
+import pytest
+
+from repro.utils.testing import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.uvm import Advice, ManagedSpace
+
+if not HAVE_HYPOTHESIS:
+    pytest.skip("hypothesis not installed (pip install .[test])",
+                allow_module_level=True)
+
+PAGE = 512
+N_PAGES = 10
+CAP_PAGES = 3
+CHUNK = 768  # deliberately NOT page-aligned: chunk/page mapping must cope
+
+
+def _ops():
+    span = st.tuples(
+        st.integers(0, N_PAGES * PAGE - 1), st.integers(1, 3 * PAGE)
+    )
+    return st.lists(
+        st.one_of(
+            st.tuples(st.just("read"), span),
+            st.tuples(st.just("write"), span, st.integers(0, 255)),
+            st.tuples(st.just("peek"), span),
+            st.tuples(st.just("prefetch"),
+                      st.integers(0, N_PAGES - 1), st.integers(1, N_PAGES)),
+            st.tuples(st.just("advise"), st.sampled_from(
+                [Advice.NONE, Advice.READ_MOSTLY, Advice.PREFERRED_HOST,
+                 Advice.PREFERRED_DEVICE])),
+            st.tuples(st.just("load"), st.integers(0, 255)),
+        ),
+        min_size=1, max_size=40,
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_ops(), policy=st.sampled_from(["lru", "clock"]))
+def test_space_matches_reference_model(ops, policy):
+    sp = ManagedSpace(CAP_PAGES * PAGE, page_bytes=PAGE,
+                      eviction_policy=policy, fault_window_pages=2)
+    ref = np.zeros(N_PAGES * PAGE, np.uint8)
+    sp.register({"r": ref.copy()})
+    tick0 = sp.tick()
+    ref0 = ref.copy()
+
+    for op in ops:
+        kind = op[0]
+        if kind in ("read", "write", "peek"):
+            lo, length = op[1]
+            hi = min(N_PAGES * PAGE, lo + length)
+            if lo >= hi:
+                continue
+        if kind == "read":
+            got = sp.read_range("r", lo, hi)
+            assert np.array_equal(got, ref[lo:hi])
+        elif kind == "peek":
+            got = sp.peek_range("r", lo, hi)
+            assert np.array_equal(got, ref[lo:hi])
+        elif kind == "write":
+            val = np.full(hi - lo, op[2], np.uint8)
+            sp.write_range("r", lo, val)
+            ref[lo:hi] = val
+        elif kind == "prefetch":
+            lo_p = op[1]
+            sp.prefetch("r", lo_p, min(N_PAGES, lo_p + op[2]))
+        elif kind == "advise":
+            sp.advise("r", op[1])
+        elif kind == "load":
+            ref[:] = op[1]
+            sp.load_leaf("r", ref.copy())
+        # the three standing invariants, after EVERY op
+        sp.check_invariants()
+        assert sp.device_bytes_resident() <= sp.device_capacity_bytes
+
+    # final coherence through both read paths
+    assert np.array_equal(sp.peek_range("r", 0, ref.nbytes), ref)
+    assert np.array_equal(sp.read_range("r", 0, ref.nbytes), ref)
+    sp.check_invariants()
+
+    # dirty history completeness: every chunk that actually changed since
+    # tick0 must be marked (marks may over-approximate, never miss)
+    marked = set(sp.dirty_chunk_marks_since(tick0, CHUNK)["r"])
+    n_chunks = -(-ref.nbytes // CHUNK)
+    for c in range(n_chunks):
+        lo, hi = c * CHUNK, min(ref.nbytes, (c + 1) * CHUNK)
+        if not np.array_equal(ref[lo:hi], ref0[lo:hi]):
+            assert c in marked, f"changed chunk {c} missing from dirty marks"
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    writes=st.lists(
+        st.tuples(st.integers(0, N_PAGES - 1), st.integers(0, 255)),
+        min_size=1, max_size=12,
+    )
+)
+def test_eviction_always_writes_back(writes):
+    """Write pages, then force total eviction pressure: every written byte
+    must survive in the host backing, and nothing stays DEVICE-resident
+    after evict_table."""
+    sp = ManagedSpace(2 * PAGE, page_bytes=PAGE)
+    sp.register({"r": np.zeros(N_PAGES * PAGE, np.uint8)})
+    ref = np.zeros(N_PAGES * PAGE, np.uint8)
+    for page, val in writes:
+        data = np.full(PAGE, val, np.uint8)
+        sp.write_range("r", page * PAGE, data)
+        ref[page * PAGE : (page + 1) * PAGE] = val
+    table = sp.table("r")
+    sp.pager.evict_table(table)
+    assert table.device_pages().size == 0, "no DEVICE-resident page after eviction"
+    assert not table.wb_dirty.any(), "dirty bit survived eviction"
+    # host backing alone (no overlay possible now) equals the reference
+    region_host = sp._regions["r"].host
+    assert np.array_equal(region_host, ref)
+    sp.check_invariants()

@@ -1,0 +1,165 @@
+"""ManagedSpace: pytree-level coherence, dirty history, oversubscription."""
+import numpy as np
+import pytest
+
+from repro.uvm import Advice, ManagedSpace, PrefetchStream
+
+PAGE = 2048
+
+
+def _state():
+    return {
+        "params": {"w": np.arange(6 * PAGE // 4, dtype=np.float32),
+                   "b": np.ones(16, np.float32)},
+        "opt": np.zeros(3 * PAGE, np.uint8),
+    }
+
+
+@pytest.mark.parametrize("ratio", [1.0, 1.5, 2.0])
+@pytest.mark.parametrize("policy", ["lru", "clock"])
+def test_roundtrip_under_oversubscription(ratio, policy):
+    state = _state()
+    total = sum(np.asarray(v).nbytes for v in
+                [state["params"]["w"], state["params"]["b"], state["opt"]])
+    sp = ManagedSpace(max(PAGE, int(total / ratio)), page_bytes=PAGE,
+                      eviction_policy=policy)
+    sp.register(state)
+    got = sp.read_state()
+    assert np.array_equal(got["params"]["w"], state["params"]["w"])
+    assert np.array_equal(got["params"]["b"], state["params"]["b"])
+    assert np.array_equal(got["opt"], state["opt"])
+    # mutate + write back + peek coherently, repeatedly (forces cycling)
+    for it in range(3):
+        got["params"]["w"] = got["params"]["w"] + 1.0
+        got["opt"] = got["opt"] + 1
+        sp.write_state(got)
+        peek = sp.peek_state()
+        assert np.array_equal(peek["params"]["w"], state["params"]["w"] + it + 1)
+        assert np.array_equal(peek["opt"], state["opt"] + it + 1)
+        sp.check_invariants()
+        assert sp.device_bytes_resident() <= sp.device_capacity_bytes
+
+
+def test_dirty_marks_are_per_consumer_ticks():
+    """Two checkpoint consumers with different last-sync ticks each see
+    exactly the writes they missed — the double-buffering contract."""
+    state = {"w": np.zeros(8 * PAGE // 4, np.float32)}
+    sp = ManagedSpace(8 * PAGE, page_bytes=PAGE)
+    sp.register(state)
+    t_a = sp.tick()
+    sp.write_range("w", 0, np.ones(PAGE // 4, np.float32))      # page 0
+    t_b = sp.tick()
+    sp.write_range("w", 3 * PAGE, np.ones(PAGE // 4, np.float32))  # page 3
+    marks_a = sp.dirty_chunk_marks_since(t_a, PAGE)
+    marks_b = sp.dirty_chunk_marks_since(t_b, PAGE)
+    assert marks_a["w"] == [0, 3]   # consumer A missed both writes
+    assert marks_b["w"] == [3]      # consumer B already saw page 0
+    assert sp.dirty_chunk_marks_since(sp.tick(), PAGE)["w"] == []
+
+
+def test_chunk_marks_map_pages_to_chunks():
+    state = {"w": np.zeros(8 * PAGE, np.uint8)}
+    sp = ManagedSpace(8 * PAGE, page_bytes=PAGE)
+    sp.register(state)
+    t = sp.tick()
+    sp.write_range("w", 5 * PAGE, np.ones(10, np.uint8))
+    # chunk = 2 pages: page 5 -> chunk 2
+    assert sp.dirty_chunk_marks_since(t, 2 * PAGE)["w"] == [2]
+    # chunk = half page: page 5 covers chunks 10 and 11
+    assert sp.dirty_chunk_marks_since(t, PAGE // 2)["w"] == [10, 11]
+
+
+def test_load_state_invalidate_not_writeback():
+    state = {"w": np.zeros(4 * PAGE // 4, np.float32)}
+    sp = ManagedSpace(4 * PAGE, page_bytes=PAGE)
+    sp.register(state)
+    sp.write_range("w", 0, np.full(PAGE // 4, 5.0, np.float32))
+    new = {"w": np.full(4 * PAGE // 4, 9.0, np.float32)}
+    sp.load_state(new)
+    assert sp.stats.invalidations >= 1
+    assert sp.stats.writebacks == 0  # superseded, not dropped
+    assert np.array_equal(sp.peek_leaf("w"), new["w"])
+    assert np.array_equal(sp.read_leaf("w"), new["w"])
+    # a load dirties everything for every checkpoint consumer
+    assert len(sp.dirty_pages_since("w", sp.tick() - 1)) == 4
+    sp.check_invariants()
+
+
+def test_prefetch_stream_batches():
+    state = {"w": np.zeros(16 * PAGE, np.uint8)}
+    sp = ManagedSpace(16 * PAGE, page_bytes=PAGE)
+    sp.register(state)
+    stream = PrefetchStream(batch_pages=4)
+    stream.enqueue("w")  # whole leaf
+    moved = stream.drain(sp)
+    assert moved == 16
+    assert sp.stats.prefetches == 16
+    assert len(stream) == 0
+    sp.read_leaf("w")
+    assert sp.stats.faults == 0  # prefetch absorbed every would-be fault
+
+
+def test_register_replaces_previous_regions():
+    sp = ManagedSpace(8 * PAGE, page_bytes=PAGE)
+    sp.register({"w": np.zeros(4 * PAGE, np.uint8)})
+    sp.read_leaf("w")
+    assert sp.device_bytes_resident() > 0
+    sp.register({"v": np.ones(2 * PAGE, np.uint8)})
+    assert sp.paths() == ["v"]
+    assert sp.device_bytes_resident() == 0  # old frames released
+    assert np.array_equal(sp.read_leaf("v"), np.ones(2 * PAGE, np.uint8))
+    sp.check_invariants()
+
+
+def test_reregistration_dirties_everything_for_old_watermarks():
+    """A consumer holding a pre-registration tick must see the replaced
+    content as fully dirty — register() stamps a fresh tick."""
+    sp = ManagedSpace(8 * PAGE, page_bytes=PAGE)
+    sp.register({"w": np.zeros(4 * PAGE, np.uint8)})
+    sp.write_range("w", 0, np.ones(4, np.uint8))
+    watermark = sp.tick()  # consumer synced here
+    sp.register({"w": np.full(4 * PAGE, 9, np.uint8)})  # content replaced
+    marks = sp.dirty_chunk_marks_since(watermark, PAGE)
+    assert marks["w"] == [0, 1, 2, 3], "replaced content must be fully dirty"
+
+
+def test_load_range_dirties_only_touched_pages():
+    sp = ManagedSpace(8 * PAGE, page_bytes=PAGE)
+    sp.register({"w": np.zeros(8 * PAGE, np.uint8)})
+    sp.read_leaf("w")  # everything resident
+    t = sp.tick()
+    # splice 1.5 pages starting mid-page-2: pages 2 and 3 touched
+    sp.load_range("w", 2 * PAGE + PAGE // 2, np.ones(PAGE + PAGE // 2, np.uint8))
+    dirty = sp.dirty_pages_since("w", t).tolist()
+    assert dirty == [2, 3]
+    # coherence: untouched bytes intact, spliced bytes landed
+    got = sp.peek_leaf("w")
+    assert (got[: 2 * PAGE + PAGE // 2] == 0).all()
+    assert (got[2 * PAGE + PAGE // 2 : 4 * PAGE] == 1).all()
+    assert (got[4 * PAGE :] == 0).all()
+    assert np.array_equal(sp.read_leaf("w"), got)
+    sp.check_invariants()
+
+
+def test_load_range_preserves_dirty_device_bytes_outside_splice():
+    """A partially-covered resident dirty page is written back, not
+    dropped: its bytes outside the splice must survive."""
+    sp = ManagedSpace(8 * PAGE, page_bytes=PAGE)
+    sp.register({"w": np.zeros(4 * PAGE, np.uint8)})
+    sp.write_range("w", 0, np.full(PAGE, 5, np.uint8))  # page 0 dirty on device
+    sp.load_range("w", PAGE // 2, np.full(PAGE // 4, 7, np.uint8))
+    got = sp.peek_leaf("w")
+    assert (got[: PAGE // 2] == 5).all()            # survived the write-back
+    assert (got[PAGE // 2 : 3 * PAGE // 4] == 7).all()  # the splice
+    assert (got[3 * PAGE // 4 : PAGE] == 5).all()
+    sp.check_invariants()
+
+
+def test_dirty_source_adapter_prefixes_paths():
+    sp = ManagedSpace(4 * PAGE, page_bytes=PAGE)
+    sp.register({"w": np.zeros(2 * PAGE, np.uint8)})
+    src = sp.as_dirty_source("device/")
+    t = src.tick()
+    sp.write_range("w", 0, np.ones(4, np.uint8))
+    marks = src.dirty_chunk_marks_since(t, PAGE)
+    assert marks == {"device/w": [0]}
