@@ -1,0 +1,177 @@
+"""Remote-proxy data plane: wire economy + reschedule latency.
+
+Three measurements for the cross-host proxy transport
+(``repro.remote``):
+
+  1. **Wire bytes vs dirty chunks** — push a state with exactly k dirty
+     chunks through the streamed transport: payload bytes on the TCP
+     connection must scale with k, not with the state size (the chunk-
+     delta machinery from the paged-UPLOAD work, now crossing a real
+     wire). The bench *asserts* sub-linear behaviour vs full-state pushes.
+  2. **Streamed vs segment step overhead** — per-step wall time of the
+     pipelined runner over both transports; the stream pays its payload
+     framing only at SYNC points, so steady-state STEP cost should match.
+  3. **Reschedule-and-replay latency** — SIGKILL a proxy-host daemon
+     mid-run and time until training is caught back up on the survivor
+     with a bit-identical digest (CRAC's restart protocol across a host
+     boundary).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row, timeit
+from repro.proxy import ProxyRunner, make_program
+from repro.utils.tree import tree_digest
+
+SPEC = {"name": "numpy_sgd", "rows": 256, "width": 256, "seed": 0}
+CHUNK = 1 << 12  # 4 KiB chunks: plenty of chunks to dirty selectively
+WINDOW = 20
+
+
+def _wire_vs_dirty_chunks() -> None:
+    import numpy as np
+
+    r = ProxyRunner(SPEC, chunk_bytes=CHUNK, transport="stream")
+    state = r.start()
+    try:
+        r.sync_state()  # settle: mirror == device
+        total = r.transport.table.total_bytes()
+        full_push_wire = None
+        results = []
+        for k in (1, 4, 16, 64):
+            flat_w = np.asarray(state["w"])
+            w = flat_w.copy().reshape(-1)
+            # dirty exactly k chunks of 'w' (CHUNK bytes apart, 1 float each)
+            stride = CHUNK // w.itemsize
+            for i in range(k):
+                w[i * stride] += 1.0
+            state = dict(state, w=w.reshape(flat_w.shape))
+            before = r.transport.wire_tx
+            r.push(state)
+            wire = r.transport.wire_tx - before
+            results.append((k, wire))
+            row(
+                f"remote_wire_bytes_k{k}",
+                0.0,
+                dirty_chunks=k,
+                wire_bytes=wire,
+                state_bytes=total,
+                bytes_per_chunk=round(wire / k, 1),
+            )
+        # full-state push for comparison: everything dirty
+        rng = np.random.default_rng(7)
+        state = {p: rng.standard_normal(np.asarray(v).shape).astype("float32")
+                 for p, v in state.items()}
+        before = r.transport.wire_tx
+        r.push(state)
+        full_push_wire = r.transport.wire_tx - before
+        row(
+            "remote_wire_bytes_full_push",
+            0.0,
+            wire_bytes=full_push_wire,
+            state_bytes=total,
+        )
+        # the acceptance assertion: delta pushes are sub-linear vs full
+        for k, wire in results:
+            assert wire <= k * CHUNK * 1.5 + 4096, (
+                f"k={k}: wire {wire}B not ~k*chunk ({k * CHUNK}B)"
+            )
+        assert results[0][1] * 8 < full_push_wire, (
+            f"1-chunk push ({results[0][1]}B) not far below full-state "
+            f"push ({full_push_wire}B)"
+        )
+    finally:
+        r.close()
+
+
+def _step_overhead() -> None:
+    times = {}
+    for kind in ("segment", "stream"):
+        r = ProxyRunner(SPEC, chunk_bytes=1 << 16, transport=kind)
+        r.start()
+        step = 0
+
+        def win():
+            nonlocal step
+            for _ in range(WINDOW):
+                step += 1
+                r.step(step)
+            r.sync_state()
+
+        times[kind] = timeit(win, warmup=1, iters=3) / WINDOW
+        r.close()
+    ratio = times["stream"] / times["segment"]
+    for kind, t in times.items():
+        row(
+            f"remote_transport_step_{kind}",
+            t * 1e6,
+            sync_window=WINDOW,
+            stream_vs_segment_x=round(ratio, 3),
+        )
+
+
+def _reschedule_latency() -> None:
+    from repro.remote.host import ProxyHostHandle
+
+    daemons = [ProxyHostHandle(f"bench-ph{i}").start() for i in range(2)]
+    order = list(daemons)
+
+    def provider(failed: bool = False):
+        from repro.proxy.protocol import ProxyDiedError
+
+        if failed and len(order) > 1:
+            order.pop(0)  # the dead one; survivor takes over
+        elif failed:
+            # the survivor flaked too: surface as a budgeted retryable
+            # failure, never an IndexError out of the recovery loop
+            raise ProxyDiedError("no proxy hosts left in the bench pool")
+        return order[0].addr
+
+    prog = make_program(SPEC)
+    ref = prog.init_state()
+    kill_at, end = 30, 60
+    for s in range(1, end + 1):
+        ref, _ = prog.step(ref, s)
+    ref_digest = tree_digest(ref)
+
+    r = ProxyRunner(
+        SPEC, chunk_bytes=1 << 16, transport="stream",
+        endpoint_provider=provider,
+    )
+    r.start()
+    try:
+        for s in range(1, kill_at + 1):
+            r.step(s)
+        r.sync_state()
+        daemons[0].kill()  # the remote host dies, not just the session
+        t0 = time.perf_counter()
+        for s in range(kill_at + 1, end + 1):
+            r.step(s)  # death detected -> reschedule to survivor + replay
+        _, info = r.sync_state()
+        recovery = time.perf_counter() - t0
+        rec = r.recoveries[-1] if r.recoveries else {}
+        row(
+            "remote_reschedule_replay",
+            recovery * 1e6,
+            recovery_ms=round(recovery * 1e3, 1),
+            respawn_replay_ms=round(rec.get("recovery_s", 0.0) * 1e3, 1),
+            replayed_steps=rec.get("replayed_steps", 0),
+            restarts=r.restarts,
+            bit_identical=bool(info["digest"] == ref_digest),
+        )
+        assert info["digest"] == ref_digest, "reschedule lost state"
+    finally:
+        r.close()
+        for d in daemons:
+            d.terminate()
+
+
+def run() -> None:
+    _wire_vs_dirty_chunks()
+    _step_overhead()
+    _reschedule_latency()
+
+
+if __name__ == "__main__":
+    run()

@@ -19,7 +19,7 @@ import sys
 
 from benchmarks import ckpt_restart, coord_commit, incremental, overhead, roofline
 from benchmarks import proxy_overhead, strategies_real, strategies_synthetic
-from benchmarks import uvm_paging
+from benchmarks import remote_proxy, uvm_paging
 from benchmarks.common import ROWS
 
 ALL = {
@@ -31,6 +31,7 @@ ALL = {
     "incremental": incremental.run,              # beyond-paper
     "coord_commit": coord_commit.run,            # cluster 2-phase commit
     "uvm_paging": uvm_paging.run,                # UVM oversubscription + paged deltas
+    "remote_proxy": remote_proxy.run,            # cross-host transport + reschedule
     "roofline": roofline.run,                    # §Roofline emitter
 }
 

@@ -11,6 +11,7 @@ version, restart on another" (§3.1 of the paper).
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Any, Callable
 
 import jax
@@ -39,6 +40,37 @@ from repro.utils.tree import flatten_with_paths
 
 def _np_dtype(name: str) -> np.dtype:
     return np.dtype(name)  # ml_dtypes registers bfloat16 etc.
+
+
+def host_slice_plan(
+    path: str, shape: tuple[int, ...], host: int, n_hosts: int
+) -> tuple[list[int], list[int]] | None:
+    """The global [start, stop) window ``host`` of ``n_hosts`` owns.
+
+    THE ownership rule of the simulated cluster, defined once so persist
+    (``coord.worker.shard_tree_for_host``) and elastic restore
+    (``RestoreManager.restore_elastic``) can never drift apart:
+
+      - a leaf whose leading dimension is >= n_hosts splits contiguously
+        along dim 0, ``(host * n0) // n_hosts`` style — non-divisible
+        splits give some hosts one extra row, never gaps or overlaps;
+      - smaller leaves and scalars are whole-owned by a stable hash of
+        their path (exactly one host persists each byte);
+      - returns None when this host owns nothing of the leaf.
+    """
+    shape = tuple(int(d) for d in shape)
+    if n_hosts <= 0:
+        raise ValueError(f"n_hosts must be positive, got {n_hosts}")
+    if not 0 <= host < n_hosts:
+        raise ValueError(f"host {host} outside [0, {n_hosts})")
+    if len(shape) >= 1 and shape[0] >= n_hosts:
+        n0 = shape[0]
+        lo = (host * n0) // n_hosts
+        hi = ((host + 1) * n0) // n_hosts
+        return [lo] + [0] * (len(shape) - 1), [hi] + list(shape[1:])
+    if zlib.crc32(path.encode()) % n_hosts == host:
+        return [0] * len(shape), list(shape)
+    return None
 
 
 def _shard_index_to_ranges(index: tuple, shape: tuple[int, ...]) -> tuple[list, list]:

@@ -47,11 +47,16 @@ from repro.coord.protocol import (
     MSG_JOIN,
     MSG_PERSIST_DONE,
     MSG_PERSIST_FAIL,
+    MSG_PROXY_ENDPOINT,
     MSG_READY,
     MSG_SHUTDOWN,
     MSG_WELCOME,
     Connection,
 )
+
+# NOTE: repro.remote.placement is imported lazily in __init__ — that module
+# (and the rest of repro.remote) builds on the proxy package, whose import
+# chain passes back through repro.coord.protocol.
 
 
 @dataclass
@@ -117,6 +122,11 @@ class Coordinator:
         self._listener: socket.socket | None = None
         self._log_path = os.path.join(root, "CLUSTER_LOG.jsonl")
         self._log_lock = threading.Lock()
+        # proxy placement (remote device proxies): endpoint registry +
+        # worker assignments, mutated only on the event-loop thread
+        from repro.remote.placement import PlacementMap
+
+        self.placement = PlacementMap()
 
     # -- lifecycle -----------------------------------------------------------
     @property
@@ -217,6 +227,11 @@ class Coordinator:
         if mtype == MSG_JOIN:
             self._on_join(conn, msg)
             return
+        if mtype == MSG_PROXY_ENDPOINT:
+            # side channel: daemons/launchers register, workers acquire —
+            # these connections never JOIN, so handle before the host gate
+            self._on_proxy_endpoint(conn, msg)
+            return
         if self._conn_host.get(conn) != host:
             return  # frame from a connection we already kicked
         self.monitor.beat(host)
@@ -256,6 +271,54 @@ class Coordinator:
             MSG_WELCOME, host=host, n_hosts=self.n_hosts,
             latest_committed=self.latest_committed,
         )
+
+    # -- proxy placement (remote device proxies) --------------------------------
+    def register_proxy_endpoint(self, name: str, addr: str, port: int) -> None:
+        """Launcher-side registration (same-process convenience); daemons
+        on other machines use the PROXY_ENDPOINT register frame instead."""
+        self.placement.register(name, addr, port)
+        self._log("proxy_endpoint", name=name, addr=addr, port=int(port))
+
+    def _on_proxy_endpoint(self, conn: Connection, msg: dict) -> None:
+        # the side channel is open to any un-JOINed connection: a
+        # malformed frame must be answered with an error, never allowed to
+        # crash the event loop (and with it the whole cluster)
+        try:
+            op = msg.get("op")
+            if op == "register":
+                self.placement.register(msg["name"], msg["addr"], msg["port"])
+                self._log("proxy_endpoint", name=msg["name"],
+                          addr=msg["addr"], port=int(msg["port"]))
+                conn.send(MSG_PROXY_ENDPOINT, op="registered",
+                          name=msg["name"])
+                return
+            if op == "acquire":
+                worker = int(msg["worker"])
+                failed = msg.get("failed")
+                if failed:
+                    self.placement.report_dead(failed)
+                    self._log("proxy_host_death", name=failed, worker=worker)
+                ep = self.placement.assign(
+                    worker, exclude=tuple(msg.get("exclude") or ())
+                )
+                if ep is None:
+                    conn.send(MSG_PROXY_ENDPOINT,
+                              error="no live proxy endpoints")
+                    return
+                self._log("proxy_placement", worker=worker, name=ep.name,
+                          rescheduled=bool(failed))
+                conn.send(MSG_PROXY_ENDPOINT, name=ep.name, addr=ep.addr,
+                          port=ep.port)
+                return
+            conn.send(MSG_PROXY_ENDPOINT, error=f"unknown op {op!r}")
+        except OSError:
+            pass  # side-channel peer vanished mid-reply: nothing to unwind
+        except Exception as e:
+            try:
+                conn.send(MSG_PROXY_ENDPOINT,
+                          error=f"bad frame: {type(e).__name__}: {e}")
+            except OSError:
+                pass
 
     def _on_ready(self, host: int, step: int) -> None:
         if self.latest_committed is not None and step <= self.latest_committed:

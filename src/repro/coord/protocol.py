@@ -16,6 +16,15 @@ Worker -> coordinator::
     PERSIST_FAIL  {host, step, error}
     FINISHED      {host, step, digest}         training loop complete
 
+Side channel (proxy placement — any connection, no JOIN required)::
+
+    PROXY_ENDPOINT {op: "register", name, addr, port}   daemon announces
+    PROXY_ENDPOINT {op: "acquire", worker, failed?, exclude?}
+                                                worker asks "where is my
+                                                proxy?"; ``failed`` names
+                                                an endpoint it watched die
+    PROXY_ENDPOINT {name, addr, port} | {error} the coordinator's answer
+
 Coordinator -> worker::
 
     WELCOME       {host, n_hosts, latest_committed}
@@ -44,6 +53,7 @@ MSG_COMMIT = "COMMIT"
 MSG_ABORT = "ABORT"
 MSG_FINISHED = "FINISHED"
 MSG_SHUTDOWN = "SHUTDOWN"
+MSG_PROXY_ENDPOINT = "PROXY_ENDPOINT"
 
 _LEN = struct.Struct("<I")
 MAX_FRAME = 16 << 20  # a control frame this large is a protocol bug

@@ -36,6 +36,10 @@ class ClusterReport:
     latest_committed: int | None
     log_path: str
     swept_dirs: list[str] = field(default_factory=list)
+    # remote proxies: every worker->endpoint assignment in order (repeats
+    # for a worker = it was rescheduled onto a survivor)
+    proxy_placements: list[tuple[int, str]] = field(default_factory=list)
+    killed_proxy_hosts: list[str] = field(default_factory=list)
 
     @property
     def committed(self) -> list[RoundRecord]:
@@ -144,6 +148,7 @@ def run_cluster(
     codec: str | None = None,
     chunk_bytes: int = 1 << 16,
     width: int = 64,
+    rows: int | None = None,
     step_time_s: float = 0.0,
     keep_last: int = 0,
     heartbeat_timeout_s: float = 10.0,
@@ -159,13 +164,37 @@ def run_cluster(
     stall_host: int | None = None,
     stall_s: float = 0.0,
     stall_at_step: int | None = None,
+    proxy_hosts: int = 0,
+    proxy_transport: str = "stream",
+    kill_proxy_host: int | None = None,
+    kill_proxy_after_commits: int = 1,
     sweep: bool = True,
 ) -> ClusterReport:
     """One coordinated run: coordinator + N supervised worker processes.
 
+    With ``proxy_hosts > 0`` (requires ``device_runner="proxy"``) the
+    launcher additionally spawns that many proxy-host daemons
+    (``repro.remote.host``), registers their endpoints with the
+    coordinator, and every worker's device proxy is *placed* on one of
+    them over the streamed transport instead of being spawned locally.
+    ``kill_proxy_host`` SIGKILLs daemon #i once ``kill_proxy_after_commits``
+    rounds have committed — the cross-host failure drill: affected workers
+    are rescheduled onto a survivor and their API logs replayed there.
+
     Blocks until every host reports FINISHED (workers killed by injections
     are respawned and restored along the way) and returns the report.
     """
+    if proxy_hosts and device_runner != "proxy":
+        raise ValueError("proxy_hosts needs device_runner='proxy'")
+    if kill_proxy_host is not None and not (
+        0 <= kill_proxy_host < proxy_hosts
+    ):
+        raise ValueError(
+            f"kill_proxy_host {kill_proxy_host} outside [0, {proxy_hosts})"
+        )
+    if kill_proxy_host is not None and proxy_hosts < 2:
+        raise ValueError("the proxy-host kill drill needs a survivor (>= 2)")
+
     coord = Coordinator(
         root,
         n_hosts=n_hosts,
@@ -175,14 +204,25 @@ def run_cluster(
     ).start()
     host_addr, port = coord.address
 
+    daemons: list = []
+    if proxy_hosts:
+        from repro.remote.host import ProxyHostHandle
+
+        for i in range(proxy_hosts):
+            d = ProxyHostHandle(f"ph{i}").start()
+            coord.register_proxy_endpoint(d.name, *d.addr)
+            daemons.append(d)
+
     def cfg_for(h: int) -> WorkerConfig:
         kw = dict(
             host=h, n_hosts=n_hosts, coord_host=host_addr, coord_port=port,
             root=root, total_steps=total_steps, ckpt_every=ckpt_every,
             backend=backend, loop=loop, device_runner=device_runner,
-            chunk_bytes=chunk_bytes, width=width,
+            chunk_bytes=chunk_bytes, width=width, rows=rows,
             step_time_s=step_time_s, deadline_s=deadline_s,
         )
+        if proxy_hosts:
+            kw.update(proxy_placement="coord", proxy_transport=proxy_transport)
         if codec is not None:
             kw["codec"] = codec
         if h == kill_host and kill_at_step is not None:
@@ -200,6 +240,7 @@ def run_cluster(
     )
 
     coord_result: dict = {}
+    killed_proxy_hosts: list[str] = []
 
     def drive() -> None:
         try:
@@ -207,13 +248,30 @@ def run_cluster(
         except Exception as e:  # surfaced after the watch loop unblocks
             coord_result["error"] = e
 
+    def proxy_killer() -> None:
+        # the cross-host drill: wait for real progress (committed rounds
+        # prove proxies are serving traffic), then SIGKILL one daemon
+        while not coord.done.is_set():
+            if len(coord.committed_rounds()) >= kill_proxy_after_commits:
+                d = daemons[kill_proxy_host]
+                d.kill()
+                killed_proxy_hosts.append(d.name)
+                return
+            time.sleep(0.05)
+
     driver = threading.Thread(target=drive, name="coordinator", daemon=True)
     driver.start()
+    if kill_proxy_host is not None:
+        threading.Thread(
+            target=proxy_killer, name="proxy-killer", daemon=True
+        ).start()
     sup.start()
     try:
         sup.watch(coord.done, deadline_s=deadline_s)
     finally:
         sup.terminate()
+        for d in daemons:
+            d.terminate()
     driver.join(timeout=30)
     if "error" in coord_result:
         raise coord_result["error"]
@@ -227,4 +285,6 @@ def run_cluster(
         latest_committed=coord.latest_committed,
         log_path=coord.log_path,
         swept_dirs=swept,
+        proxy_placements=list(coord.placement.history),
+        killed_proxy_hosts=killed_proxy_hosts,
     )

@@ -26,7 +26,6 @@ import os
 import socket
 import time
 import threading
-import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -73,7 +72,12 @@ class WorkerConfig:
     incremental: bool = True
     loop: str = "numpy"            # "numpy" (fast, tests) | "jax" (real model)
     device_runner: str = "inline"  # "inline" | "proxy" (per-host proxy process)
+    proxy_transport: str = "segment"   # "segment" (shared) | "stream" (remote)
+    proxy_placement: str = "local"     # "local" spawn | "coord" (PROXY_ENDPOINT)
     width: int = 64                # numpy state width / jax d_model
+    rows: int | None = None        # numpy state rows; None = n_hosts-derived
+    #                                (pin it for elastic restarts: the state
+    #                                shape must not change with host count)
     step_time_s: float = 0.0       # simulated compute per train step
     heartbeat_s: float = 0.5
     sock_timeout_s: float = 1.0
@@ -94,40 +98,36 @@ class WorkerConfig:
 def shard_tree_for_host(state, host: int, n_hosts: int):
     """Wrap every leaf in the HostShardView this host persists.
 
-    Leaves with a leading dimension >= n_hosts are split contiguously along
-    dim 0 (global index ranges recorded in the manifest); smaller leaves and
-    scalars are whole-owned by a stable hash of their path, so exactly one
-    hostmeta carries each byte and the merged manifest covers everything.
+    Ownership is :func:`repro.checkpoint.sharded.host_slice_plan` — ONE
+    definition shared with ``RestoreManager.restore_elastic``, so a
+    committed image's shards re-slice bit-identically onto any other host
+    count: leaves with a leading dimension >= n_hosts split contiguously
+    along dim 0 (global index ranges recorded in the manifest); smaller
+    leaves and scalars are whole-owned by a stable hash of their path, so
+    exactly one hostmeta carries each byte and the merged manifest covers
+    everything.
     """
+    from repro.checkpoint.sharded import host_slice_plan
+
     flat, treedef = flatten_with_paths(state)
     out = {}
     for path, leaf in flat.items():
         arr = np.asarray(leaf)
-        if arr.ndim >= 1 and arr.shape[0] >= n_hosts:
-            n0 = arr.shape[0]
-            lo = (host * n0) // n_hosts
-            hi = ((host + 1) * n0) // n_hosts
+        plan = host_slice_plan(path, arr.shape, host, n_hosts)
+        if plan is None:
             out[path] = HostShardView(
-                arr[lo:hi],
-                start=[lo] + [0] * (arr.ndim - 1),
-                stop=[hi] + list(arr.shape[1:]),
+                None, global_shape=arr.shape, dtype=arr.dtype
+            )
+        else:
+            start, stop = plan
+            window = tuple(slice(a, b) for a, b in zip(start, stop))
+            out[path] = HostShardView(
+                arr[window] if arr.ndim else arr,
+                start=start,
+                stop=stop,
                 global_shape=arr.shape,
                 dtype=arr.dtype,
             )
-        else:
-            owner = zlib.crc32(path.encode()) % n_hosts
-            if owner == host:
-                out[path] = HostShardView(
-                    arr,
-                    start=[0] * arr.ndim,
-                    stop=list(arr.shape),
-                    global_shape=arr.shape,
-                    dtype=arr.dtype,
-                )
-            else:
-                out[path] = HostShardView(
-                    None, global_shape=arr.shape, dtype=arr.dtype
-                )
     return unflatten_from_paths(treedef, out)
 
 
@@ -147,7 +147,7 @@ def _program_spec(cfg: WorkerConfig) -> dict:
     if cfg.loop == "numpy":
         return {
             "name": "numpy_sgd",
-            "rows": max(cfg.n_hosts, 2) * 8,
+            "rows": cfg.rows or max(cfg.n_hosts, 2) * 8,
             "width": cfg.width,
             "seed": cfg.seed,
             "step_time_s": cfg.step_time_s,
@@ -201,17 +201,35 @@ class _ProxyLoop:
 
         self.cfg = cfg
         self.spec = _program_spec(cfg)
-        # segments live under the cluster root, not /dev/shm: a drill that
-        # hard-exits this worker (os._exit) skips close(), and files under
-        # the root are reclaimed with it — a respawned incarnation reuses
-        # the same directory instead of leaking RAM-backed segments
+        # segments/API log live under the cluster root, not /dev/shm: a
+        # drill that hard-exits this worker (os._exit) skips close(), and
+        # files under the root are reclaimed with it — a respawned
+        # incarnation reuses the same directory instead of leaking
+        # RAM-backed segments
         workdir = os.path.join(cfg.root, f"proxy-h{cfg.host:04d}")
         os.makedirs(workdir, exist_ok=True)
+        provider = None
+        if cfg.proxy_placement == "coord":
+            # remote proxies: the coordinator assigns a proxy host (and a
+            # survivor after a proxy-host death) via the PROXY_ENDPOINT
+            # side channel — never this worker's barrier connection
+            from repro.remote.placement import CoordEndpointProvider
+
+            provider = CoordEndpointProvider(
+                (cfg.coord_host, cfg.coord_port), cfg.host,
+                timeout_s=cfg.deadline_s,
+            )
+        elif cfg.proxy_placement != "local":
+            raise ValueError(
+                f"unknown proxy_placement {cfg.proxy_placement!r}"
+            )
         self.runner = ProxyRunner(
             self.spec,
             workdir=workdir,
             chunk_bytes=cfg.chunk_bytes,
             sync_timeout_s=cfg.persist_timeout_s,
+            transport=cfg.proxy_transport,
+            endpoint_provider=provider,
         )
 
     def init(self):

@@ -150,6 +150,30 @@ class RestoreManager:
 
         return committed_steps(self.store.root)
 
+    def _pick_manifest(self, step: int | None) -> Manifest:
+        """Load the requested (or newest committed) manifest.
+
+        The pick/load pair races with GC: the step chosen as newest can be
+        collected before its manifest read. Re-scan on miss instead of
+        surfacing a spurious FileNotFoundError to the caller.
+        """
+        if step is not None:
+            return load_manifest(self.store.root, step)
+        for _ in range(8):
+            step = latest_committed_step(self.store.root)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed checkpoint under {self.store.root}"
+                )
+            try:
+                return load_manifest(self.store.root, step)
+            except (FileNotFoundError, NotADirectoryError):
+                continue
+        raise FileNotFoundError(
+            f"committed checkpoints under {self.store.root} kept "
+            "vanishing mid-read (GC racing restore)"
+        )
+
     def restore(
         self,
         *,
@@ -163,29 +187,7 @@ class RestoreManager:
         Returns (state, manifest); in lazy mode state is a LazyLeaves whose
         ``as_tree()`` gives the pytree.
         """
-        if step is None:
-            # The pick/load pair races with GC: the step chosen as newest can
-            # be collected before its manifest read. Re-scan on miss instead
-            # of surfacing a spurious FileNotFoundError to the caller.
-            manifest = None
-            for _ in range(8):
-                step = latest_committed_step(self.store.root)
-                if step is None:
-                    raise FileNotFoundError(
-                        f"no committed checkpoint under {self.store.root}"
-                    )
-                try:
-                    manifest = load_manifest(self.store.root, step)
-                    break
-                except (FileNotFoundError, NotADirectoryError):
-                    continue
-            if manifest is None:
-                raise FileNotFoundError(
-                    f"committed checkpoints under {self.store.root} kept "
-                    "vanishing mid-read (GC racing restore)"
-                )
-        else:
-            manifest = load_manifest(self.store.root, step)
+        manifest = self._pick_manifest(step)
         if verify:
             from repro.checkpoint.sharded import verify_manifest
 
@@ -240,3 +242,64 @@ class RestoreManager:
                     device_state=state["device"], base_step=int(manifest.step)
                 )
         return state, manifest
+
+    # -- elastic reshard (restore onto a different host count) ------------------
+    def restore_elastic(
+        self,
+        *,
+        n_hosts: int,
+        host: int | None = None,
+        step: int | None = None,
+        verify: bool = False,
+    ) -> tuple[Any, Manifest]:
+        """Re-slice a committed image across a different worker count.
+
+        The manifest is topology-independent (leaves are global arrays,
+        shards are index ranges), so a checkpoint written by N hosts
+        restores onto M: with ``host=None`` the full global state is
+        assembled (what each simulated worker holds); with ``host=h`` only
+        the windows host ``h`` of ``n_hosts`` *owns* are read — each
+        window assembled from whichever stored shards overlap it, wrapped
+        in :class:`~repro.core.shadow.HostShardView` exactly as
+        ``shard_tree_for_host`` would produce it live. Non-divisible
+        splits (4 -> 3, 3 -> 5, N -> 1) need no special casing: ownership
+        comes from the same ``host_slice_plan`` rule the writers use.
+
+        Returns (state, manifest); in per-host mode the state's leaves are
+        HostShardViews ready to be persisted under the new topology.
+        """
+        from repro.checkpoint.sharded import host_slice_plan
+        from repro.core.shadow import HostShardView
+
+        manifest = self._pick_manifest(step)
+        if verify:
+            from repro.checkpoint.sharded import verify_manifest
+
+            with self.timings.measure("restore/verify"):
+                verify_manifest(self.store, manifest)
+        if host is None:
+            leaves = {
+                path: restore_leaf(self.store, lrec, None)
+                for path, lrec in manifest.leaves.items()
+            }
+            return skeleton_fill(manifest.skeleton, leaves), manifest
+        import numpy as np
+
+        with self.timings.measure("restore/elastic"):
+            leaves = {}
+            for path, lrec in manifest.leaves.items():
+                shape = tuple(lrec.shape)
+                dtype = np.dtype(lrec.dtype)
+                plan = host_slice_plan(path, shape, host, n_hosts)
+                if plan is None:
+                    leaves[path] = HostShardView(
+                        None, global_shape=shape, dtype=dtype
+                    )
+                    continue
+                start, stop = plan
+                data = _LeafAssembler(self.store, lrec).window(start, stop)
+                leaves[path] = HostShardView(
+                    data, start=start, stop=stop,
+                    global_shape=shape, dtype=dtype,
+                )
+        return skeleton_fill(manifest.skeleton, leaves), manifest

@@ -72,6 +72,10 @@ class SyncStats:
     bytes_total: int = 0
     bytes_fetched: int = 0
     leaves: int = 0
+    # exactly which chunks this sync materialized, keyed (path, ordinal) —
+    # the streamed proxy transport forwards precisely these chunk payloads
+    # to the application, so wire bytes track what actually changed
+    changed: dict[tuple[str, int], list[int]] = field(default_factory=dict)
 
     def merge(self, other: "SyncStats") -> None:
         self.chunks_total += other.chunks_total
@@ -79,6 +83,7 @@ class SyncStats:
         self.bytes_total += other.bytes_total
         self.bytes_fetched += other.bytes_fetched
         self.leaves += other.leaves
+        self.changed.update(other.changed)
 
 
 @dataclass
@@ -368,6 +373,9 @@ class ShadowStateManager:
                 stream.states = [ChunkState.CLEAN] * stream.n_chunks
                 stats.chunks_fetched = stream.n_chunks
                 stats.bytes_fetched = stream.nbytes
+                stats.changed[(stream.path, stream.shard_ordinal)] = list(
+                    range(stream.n_chunks)
+                )
             if self.defer_first_digests:
                 stream.digests = [-2] * stream.n_chunks  # pending backfill
             else:
@@ -402,6 +410,7 @@ class ShadowStateManager:
 
         if not changed:
             return stats
+        stats.changed[(stream.path, stream.shard_ordinal)] = sorted(changed)
 
         with self.timings.measure("shadow/fetch"):
             if stream.buffer is None:

@@ -67,6 +67,8 @@ class CheckpointedTrainer:
         device_capacity_bytes: int | None = None,
         page_bytes: int | None = None,
         eviction_policy: str = "lru",
+        promote_threshold: int = 0,
+        promote_window: int = 0,
         timings: Timings | None = None,
     ):
         if device_runner not in DEVICE_RUNNERS:
@@ -83,6 +85,8 @@ class CheckpointedTrainer:
         )
         self.page_bytes = page_bytes
         self.eviction_policy = eviction_policy
+        self.promote_threshold = int(promote_threshold)
+        self.promote_window = int(promote_window)
         self.space = None  # ManagedSpace, created on first run() when capped
         self.checkpointer = ForkedCheckpointer(
             self.store,
@@ -112,6 +116,8 @@ class CheckpointedTrainer:
                 if page_bytes is not None:
                     popts.setdefault("page_bytes", int(page_bytes))
                 popts.setdefault("eviction_policy", eviction_policy)
+                popts.setdefault("promote_threshold", self.promote_threshold)
+                popts.setdefault("promote_window", self.promote_window)
             self.runner = ProxyRunner(
                 program, chunk_bytes=chunk_bytes, **popts
             )
@@ -127,6 +133,8 @@ class CheckpointedTrainer:
                 self.device_capacity_bytes,
                 page_bytes=self.page_bytes or DEFAULT_PAGE_BYTES,
                 eviction_policy=self.eviction_policy,
+                promote_threshold=self.promote_threshold,
+                promote_window=self.promote_window,
             )
         self.space.register(device_state)
         # state["device"] leaves appear under the "device/" prefix in the

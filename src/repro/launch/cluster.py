@@ -19,6 +19,20 @@ merged image. Failure injections exercise the recovery paths end to end:
     PYTHONPATH=src python -m repro.launch.cluster \\
         --hosts 4 --straggle-host 3 --straggle-s 1.0
 
+    # REMOTE proxies: every worker's device proxy is placed on one of 2
+    # proxy-host daemons (streamed chunk transport); daemon 0 is
+    # SIGKILLed after the first commit — affected workers are rescheduled
+    # onto the survivor and their API logs replayed there
+    PYTHONPATH=src python -m repro.launch.cluster \\
+        --hosts 2 --device-runner proxy --proxy-hosts 2 --kill-proxy-host 0
+
+    # ELASTIC restart: run 4 hosts to step 4, then restore the committed
+    # 4-host image onto 6 hosts and continue to step 8 (the manifest is
+    # topology-independent; shards re-slice onto any count)
+    PYTHONPATH=src python -m repro.launch.cluster \\
+        --hosts 4 --steps 8 --ckpt-every 2 \\
+        --restart-at-step 4 --hosts-after-restart 6
+
 Exits non-zero if the cluster fails to converge (hosts finish with
 different state digests) or no checkpoint ever commits.
 """
@@ -70,6 +84,27 @@ def main(argv=None) -> int:
     ap.add_argument("--stall-host", type=int, default=None)
     ap.add_argument("--stall-s", type=float, default=0.0)
     ap.add_argument("--stall-at-step", type=int, default=None)
+    # remote proxies
+    ap.add_argument("--proxy-hosts", type=int, default=0,
+                    help="place worker proxies on this many proxy-host "
+                         "daemons via the coordinator (needs --device-runner "
+                         "proxy); 0 = spawn proxies locally")
+    ap.add_argument("--proxy-transport", choices=["segment", "stream"],
+                    default="stream",
+                    help="data plane for placed proxies: stream = chunk "
+                         "frames over TCP (cross-host); segment = shared "
+                         "files (same machine only)")
+    ap.add_argument("--kill-proxy-host", type=int, default=None,
+                    help="SIGKILL proxy-host daemon #i mid-run (reschedule "
+                         "drill; needs --proxy-hosts >= 2)")
+    ap.add_argument("--kill-proxy-after-commits", type=int, default=1)
+    # elastic restart
+    ap.add_argument("--hosts-after-restart", type=int, default=None,
+                    help="after --restart-at-step, restore the committed "
+                         "image onto THIS many hosts and continue to --steps")
+    ap.add_argument("--restart-at-step", type=int, default=None,
+                    help="end phase 1 at this step (should be a checkpoint "
+                         "boundary so a committed image exists)")
     ap.add_argument("--no-sweep", action="store_true",
                     help="keep aborted/partial step dirs for inspection")
     args = ap.parse_args(argv)
@@ -80,10 +115,8 @@ def main(argv=None) -> int:
           f"loop={args.loop} device_runner={args.device_runner} "
           f"root={root}", flush=True)
 
-    report = run_cluster(
+    common = dict(
         root=root,
-        n_hosts=args.hosts,
-        total_steps=args.steps,
         ckpt_every=args.ckpt_every,
         backend=args.backend,
         loop=args.loop,
@@ -96,17 +129,66 @@ def main(argv=None) -> int:
         heartbeat_timeout_s=args.heartbeat_timeout_s,
         round_timeout_s=args.round_timeout_s,
         deadline_s=args.deadline_s,
-        kill_host=args.kill_host,
-        kill_at_step=args.kill_at_step,
-        die_after_persist_host=args.die_after_persist_host,
-        die_after_persist_step=args.die_after_persist_step,
-        straggle_host=args.straggle_host,
-        straggle_s=args.straggle_s,
-        stall_host=args.stall_host,
-        stall_s=args.stall_s,
-        stall_at_step=args.stall_at_step,
+        proxy_hosts=args.proxy_hosts,
+        proxy_transport=args.proxy_transport,
         sweep=not args.no_sweep,
     )
+
+    if args.restart_at_step is not None and args.hosts_after_restart is None:
+        ap.error("--restart-at-step needs --hosts-after-restart")
+    if args.hosts_after_restart is not None:
+        if args.restart_at_step is None:
+            ap.error("--hosts-after-restart needs --restart-at-step")
+        if args.ckpt_every <= 0 or args.restart_at_step % args.ckpt_every:
+            ap.error("--restart-at-step must be a checkpoint boundary")
+        drills = [
+            args.kill_host, args.kill_at_step, args.die_after_persist_host,
+            args.die_after_persist_step, args.straggle_host, args.stall_host,
+            args.kill_proxy_host,
+        ]
+        if any(d is not None for d in drills) or args.straggle_s or args.stall_s:
+            # refusing beats silently running both phases without the
+            # drill and reporting a "passed" run that never exercised it
+            ap.error("failure drills cannot be combined with an elastic "
+                     "restart run; drill each phase separately")
+        # the numpy state's shape must not change with the host count —
+        # pin rows to the larger phase so both slicings cover one image
+        common["rows"] = max(args.hosts, args.hosts_after_restart, 2) * 8
+        print(f"[cluster] phase 1: {args.hosts} hosts to step "
+              f"{args.restart_at_step}", flush=True)
+        phase1 = run_cluster(
+            n_hosts=args.hosts, total_steps=args.restart_at_step, **common
+        )
+        if phase1.latest_committed != args.restart_at_step:
+            print(f"[cluster] FAIL: phase 1 never committed step "
+                  f"{args.restart_at_step}", file=sys.stderr)
+            return 1
+        print(f"[cluster] phase 2 (elastic): {args.hosts_after_restart} "
+              f"hosts restore step {phase1.latest_committed} and continue "
+              f"to {args.steps}", flush=True)
+        report = run_cluster(
+            n_hosts=args.hosts_after_restart, total_steps=args.steps,
+            **common,
+        )
+        n_hosts_final = args.hosts_after_restart
+    else:
+        report = run_cluster(
+            n_hosts=args.hosts,
+            total_steps=args.steps,
+            kill_host=args.kill_host,
+            kill_at_step=args.kill_at_step,
+            die_after_persist_host=args.die_after_persist_host,
+            die_after_persist_step=args.die_after_persist_step,
+            straggle_host=args.straggle_host,
+            straggle_s=args.straggle_s,
+            stall_host=args.stall_host,
+            stall_s=args.stall_s,
+            stall_at_step=args.stall_at_step,
+            kill_proxy_host=args.kill_proxy_host,
+            kill_proxy_after_commits=args.kill_proxy_after_commits,
+            **common,
+        )
+        n_hosts_final = args.hosts
 
     for r in report.rounds:
         line = (f"[round] step={r.step} {r.status} "
@@ -124,7 +206,7 @@ def main(argv=None) -> int:
 
     lockstep = report.lockstep()
     summary = {
-        "hosts": args.hosts,
+        "hosts": n_hosts_final,
         "latest_committed": report.latest_committed,
         "rounds_committed": len(report.committed),
         "rounds_aborted": len(report.aborted),
@@ -133,6 +215,11 @@ def main(argv=None) -> int:
         "final_digest": next(iter(report.final_digests.values()), None),
         "log": report.log_path,
     }
+    if args.proxy_hosts:
+        summary["proxy_placements"] = [
+            [w, n] for w, n in report.proxy_placements
+        ]
+        summary["killed_proxy_hosts"] = report.killed_proxy_hosts
     print(json.dumps(summary, indent=2))
 
     if not lockstep:

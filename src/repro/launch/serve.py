@@ -6,6 +6,18 @@ read-ahead, so time-to-first-token beats a full eager restore.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
         --ckpt-dir /tmp/ckpt --prompt-len 32 --gen 16
+
+With ``--device-runner proxy`` decode executes in a device-proxy process
+via the ``decode_arch`` step program — and with ``--proxy-endpoint`` that
+proxy is a *remote* one, served by a ``repro.remote.host`` daemon over the
+streamed chunk transport: the restored params ride the wire once (lazy
+restore feeds the push leaf by leaf), then every SYNC moves only the
+chunks decode dirtied (cache/toks), never the clean params.
+
+    PYTHONPATH=src python -m repro.remote.host --port 7070   # machine B
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --ckpt-dir /tmp/ckpt --lazy --device-runner proxy \
+        --proxy-endpoint 127.0.0.1:7070                      # machine A
 """
 from __future__ import annotations
 
@@ -34,7 +46,21 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--device-runner", choices=["inline", "proxy"],
+                    default="inline",
+                    help="proxy: decode in a device-proxy process "
+                         "(decode_arch step program)")
+    ap.add_argument("--proxy-endpoint", default=None, metavar="HOST:PORT",
+                    help="connect to a remote proxy-host daemon instead of "
+                         "spawning a local proxy (implies the streamed "
+                         "transport)")
+    ap.add_argument("--transport", choices=["segment", "stream"], default=None,
+                    help="proxy data plane (default: stream when "
+                         "--proxy-endpoint is given, else segment)")
     args = ap.parse_args(argv)
+
+    if args.device_runner == "proxy":
+        return _serve_proxy(args)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build(cfg)
@@ -123,6 +149,87 @@ def main(argv=None) -> int:
               f"({(G-1)*B/max(dt,1e-9):.1f} tok/s)")
         first = np.asarray(out[0]).reshape(B, -1)[:, 0]
         print(f"[serve] sample tokens: {first.tolist()}")
+    return 0
+
+
+def _restored_params(args):
+    """Restore the params subtree (eagerly, or leaf-by-lazy-leaf)."""
+    rm = RestoreManager(ChunkStore(args.ckpt_dir))
+    t0 = time.perf_counter()
+    if args.lazy:
+        lazy, manifest = rm.restore(lazy=True)
+        flat = {
+            p[len("device/params/"):]: np.asarray(lazy[p])
+            for p in lazy.keys()
+            if p.startswith("device/params/")
+        }
+        lazy.close()
+    else:
+        state, manifest = rm.restore()
+        flat, _ = flatten_with_paths(state["device"]["params"])
+        flat = {p: np.asarray(v) for p, v in flat.items()}
+    print(f"[serve] restored step {manifest.step} in "
+          f"{time.perf_counter()-t0:.3f}s (lazy={args.lazy})")
+    return flat
+
+
+def _serve_proxy(args) -> int:
+    """Decode through a (possibly remote) device proxy."""
+    from repro.proxy import ProxyRunner, make_program
+    from repro.remote.transport import endpoint_arg
+    from repro.utils.tree import unflatten_from_paths
+
+    spec = {
+        "name": "decode_arch", "arch": args.arch, "smoke": bool(args.smoke),
+        "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
+    }
+    provider = None
+    if args.proxy_endpoint:
+        ep = endpoint_arg(args.proxy_endpoint)
+        provider = lambda failed=False: ep  # noqa: E731 — static placement
+    transport = args.transport or ("stream" if args.proxy_endpoint else "segment")
+    prog = make_program(spec)
+    init = prog.init_state()
+    if args.ckpt_dir:
+        flat_params = _restored_params(args)
+        have, treedef = flatten_with_paths(init["params"])
+        missing = set(have) - set(flat_params)
+        if missing:
+            raise SystemExit(
+                f"checkpoint lacks params for {sorted(missing)[:3]}..."
+            )
+        init["params"] = unflatten_from_paths(
+            treedef, {p: flat_params[p] for p in have}
+        )
+
+    runner = ProxyRunner(
+        spec, transport=transport, endpoint_provider=provider,
+        chunk_bytes=1 << 20,
+    )
+    t0 = time.perf_counter()
+    runner.start(device_state=init)
+    push_s = time.perf_counter() - t0
+    where = args.proxy_endpoint or "local"
+    print(f"[serve] proxy={where} transport={transport} "
+          f"state pushed in {push_s:.3f}s", flush=True)
+    try:
+        total = args.prompt_len + args.gen
+        t1 = time.perf_counter()
+        for n in range(1, total):
+            runner.step(n)
+        state, info = runner.sync_state()
+        dt = time.perf_counter() - t1
+        toks = np.asarray(state["toks"])[:, args.prompt_len:]
+        print(f"[serve] decoded {total - 1} steps in {dt:.3f}s "
+              f"({(total - 1) * args.batch / max(dt, 1e-9):.1f} tok/s, "
+              f"restarts={runner.restarts})")
+        tstats = info.get("transport", {})
+        print(f"[serve] sync wire: chunks={info.get('chunks_synced')} "
+              f"bytes={info.get('bytes_synced')} "
+              f"wire_rx={tstats.get('wire_rx')} (params stay clean)")
+        print(f"[serve] sample tokens: {toks[:, 0].tolist()}")
+    finally:
+        runner.close()
     return 0
 
 

@@ -66,6 +66,14 @@ def main(argv=None) -> int:
                     help="managed-memory page size (default 64 KiB)")
     ap.add_argument("--eviction-policy", choices=["lru", "clock"],
                     default="lru", help="managed-memory eviction policy")
+    ap.add_argument("--promote-threshold", type=int, default=0,
+                    help="Volta-style access-counter promotion: a HOST page "
+                         "read this many times within --promote-window is "
+                         "migrated to device; colder reads are served "
+                         "remotely without a migration (0/1 = migrate on "
+                         "first touch)")
+    ap.add_argument("--promote-window", type=int, default=0,
+                    help="promotion counting window in ticks (0 = unbounded)")
     ap.add_argument("--no-incremental", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
@@ -96,6 +104,8 @@ def main(argv=None) -> int:
         backend=args.backend,
         page_bytes=args.page_bytes,
         eviction_policy=args.eviction_policy,
+        promote_threshold=args.promote_threshold,
+        promote_window=args.promote_window,
     )
     preempt = PreemptionHandler(trainer.policy).install()
 
@@ -286,6 +296,8 @@ def _main_proxy(args) -> int:
         device_capacity_bytes=capacity,
         page_bytes=args.page_bytes,
         eviction_policy=args.eviction_policy,
+        promote_threshold=args.promote_threshold,
+        promote_window=args.promote_window,
     )
     preempt = PreemptionHandler(trainer.policy).install()
 

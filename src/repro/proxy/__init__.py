@@ -17,12 +17,19 @@ from repro.proxy.programs import (
     register_step_program,
 )
 from repro.proxy.protocol import ProxyDiedError, ProxyServiceConfig
-from repro.proxy.segments import SegmentTable, SharedSegment, default_segment_dir
+from repro.proxy.segments import (
+    PrivateTable,
+    SegmentTable,
+    SharedSegment,
+    StateTable,
+    default_segment_dir,
+)
 from repro.proxy.supervisor import ProxyRunner
 
 __all__ = [
     "ApiLog", "iter_records",
     "DeviceProxy", "ProxyDiedError", "ProxyServiceConfig",
+    "StateTable", "PrivateTable",
     "SegmentTable", "SharedSegment", "default_segment_dir",
     "StepProgram", "make_program", "register_step_program",
     "list_step_programs",

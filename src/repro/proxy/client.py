@@ -1,25 +1,36 @@
 """DeviceProxy — the application-side handle on ONE proxy incarnation.
 
-Transport-only: spawns the proxy process (multiprocessing *spawn*, safe
-with an initialized JAX in the parent), accepts its loopback connection,
-and speaks the protocol. Pipelining lives here — ``step()`` is
-fire-and-forget with an auto-flush watermark so the app runs ahead of the
-proxy exactly like ``core/drain.py`` describes the device pipeline — but
-*durability and replay do not*: the API log and respawn policy belong to
-``ProxyRunner`` (supervisor.py), so a dead incarnation is simply dropped
-and a new DeviceProxy attached to the same segments.
+Transport-only: brings up the proxy process and speaks the protocol. Two
+placement modes:
 
-Every transport failure raises :class:`ProxyDiedError`; callers that can
-replay (the runner) catch it, everyone else propagates it.
+  local (default)   spawn the proxy process (multiprocessing *spawn*, safe
+                    with an initialized JAX in the parent) and accept its
+                    loopback connection.
+  endpoint=(h, p)   connect OUT to a proxy-host daemon
+                    (``repro.remote.host``) that serves the proxy session
+                    remotely — no child process exists here, and liveness
+                    is the connection itself.
+
+Pipelining lives here — ``step()`` is fire-and-forget with an auto-flush
+watermark so the app runs ahead of the proxy exactly like ``core/drain.py``
+describes the device pipeline — but *durability and replay do not*: the
+API log and respawn policy belong to ``ProxyRunner`` (supervisor.py), so a
+dead incarnation is simply dropped and a new DeviceProxy attached to the
+same data plane.
+
+Every transport failure raises :class:`ProxyDiedError` — and closes the
+socket first, so a dropped incarnation never leaks its fd; callers that
+can replay (the runner) catch it, everyone else propagates it.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
 import socket
 import time
-from typing import Any
+from typing import Any, Callable
 
 from repro.proxy.protocol import (
+    MSG_CHUNKS,
     MSG_ERR,
     MSG_FLUSH,
     MSG_FLUSHED,
@@ -34,6 +45,7 @@ from repro.proxy.protocol import (
     Connection,
     ProxyDiedError,
     ProxyServiceConfig,
+    connect,
 )
 from repro.proxy.service import proxy_entry
 
@@ -42,6 +54,7 @@ class DeviceProxy:
     def __init__(
         self,
         *,
+        endpoint: tuple[str, int] | None = None,
         mp_context: str = "spawn",
         start_timeout_s: float = 120.0,
         op_timeout_s: float = 120.0,
@@ -49,6 +62,7 @@ class DeviceProxy:
         jax_platforms: str | None = "cpu",
         name: str = "crum-proxy",
     ):
+        self.endpoint = tuple(endpoint) if endpoint is not None else None
         self.ctx = mp.get_context(mp_context)
         self.start_timeout_s = start_timeout_s
         self.op_timeout_s = op_timeout_s
@@ -59,9 +73,21 @@ class DeviceProxy:
         self.conn: Connection | None = None
         self.inflight = 0  # STEP frames sent since the last barrier
         self._seq = 0
+        # streamed transport: CHUNKS frames arriving ahead of a SYNCED
+        # reply are handed here (the runner wires its transport's ingest)
+        self.on_data: Callable[[dict], None] | None = None
 
     # -- lifecycle ---------------------------------------------------------------
     def start(self) -> "DeviceProxy":
+        if self.endpoint is not None:
+            try:
+                self.conn = connect(self.endpoint, timeout=self.start_timeout_s)
+            except OSError as e:
+                raise ProxyDiedError(
+                    f"proxy endpoint {self.endpoint} unreachable: {e}"
+                ) from e
+            self.conn.settimeout(1.0)
+            return self
         listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         listener.bind(("127.0.0.1", 0))
@@ -78,6 +104,10 @@ class DeviceProxy:
         try:
             sock, _ = listener.accept()
         except socket.timeout:
+            # the spawned child never connected: reap it, don't leak it
+            self.proc.kill()
+            self.proc.join(timeout=10)
+            self.proc = None
             raise ProxyDiedError(
                 f"proxy did not connect within {self.start_timeout_s}s"
             ) from None
@@ -93,13 +123,22 @@ class DeviceProxy:
         return self.proc.pid if self.proc is not None else None
 
     def alive(self) -> bool:
+        if self.endpoint is not None:
+            return self.conn is not None
         return self.proc is not None and self.proc.is_alive()
 
     def kill(self) -> None:
-        """Hard-kill the incarnation (failure drills: SIGKILL mid-pipeline)."""
+        """Hard-kill the incarnation (failure drills: SIGKILL mid-pipeline).
+
+        Endpoint mode has no local process to signal; the connection is
+        severed instead (the drill for a *remote* proxy host is to SIGKILL
+        the daemon itself)."""
         if self.proc is not None and self.proc.is_alive():
             self.proc.kill()
             self.proc.join(timeout=10)
+        elif self.endpoint is not None and self.conn is not None:
+            self.conn.close()
+            self.conn = None
 
     def close(self, *, graceful: bool = True) -> None:
         if self.conn is not None:
@@ -118,35 +157,49 @@ class DeviceProxy:
             self.proc = None
 
     # -- transport helpers --------------------------------------------------------
+    def _die(self, why: str, cause: BaseException | None = None) -> "ProxyDiedError":
+        """Close the socket (resource hygiene: every death branch releases
+        its fd) and build the error for the caller to raise."""
+        if self.conn is not None:
+            self.conn.close()
+            self.conn = None
+        err = ProxyDiedError(why)
+        err.__cause__ = cause
+        return err
+
     def _send(self, mtype: str, **fields: Any) -> None:
         if self.conn is None:
             raise ProxyDiedError("proxy connection is closed")
         try:
             self.conn.send(mtype, **fields)
         except OSError as e:
-            raise ProxyDiedError(f"send({mtype}) failed: {e}") from e
+            raise self._die(f"send({mtype}) failed: {e}", e)
 
     def _recv_reply(self, want: str, *, timeout: float | None = None) -> dict:
         deadline = time.monotonic() + (timeout or self.op_timeout_s)
         while True:
             if time.monotonic() > deadline:
-                raise ProxyDiedError(
+                raise self._die(
                     f"no {want} reply within {timeout or self.op_timeout_s}s "
                     f"(proxy {'alive' if self.alive() else 'dead'})"
                 )
+            if self.conn is None:
+                raise ProxyDiedError("proxy connection is closed")
             try:
                 msg = self.conn.recv()
             except (socket.timeout, TimeoutError):
                 if not self.alive():
-                    raise ProxyDiedError(
-                        f"proxy died while waiting for {want}"
-                    ) from None
+                    raise self._die(f"proxy died while waiting for {want}")
                 continue
             except OSError as e:
-                raise ProxyDiedError(f"recv failed: {e}") from e
+                raise self._die(f"recv failed: {e}", e)
             if msg is None:
-                raise ProxyDiedError(f"proxy EOF while waiting for {want}")
+                raise self._die(f"proxy EOF while waiting for {want}")
             mtype = msg.get("type")
+            if mtype == MSG_CHUNKS and self.on_data is not None:
+                # streamed-transport payload ahead of its SYNCED
+                self.on_data(msg)
+                continue
             if mtype == MSG_ERR:
                 raise RuntimeError(
                     f"proxy call {msg.get('op')} failed: {msg.get('error')}"
@@ -163,27 +216,9 @@ class DeviceProxy:
     def send_program(self, spec: dict) -> None:
         self._call(MSG_PROGRAM, spec=spec)
 
-    def register(
-        self,
-        workdir: str,
-        layout: dict,
-        *,
-        chunk_bytes: int,
-        device_capacity_bytes: int | None = None,
-        page_bytes: int | None = None,
-        eviction_policy: str = "lru",
-    ) -> None:
-        fields: dict[str, Any] = dict(
-            workdir=workdir, layout=layout, chunk_bytes=chunk_bytes
-        )
-        if device_capacity_bytes is not None:
-            # the proxy hosts its device state in a ManagedSpace: a state
-            # larger than this budget pages under the proxy's own arena
-            fields.update(
-                device_capacity_bytes=int(device_capacity_bytes),
-                page_bytes=page_bytes,
-                eviction_policy=eviction_policy,
-            )
+    def register(self, **fields: Any) -> None:
+        """REGISTER with the transport/layout/paging fields the runner's
+        transport and config assembled (see protocol docstring)."""
         self._call(MSG_REGISTER, **fields)
         self.inflight = 0
 
@@ -193,10 +228,18 @@ class DeviceProxy:
         step: int,
         paths: list[str] | None = None,
         chunks: dict[str, list[int]] | None = None,
+        payload_frames: list[dict] | None = None,
     ) -> dict:
         """Full upload (``paths``/None) or chunk-delta (``chunks``: only
-        those segment chunk ranges are ingested)."""
-        return self._call(MSG_UPLOAD, step=step, paths=paths, chunks=chunks)
+        those chunk ranges are ingested). ``payload_frames`` (streamed
+        transport) are sent immediately after the UPLOAD frame."""
+        n_frames = len(payload_frames) if payload_frames is not None else 0
+        self._send(
+            MSG_UPLOAD, step=step, paths=paths, chunks=chunks, n_frames=n_frames
+        )
+        for frame in payload_frames or ():
+            self._send(MSG_CHUNKS, **frame)
+        return self._recv_reply(MSG_OK)
 
     def step(self, step: int) -> None:
         """Pipelined: returns as soon as the frame is written. Auto-flushes
@@ -215,7 +258,9 @@ class DeviceProxy:
         return msg
 
     def sync(self, *, timeout: float | None = None) -> dict:
-        """Flush + device->segments sync; returns the SYNCED frame."""
+        """Flush + device->data-plane sync; returns the SYNCED frame. On
+        the streamed transport the payload CHUNKS frames are handed to
+        ``on_data`` before this returns."""
         self._send(MSG_SYNC)
         msg = self._recv_reply(MSG_SYNCED, timeout=timeout)
         self.inflight = 0

@@ -237,6 +237,96 @@ class TrainArch(StepProgram):
         return _abstract_state_nbytes(self.jax, self.init_state)
 
 
+class DecodeArch(StepProgram):
+    """Greedy batched decode as a replayable step program — the *serving*
+    workload proxied (``launch/serve.py --device-runner proxy``).
+
+    Device state is ``{params, cache, toks}``: ``toks`` is the (B, P+G)
+    token buffer holding the deterministic synthetic prompt in its first P
+    positions; step ``n`` feeds ``toks[:, n-1]`` through one decode step
+    and writes the argmax token at position ``n`` when that position is in
+    the generated region. Pure in (state, n), so a proxy death mid-decode
+    replays to bit-identical tokens — and a SYNC after decoding moves only
+    the chunks decode actually dirtied (cache/toks, never the params),
+    which is what makes serving over the *streamed* transport cheap.
+    """
+
+    def __init__(self, *, arch: str, smoke: bool = True, batch: int = 2,
+                 prompt_len: int = 32, gen: int = 16, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs import get_config
+        from repro.models import build
+
+        self.jax = jax
+        self.cfg = get_config(arch, smoke=smoke)
+        if self.cfg.frontend not in (None, "none", "text"):
+            raise ValueError(
+                f"decode_arch proxies text decode; arch {arch!r} has "
+                f"frontend {self.cfg.frontend!r}"
+            )
+        self.model = build(self.cfg)
+        if self.model.decode is None or self.model.init_cache is None:
+            raise ValueError(f"arch {arch!r} has no decode path")
+        self.batch, self.seed = int(batch), int(seed)
+        self.prompt_len, self.gen = int(prompt_len), int(gen)
+        self.total = self.prompt_len + self.gen
+        P, total = self.prompt_len, self.total
+
+        @jax.jit
+        def step_fn(d, n):
+            tok = jax.lax.dynamic_slice_in_dim(d["toks"], n - 1, 1, 1)[:, 0]
+            logits, cache = self.model.decode(d["params"], d["cache"], tok)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            pos = jnp.minimum(n, total - 1)
+            cur = jax.lax.dynamic_slice_in_dim(d["toks"], pos, 1, 1)[:, 0]
+            val = jnp.where((n >= P) & (n < total), nxt, cur)
+            toks = jax.lax.dynamic_update_slice(
+                d["toks"], val[:, None], (0, pos)
+            )
+            return (
+                {"params": d["params"], "cache": cache, "toks": toks},
+                nxt[0].astype(jnp.float32),
+            )
+
+        self.step_fn = step_fn
+
+    def prompt(self):
+        import numpy as np
+
+        rng = np.random.default_rng(self.seed)
+        return rng.integers(
+            0, self.cfg.vocab_size, (self.batch, self.prompt_len)
+        ).astype(np.int32)
+
+    def init_state(self):
+        import jax.numpy as jnp
+        import numpy as np
+
+        toks = np.zeros((self.batch, self.total), np.int32)
+        toks[:, : self.prompt_len] = self.prompt()
+        return {
+            "params": self.model.init(self.jax.random.key(self.seed)),
+            "cache": self.model.init_cache(self.batch, self.total),
+            "toks": jnp.asarray(toks),
+        }
+
+    def step(self, d, step):
+        import jax.numpy as jnp
+
+        d2, tok0 = self.step_fn(d, jnp.asarray(int(step), jnp.int32))
+        return d2, {"tok0": float(tok0)}
+
+    def on_restore(self, d):
+        import jax.numpy as jnp
+
+        return self.jax.tree.map(jnp.asarray, d)
+
+    def state_nbytes(self) -> int:
+        return _abstract_state_nbytes(self.jax, self.init_state)
+
+
 def _abstract_state_nbytes(jax, init_fn) -> int:
     """Size a jax init under eval_shape: shapes/dtypes only, no buffers."""
     import numpy as np
@@ -251,3 +341,4 @@ def _abstract_state_nbytes(jax, init_fn) -> int:
 register_step_program("numpy_sgd", NumpySGD)
 register_step_program("jax_tiny", JaxTiny)
 register_step_program("train_arch", TrainArch)
+register_step_program("decode_arch", DecodeArch)

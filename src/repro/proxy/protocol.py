@@ -11,20 +11,31 @@ through the pipe, only tiny control frames do.
 Application -> proxy::
 
     PROGRAM   {spec}                 construct the step program (replayable)
-    REGISTER  {layout, chunk_bytes,  attach data-plane segments; init state.
-               device_capacity_bytes?, page_bytes?, eviction_policy?}
-                                     with a capacity the proxy hosts its
+    REGISTER  {layout, chunk_bytes,  attach the data plane; init state.
+               transport?,           ``transport`` is ``"segment"`` (shared
+               workdir?,             MAP_SHARED files, local zero-copy —
+               device_capacity_bytes?, needs ``workdir``) or ``"stream"``
+               page_bytes?,          (payloads travel as CHUNKS frames over
+               eviction_policy?,     this connection — the remote form).
+               promote_threshold?}   with a capacity the proxy hosts its
                                      device state in a ManagedSpace (UVM
                                      paging under a hard budget)
-    UPLOAD    {paths, step, chunks?} ingest segment bytes into device state.
-                                     ``chunks`` ({path: [chunk indices]})
-                                     is the delta form: only those chunk
-                                     ranges are read from the segments —
-                                     bytes-on-wire scales with dirty
-                                     chunks, not state size
+    UPLOAD    {paths, step, chunks?, ingest data-plane bytes into device
+               n_frames?}            state. ``chunks`` ({path: [chunk
+                                     indices]}) is the delta form: only
+                                     those chunk ranges move — bytes on
+                                     the wire scale with dirty chunks, not
+                                     state size. Streamed transport: the
+                                     payload follows as exactly
+                                     ``n_frames`` CHUNKS frames
+    CHUNKS    {codec, items, data}   one data-plane frame (streamed
+                                     transport): ``items`` is a list of
+                                     [path, chunk_index, raw_len] and
+                                     ``data`` their concatenated bytes,
+                                     optionally zstd-compressed per frame
     STEP      {step}                 run one train step — pipelined, NO reply
     FLUSH     {seq}                  pipeline barrier (control-plane only)
-    SYNC      {}                     flush + write device state to segments
+    SYNC      {}                     flush + device state -> data plane
     SHUTDOWN  {}                     clean exit
 
 Proxy -> application::
@@ -32,7 +43,11 @@ Proxy -> application::
     OK        {op, ...}              ack for PROGRAM/REGISTER/UPLOAD
     ERR       {op, error}            the call failed; proxy stays up
     FLUSHED   {seq, step}            pipeline empty up to ``seq``
-    SYNCED    {step, digest, metrics, chunks_synced, bytes_synced, paging?}
+    CHUNKS    {codec, items, data}   streamed transport: dirty-chunk
+                                     payload of the in-progress SYNC (sent
+                                     before its SYNCED)
+    SYNCED    {step, digest, metrics, chunks_synced, bytes_synced,
+               wire_bytes?, paging?}
 
 STEP carrying no reply is the proxying economy the paper measures in
 Fig. 4: the app runs ahead of the proxy exactly like JAX's async dispatch
@@ -52,6 +67,7 @@ from repro.coord.protocol import (  # noqa: F401  (re-exported framing)
 MSG_PROGRAM = "PROGRAM"
 MSG_REGISTER = "REGISTER"
 MSG_UPLOAD = "UPLOAD"
+MSG_CHUNKS = "CHUNKS"
 MSG_STEP = "STEP"
 MSG_FLUSH = "FLUSH"
 MSG_SYNC = "SYNC"

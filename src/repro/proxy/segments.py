@@ -1,17 +1,27 @@
-"""Data plane: file-backed MAP_SHARED mmap segments shared app <-> proxy.
+"""Data plane: per-leaf byte tables shared (or streamed) app <-> proxy.
 
 The control pipe carries only tiny msgpack frames; bulk state crosses
-process boundaries through these segments, the same split CRUM makes
-between its proxy RPC channel and the UVM pages both sides can touch.
-Segments are plain files (preferring ``/dev/shm`` so the pages are
-RAM-backed) mapped MAP_SHARED by both the application and the proxy — and,
-because the files outlive any one proxy incarnation, a respawned proxy
-attaches the *same* pages and replay's data push is a segment read, not a
-network transfer.
+process boundaries through a :class:`StateTable` — the allocation table
+(``layout``: path -> byte size, shape, dtype) plus one byte buffer per
+device-state leaf. Two concrete tables exist:
 
-One segment per device-state leaf. The ``layout`` dict (sent in REGISTER
-and recorded in the API log) is the allocation table: path -> file name,
-byte size, shape, dtype.
+``SegmentTable``
+    file-backed MAP_SHARED mmap segments (preferring ``/dev/shm`` so the
+    pages are RAM-backed), mapped by both the application and the proxy —
+    the same split CRUM makes between its proxy RPC channel and the UVM
+    pages both sides can touch. Because the files outlive any one proxy
+    incarnation, a respawned *local* proxy attaches the same pages and
+    replay's data push is a segment read, not a transfer.
+
+``PrivateTable``
+    plain process-private numpy buffers with the identical read/write API.
+    This is each side's terminal of the *streamed* transport
+    (``repro.remote.transport``): a remote proxy cannot map the app's
+    ``/dev/shm``, so UPLOAD/SYNC payloads travel as chunk frames over the
+    TCP connection and land in a private table on the far side.
+
+Either table hands ``factory`` to a ``ShadowStateManager(segment_factory=
+...)`` so shadow buffers ARE the table's buffers.
 """
 from __future__ import annotations
 
@@ -67,33 +77,39 @@ class SharedSegment:
             self._mm = None
 
 
-class SegmentTable:
-    """The full segment set for one registered device state.
+class StateTable:
+    """Layout + chunk/state access over one byte buffer per pytree leaf.
 
     The application side *creates* it from a state pytree (recording the
     treedef so synced state can be rebuilt); the proxy side *attaches* to
-    an existing layout. Either side hands ``factory`` to a
-    ``ShadowStateManager(segment_factory=...)`` so shadow buffers ARE the
-    shared segments.
+    an existing layout. Storage is subclass-provided via :meth:`view`.
     """
 
-    def __init__(self, workdir: str):
+    kind = "?"
+
+    def __init__(self, workdir: str | None = None):
         self.workdir = workdir
         self.layout: dict[str, dict[str, Any]] = {}
-        self._segments: dict[str, SharedSegment] = {}
         self._treedef = None
-        self._owns_dir = False
-        # cumulative bytes this side has written INTO the segments — the
+        # cumulative bytes this side has written INTO the table — the
         # data-plane half of "bytes on the wire" (the wire-level delta
         # tests assert it scales with dirty chunks, not state size)
         self.bytes_written = 0
 
+    # -- storage (subclass) ----------------------------------------------------
+    def view(self, path: str) -> np.ndarray:
+        """The u8 byte buffer backing one leaf."""
+        raise NotImplementedError
+
+    def _alloc(self, path: str, fname: str, nbytes: int) -> np.ndarray:
+        """Create storage for one leaf; returns its u8 view."""
+        raise NotImplementedError
+
     # -- application side ------------------------------------------------------
     @classmethod
-    def create(cls, state: Any, *, workdir: str | None = None) -> "SegmentTable":
-        """Allocate one segment per leaf and fill it with the leaf bytes."""
-        t = cls(workdir or default_segment_dir())
-        t._owns_dir = workdir is None
+    def create(cls, state: Any, **kw) -> "StateTable":
+        """Allocate one buffer per leaf and fill it with the leaf bytes."""
+        t = cls(**kw)
         flat, treedef = flatten_with_paths(state)
         t._treedef = treedef
         for i, (path, leaf) in enumerate(flat.items()):
@@ -105,27 +121,24 @@ class SegmentTable:
                 "shape": list(arr.shape),
                 "dtype": arr.dtype.name,
             }
-            seg = SharedSegment(
-                os.path.join(t.workdir, fname), arr.nbytes, create=True
-            )
-            t._segments[path] = seg
+            buf = t._alloc(path, fname, arr.nbytes)
             if arr.nbytes:
-                seg.view()[:] = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+                buf[:] = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
                 t.bytes_written += int(arr.nbytes)
         return t
 
     def write_state(self, state: Any) -> int:
-        """Overwrite segment content with ``state``'s bytes; returns bytes."""
+        """Overwrite buffer content with ``state``'s bytes; returns bytes."""
         flat, _ = flatten_with_paths(state)
         total = 0
         for path, leaf in flat.items():
             spec = self.layout.get(path)
             if spec is None:
-                raise KeyError(f"leaf {path!r} not in segment layout")
+                raise KeyError(f"leaf {path!r} not in table layout")
             arr = np.asarray(leaf)
             if int(arr.nbytes) != spec["nbytes"]:
                 raise ValueError(
-                    f"leaf {path!r} is {arr.nbytes}B, segment is "
+                    f"leaf {path!r} is {arr.nbytes}B, buffer is "
                     f"{spec['nbytes']}B — re-register for shape changes"
                 )
             if arr.nbytes:
@@ -140,7 +153,7 @@ class SegmentTable:
         self, state: Any, chunks: dict[str, list[int]], chunk_bytes: int
     ) -> int:
         """Overwrite only the given chunk byte-ranges of each leaf's
-        segment — the delta half of a chunk-delta UPLOAD. Returns bytes
+        buffer — the delta half of a chunk-delta UPLOAD. Returns bytes
         actually written (what crossed the data plane)."""
         flat, _ = flatten_with_paths(state)
         cb = int(chunk_bytes)
@@ -148,11 +161,11 @@ class SegmentTable:
         for path, idxs in chunks.items():
             spec = self.layout.get(path)
             if spec is None:
-                raise KeyError(f"leaf {path!r} not in segment layout")
+                raise KeyError(f"leaf {path!r} not in table layout")
             arr = np.asarray(flat[path])
             if int(arr.nbytes) != spec["nbytes"]:
                 raise ValueError(
-                    f"leaf {path!r} is {arr.nbytes}B, segment is "
+                    f"leaf {path!r} is {arr.nbytes}B, buffer is "
                     f"{spec['nbytes']}B — re-register for shape changes"
                 )
             if not idxs or not arr.nbytes:
@@ -168,8 +181,44 @@ class SegmentTable:
         self.bytes_written += total
         return total
 
+    def write_range(self, path: str, lo: int, data: np.ndarray) -> int:
+        """Splice raw bytes at offset ``lo`` of one leaf's buffer — the
+        receive half of a streamed chunk frame. Returns bytes written."""
+        spec = self.layout.get(path)
+        if spec is None:
+            raise KeyError(f"leaf {path!r} not in table layout")
+        data = np.frombuffer(data, np.uint8) if isinstance(
+            data, (bytes, bytearray, memoryview)
+        ) else np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+        hi = lo + data.nbytes
+        if lo < 0 or hi > spec["nbytes"]:
+            raise ValueError(
+                f"range [{lo}, {hi}) outside leaf {path!r} "
+                f"({spec['nbytes']}B)"
+            )
+        if data.nbytes:
+            self.view(path)[lo:hi] = data
+            self.bytes_written += int(data.nbytes)
+        return int(data.nbytes)
+
+    def chunk_bytes_of(self, path: str, index: int, chunk_bytes: int) -> np.ndarray:
+        """The current bytes of one chunk (a buffer view, zero-copy)."""
+        nbytes = self.layout[path]["nbytes"]
+        lo, hi = index * chunk_bytes, min(nbytes, (index + 1) * chunk_bytes)
+        if index < 0 or lo >= hi:
+            raise IndexError(f"chunk {index} outside leaf {path!r}")
+        return self.view(path)[lo:hi]
+
+    def all_chunks(self, chunk_bytes: int) -> dict[str, list[int]]:
+        """{path: every chunk index} — the full-state chunk map."""
+        cb = int(chunk_bytes)
+        return {
+            p: list(range(-(-s["nbytes"] // cb))) if s["nbytes"] else []
+            for p, s in self.layout.items()
+        }
+
     def read_state(self) -> Any:
-        """Rebuild the state pytree from current segment content (copies)."""
+        """Rebuild the state pytree from current buffer content (copies)."""
         if self._treedef is None:
             raise RuntimeError("read_state() needs the creating side's treedef")
         leaves = {}
@@ -180,12 +229,55 @@ class SegmentTable:
 
     # -- proxy side ------------------------------------------------------------
     @classmethod
-    def attach(cls, workdir: str, layout: dict[str, dict]) -> "SegmentTable":
-        t = cls(workdir)
+    def attach(cls, layout: dict[str, dict], **kw) -> "StateTable":
+        t = cls(**kw)
         t.layout = {p: dict(s) for p, s in layout.items()}
         return t
 
     # -- both sides ------------------------------------------------------------
+    def factory(self, key: tuple[str, int], nbytes: int) -> np.ndarray:
+        """``ShadowStateManager.segment_factory`` adapter (shard 0 only —
+        proxy device state is host-local, one stream per leaf)."""
+        path, ordinal = key
+        if ordinal != 0:
+            raise ValueError("proxy state tables are single-shard (ordinal 0)")
+        spec = self.layout[path]
+        if int(nbytes) != spec["nbytes"]:
+            raise ValueError(
+                f"shadow stream {key} wants {nbytes}B, buffer holds "
+                f"{spec['nbytes']}B"
+            )
+        return self.view(path)
+
+    def total_bytes(self) -> int:
+        return sum(s["nbytes"] for s in self.layout.values())
+
+    def close(self, *, unlink: bool = False) -> None:
+        pass
+
+
+class SegmentTable(StateTable):
+    """File-backed MAP_SHARED segments — the zero-copy local data plane."""
+
+    kind = "segment"
+
+    def __init__(self, workdir: str | None = None):
+        owns = workdir is None
+        super().__init__(workdir or default_segment_dir())
+        self._segments: dict[str, SharedSegment] = {}
+        self._owns_dir = owns
+
+    def _alloc(self, path: str, fname: str, nbytes: int) -> np.ndarray:
+        seg = SharedSegment(
+            os.path.join(self.workdir, fname), nbytes, create=True
+        )
+        self._segments[path] = seg
+        return seg.view()
+
+    @classmethod
+    def attach(cls, workdir: str, layout: dict[str, dict]) -> "SegmentTable":
+        return super().attach(layout, workdir=workdir)
+
     def view(self, path: str) -> np.ndarray:
         seg = self._segments.get(path)
         if seg is None:
@@ -197,23 +289,6 @@ class SegmentTable:
             )
             self._segments[path] = seg
         return seg.view()
-
-    def factory(self, key: tuple[str, int], nbytes: int) -> np.ndarray:
-        """``ShadowStateManager.segment_factory`` adapter (shard 0 only —
-        proxy device state is host-local, one stream per leaf)."""
-        path, ordinal = key
-        if ordinal != 0:
-            raise ValueError("proxy segments are single-shard (ordinal 0)")
-        spec = self.layout[path]
-        if int(nbytes) != spec["nbytes"]:
-            raise ValueError(
-                f"shadow stream {key} wants {nbytes}B, segment holds "
-                f"{spec['nbytes']}B"
-            )
-        return self.view(path)
-
-    def total_bytes(self) -> int:
-        return sum(s["nbytes"] for s in self.layout.values())
 
     def close(self, *, unlink: bool = False) -> None:
         for seg in self._segments.values():
@@ -228,3 +303,29 @@ class SegmentTable:
                         os.unlink(os.path.join(self.workdir, spec["file"]))
                     except OSError:
                         pass
+
+
+class PrivateTable(StateTable):
+    """Process-private buffers — each side's terminal of the streamed
+    transport. Nothing is shared: bytes arrive/leave as chunk frames."""
+
+    kind = "private"
+
+    def __init__(self, workdir: str | None = None):
+        super().__init__(workdir)
+        self._buffers: dict[str, np.ndarray] = {}
+
+    def _alloc(self, path: str, fname: str, nbytes: int) -> np.ndarray:
+        buf = np.zeros(nbytes, np.uint8)
+        self._buffers[path] = buf
+        return buf
+
+    def view(self, path: str) -> np.ndarray:
+        buf = self._buffers.get(path)
+        if buf is None:
+            buf = np.zeros(self.layout[path]["nbytes"], np.uint8)
+            self._buffers[path] = buf
+        return buf
+
+    def close(self, *, unlink: bool = False) -> None:
+        self._buffers.clear()

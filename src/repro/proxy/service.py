@@ -4,16 +4,23 @@ This is the paper's proxy half of the split: the application process stays
 device-clean (checkpointable with ordinary host-memory tools) while this
 process holds the "device" (the step program's state) and executes the
 pipelined call stream. The shadow machinery is reused in reverse: a
-``ShadowStateManager`` whose buffers ARE the shared segments gives
+``ShadowStateManager`` whose buffers ARE the data-plane table gives
 
-  - ``sync``:   device -> segments, digest-gated so unchanged chunks never
+  - ``sync``:   device -> table, digest-gated so unchanged chunks never
                 recopy (the paper's read-fault economy on the data plane),
-  - ``upload``: segments -> device, HOST_DIRTY chunks only — the replay
+  - ``upload``: table -> device, HOST_DIRTY chunks only — the replay
                 data-push primitive after a respawn or restore.
+
+The data plane itself is a transport decision made at REGISTER time
+(``repro.remote.transport``): ``segment`` attaches the app's MAP_SHARED
+files (local, zero-copy); ``stream`` keeps a private table and moves
+UPLOAD/SYNC payloads as CHUNKS frames on this very connection — which is
+what lets this service run on a *different host* than its application
+(``repro.remote.host`` serves accepted connections with this same class).
 
 The service exits on EOF (application gone), SHUTDOWN, or a SIGKILL drill;
 it keeps no durable state of its own — everything needed to rebuild it
-lives in the application's API log plus the segment bytes.
+lives in the application's API log plus the application-side mirror.
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ from typing import Any
 
 from repro.proxy.protocol import (
     MSG_ERR,
+    MSG_CHUNKS,
     MSG_FLUSH,
     MSG_FLUSHED,
     MSG_OK,
@@ -39,12 +47,12 @@ from repro.proxy.protocol import (
 
 
 def proxy_entry(cfg: ProxyServiceConfig) -> int:
-    """Process entry point (multiprocessing spawn target)."""
+    """Process entry point (multiprocessing spawn target, local mode)."""
     if cfg.jax_platforms:
         os.environ.setdefault("JAX_PLATFORMS", cfg.jax_platforms)
     conn = connect((cfg.host, cfg.port), timeout=60.0)
     conn.settimeout(cfg.sock_timeout_s)
-    service = _ProxyService(conn)
+    service = ProxyService(conn)
     try:
         service.serve()
     finally:
@@ -52,11 +60,14 @@ def proxy_entry(cfg: ProxyServiceConfig) -> int:
     return 0
 
 
-class _ProxyService:
+class ProxyService:
+    """One proxy session over one connection (process- or thread-hosted)."""
+
     def __init__(self, conn):
         self.conn = conn
         self.program = None
-        self.segments = None
+        self.table = None            # data-plane StateTable (segment/private)
+        self.transport = "segment"
         self.shadow = None
         self.dstate: Any = None
         # managed-memory mode (REGISTER with device_capacity_bytes): the
@@ -74,6 +85,8 @@ class _ProxyService:
                 msg = self.conn.recv()
             except (socket.timeout, TimeoutError):
                 continue
+            except (OSError, ValueError):
+                return  # connection torn down under us (daemon shutdown)
             if msg is None:  # application died or closed: this incarnation ends
                 return
             if not self._dispatch(msg):
@@ -129,13 +142,14 @@ class _ProxyService:
 
     def _on_register(self, msg: dict) -> None:
         from repro.core.shadow import ShadowStateManager
-        from repro.proxy.segments import SegmentTable
+        from repro.remote.transport import make_proxy_table
 
-        self.segments = SegmentTable.attach(msg["workdir"], msg["layout"])
+        self.transport = msg.get("transport", "segment")
+        self.table = make_proxy_table(msg)
         self.shadow = ShadowStateManager(
             chunk_bytes=int(msg.get("chunk_bytes", 1 << 20)),
             digest_on_device=False,
-            segment_factory=self.segments.factory,
+            segment_factory=self.table.factory,
         )
         # the program defines the structure; uploads overwrite the content
         init = self.program.init_state()
@@ -147,6 +161,8 @@ class _ProxyService:
                 int(capacity),
                 page_bytes=int(msg.get("page_bytes") or DEFAULT_PAGE_BYTES),
                 eviction_policy=msg.get("eviction_policy") or "lru",
+                promote_threshold=int(msg.get("promote_threshold") or 0),
+                promote_window=int(msg.get("promote_window") or 0),
             )
             self.space.register(init)
             self._space_sync_tick = -1
@@ -164,13 +180,23 @@ class _ProxyService:
         return self.space.peek_state() if self.space is not None else self.dstate
 
     def _on_upload(self, msg: dict) -> None:
+        # streamed transport: the payload follows the UPLOAD frame as
+        # exactly n_frames CHUNKS frames — land them in the table first,
+        # then ingest from the table exactly like the segment path
+        n_frames = int(msg.get("n_frames") or 0)
+        if n_frames:
+            from repro.remote.transport import recv_chunk_frames
+
+            recv_chunk_frames(
+                self.conn, n_frames, self.table, self.shadow.chunk_bytes
+            )
         chunks = msg.get("chunks")
         if self.space is not None and chunks is not None:
             self._delta_upload_into_space(msg, chunks)
             return
         state = self._device_view()
         if chunks is not None:
-            # delta form: only the listed segment chunk ranges are stale
+            # delta form: only the listed chunk ranges are stale
             for p, idxs in chunks.items():
                 self.shadow.mark_host_chunks(p, [int(i) for i in idxs])
         else:
@@ -252,6 +278,24 @@ class _ProxyService:
             state = self.dstate
             self.shadow.mark_device_step()
             stats = self.shadow.sync(state)
+        if self.transport == "stream":
+            # the app side cannot see this table: ship exactly the chunks
+            # this sync materialized as CHUNKS frames ahead of the SYNCED —
+            # steady-state wire bytes scale with dirty chunks
+            from repro.remote.transport import encode_chunk_frames
+
+            changed = {
+                path: idxs
+                for (path, ordinal), idxs in stats.changed.items()
+                if ordinal == 0 and idxs
+            }
+            frames, raw, wire = encode_chunk_frames(
+                self.table, changed, self.shadow.chunk_bytes
+            )
+            for frame in frames:
+                self.conn.send(MSG_CHUNKS, **frame)
+            fields["wire_bytes"] = wire
+            fields["raw_bytes"] = raw
         self.conn.send(
             MSG_SYNCED,
             step=self.last_step,
@@ -261,3 +305,7 @@ class _ProxyService:
             bytes_synced=stats.bytes_fetched,
             **fields,
         )
+
+
+# Backwards-compatible alias (pre-remote name)
+_ProxyService = ProxyService

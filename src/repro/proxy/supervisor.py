@@ -1,33 +1,40 @@
 """ProxyRunner — supervised, restartable proxied execution.
 
 The process-level half of the proxy subsystem (modeled on
-``coord/supervisor.py``): owns the durable API log, the shared-segment
-data plane, and the current :class:`DeviceProxy` incarnation. Any
-transport failure is treated as proxy death and answered with the paper's
-restart protocol, mid-training:
+``coord/supervisor.py``): owns the durable API log, the data-plane
+transport (``repro.remote.transport``: shared segments locally, streamed
+chunk frames cross-host), and the current :class:`DeviceProxy`
+incarnation. Any transport failure is treated as proxy death and answered
+with the paper's restart protocol, mid-training:
 
     1. spend one unit of the restart budget (``core.failure.RestartBudget``),
-    2. spawn a fresh proxy process,
+    2. bring up a fresh proxy — respawn locally, or ask the
+       ``endpoint_provider`` for a (possibly different) proxy host when the
+       placement layer owns the decision (jittered backoff between
+       attempts so a crash-looping endpoint is not hammered),
     3. replay the API log: PROGRAM, REGISTER, then push the last synced
-       snapshot back through the segments (UPLOAD — served by
+       snapshot back through the transport (UPLOAD — served by
        ``ShadowStateManager.upload`` on the proxy side),
     4. re-issue every logged STEP after the last SYNC.
 
 Deterministic step programs make the recovered state bit-identical to an
-uninterrupted run, so training simply continues.
+uninterrupted run, so training simply continues — even when the new
+incarnation lives on a different machine than the dead one.
 
 Torn-sync hazard (CRAC's "streams in flight"): a SIGKILL mid-SYNC can
-leave segment bytes mixed between two steps, so the segments alone are not
-a safe replay source. The runner therefore keeps a host-side mirror of the
-last *acknowledged* sync (``sync_state()`` returns it to the caller anyway
-— checkpointing needs the copy) and rewrites the segments from that mirror
-before the replay UPLOAD.
+leave data-plane bytes mixed between two steps (segments half-written, or
+only some streamed CHUNKS frames applied), so the transport table alone is
+not a safe replay source. The runner therefore keeps a host-side mirror of
+the last *acknowledged* sync (``sync_state()`` returns it to the caller
+anyway — checkpointing needs the copy) and rewrites the table from that
+mirror before the replay UPLOAD.
 """
 from __future__ import annotations
 
 import os
+import random
 import time
-from typing import Any
+from typing import Any, Callable
 
 import numpy as np
 
@@ -35,7 +42,10 @@ from repro.core.failure import RestartBudget
 from repro.proxy.api_log import ApiLog
 from repro.proxy.client import DeviceProxy
 from repro.proxy.protocol import ProxyDiedError
-from repro.proxy.segments import SegmentTable
+
+# NOTE: repro.remote.transport is imported lazily (start()): it builds on
+# repro.proxy.segments, so a module-level import here would cycle through
+# the package __init__ while remote.transport itself is mid-import.
 
 
 class ProxyRunner:
@@ -48,9 +58,14 @@ class ProxyRunner:
         workdir: str | None = None,
         log_path: str | None = None,
         chunk_bytes: int = 1 << 20,
+        transport: str = "segment",
+        compress: bool | None = None,
+        endpoint_provider: Callable[..., tuple[str, int]] | None = None,
         device_capacity_bytes: int | None = None,
         page_bytes: int | None = None,
         eviction_policy: str = "lru",
+        promote_threshold: int = 0,
+        promote_window: int = 0,
         max_restarts: int = 3,
         max_pipeline: int = 64,
         sync_timeout_s: float = 120.0,
@@ -58,9 +73,17 @@ class ProxyRunner:
         mp_context: str = "spawn",
         jax_platforms: str | None = "cpu",
         fsync_log: bool = False,
+        respawn_backoff_s: float = 0.05,
     ):
         self.program_spec = dict(program_spec)
         self.chunk_bytes = int(chunk_bytes)
+        self.transport_kind = transport
+        self.compress = compress
+        # placement seam: when set, incarnations connect OUT to whatever
+        # endpoint the provider names (provider(failed=True) after a death
+        # reports the loss and may return a different host — the
+        # reschedule-and-replay path). None = spawn a local child process.
+        self.endpoint_provider = endpoint_provider
         # UVM mode: the proxy hosts its device state in a ManagedSpace with
         # this hard budget — states larger than "device" memory page
         self.device_capacity_bytes = (
@@ -68,6 +91,8 @@ class ProxyRunner:
         )
         self.page_bytes = page_bytes
         self.eviction_policy = eviction_policy
+        self.promote_threshold = int(promote_threshold)
+        self.promote_window = int(promote_window)
         self.sync_timeout_s = sync_timeout_s
         self._proxy_opts = dict(
             mp_context=mp_context,
@@ -76,9 +101,11 @@ class ProxyRunner:
             jax_platforms=jax_platforms,
         )
         self.budget = RestartBudget(max_restarts, what="device proxy")
-        self.segments: SegmentTable | None = None
+        self.respawn_backoff_s = float(respawn_backoff_s)
+        self.transport = None  # ChunkTransport, created by start()
         self._explicit_workdir = workdir
         self._log_path = log_path
+        self._owned_log_dir: str | None = None
         self._fsync_log = fsync_log
         self.log: ApiLog | None = None
         self.proxy: DeviceProxy | None = None
@@ -95,7 +122,7 @@ class ProxyRunner:
 
     # -- lifecycle ---------------------------------------------------------------
     def start(self, device_state: Any = None, *, base_step: int = 0) -> Any:
-        """Spawn the proxy and create device state in it.
+        """Bring up the proxy and create device state in it.
 
         ``device_state=None`` asks the program for a fresh init (built
         app-side too — both sides share the registry, so the layout is
@@ -104,31 +131,40 @@ class ProxyRunner:
         """
         if self.started:
             raise RuntimeError("ProxyRunner already started; use push()")
+        from repro.remote.transport import default_log_dir, make_transport
+
         if device_state is None:
             from repro.proxy.programs import make_program
 
             device_state = make_program(self.program_spec).init_state()
-        self.segments = SegmentTable.create(
-            device_state, workdir=self._explicit_workdir
+        self.transport = make_transport(
+            self.transport_kind,
+            device_state,
+            self.chunk_bytes,
+            workdir=self._explicit_workdir,
+            compress=self.compress,
         )
-        self.log = ApiLog(
-            self._log_path or os.path.join(self.segments.workdir, "API_LOG.bin"),
-            truncate=True,
-            fsync=self._fsync_log,
-        )
+        log_path = self._log_path
+        if log_path is None:
+            log_dir = self.transport.table.workdir or self._explicit_workdir
+            if log_dir is None:
+                log_dir = self._owned_log_dir = default_log_dir()
+            log_path = os.path.join(log_dir, "API_LOG.bin")
+        self.log = ApiLog(log_path, truncate=True, fsync=self._fsync_log)
         self.log.append({"call": "program", "spec": self.program_spec})
         self.log.append({
             "call": "register",
-            "workdir": self.segments.workdir,
-            "layout": self.segments.layout,
+            **self.transport.register_fields(),
             "chunk_bytes": self.chunk_bytes,
             "device_capacity_bytes": self.device_capacity_bytes,
             "page_bytes": self.page_bytes,
             "eviction_policy": self.eviction_policy,
+            "promote_threshold": self.promote_threshold,
+            "promote_window": self.promote_window,
         })
         self.log.append({"call": "upload", "step": int(base_step), "paths": None})
         self.last_synced_step = int(base_step)
-        self._last_state = self.segments.read_state()
+        self._last_state = self.transport.read_state()
         self._steps_since_sync = 0
         self._spawn_and_replay(upload_only=True)
         self.started = True
@@ -139,7 +175,7 @@ class ProxyRunner:
 
         Delta-aware: when the last acked sync mirror is structurally
         compatible with ``device_state``, only the chunk ranges whose bytes
-        differ are rewritten into the segments and named in the UPLOAD
+        differ are rewritten into the data plane and named in the UPLOAD
         frame — bytes on the wire scale with dirty chunks, not state size.
         Returns the proxy's UPLOAD ack ({bytes_uploaded, chunks_uploaded}).
         """
@@ -148,19 +184,20 @@ class ProxyRunner:
             self._chunk_delta(device_state)
             if self._steps_since_sync == 0 else None
         )
-        if chunks is None:
-            self.segments.write_state(device_state)
-        else:
-            self.segments.write_chunks(device_state, chunks, self.chunk_bytes)
-        self._last_state = self.segments.read_state()
+        self.transport.stage(device_state, chunks)
+        self._last_state = self.transport.read_state()
         self.log.append({
             "call": "upload", "step": self.last_synced_step, "paths": None,
             "chunks": chunks,
         })
         try:
-            reply = self.proxy.upload(step=self.last_synced_step, chunks=chunks)
+            reply = self.proxy.upload(
+                step=self.last_synced_step,
+                chunks=chunks,
+                payload_frames=self.transport.payload_frames(chunks),
+            )
         except ProxyDiedError:
-            # recovery rewrites the segments from the (already updated)
+            # recovery rewrites the data plane from the (already updated)
             # mirror and replays a FULL upload — the pushed state lands
             self._recover()
             return {"op": "UPLOAD", "replayed": True}
@@ -201,9 +238,14 @@ class ProxyRunner:
             self.proxy = None
         if self.log is not None:
             self.log.close()
-        if self.segments is not None:
-            self.segments.close(unlink=True)
-            self.segments = None
+        if self.transport is not None:
+            self.transport.close(unlink=True)
+            self.transport = None
+        if self._owned_log_dir is not None:
+            import shutil
+
+            shutil.rmtree(self._owned_log_dir, ignore_errors=True)
+            self._owned_log_dir = None
         self.started = False
 
     # -- the pipelined call stream -------------------------------------------------
@@ -226,7 +268,7 @@ class ProxyRunner:
             self._recover()
 
     def sync_state(self) -> tuple[Any, dict[str, Any]]:
-        """Flush the pipeline, sync device->segments, return (state, info).
+        """Flush the pipeline, sync device->data plane, return (state, info).
 
         The returned state is a host-side copy (safe to checkpoint, safe to
         keep as the recovery mirror). ``info`` carries the proxy's step,
@@ -246,7 +288,7 @@ class ProxyRunner:
             "step": self.last_synced_step,
             "digest": self.last_digest,
         })
-        self._last_state = self.segments.read_state()
+        self._last_state = self.transport.read_state()
         self._steps_since_sync = 0
         info = {
             "step": self.last_synced_step,
@@ -255,7 +297,10 @@ class ProxyRunner:
             "chunks_synced": msg.get("chunks_synced", 0),
             "bytes_synced": msg.get("bytes_synced", 0),
             "restarts": self.budget.count,
+            "transport": self.transport.stats(),
         }
+        if "wire_bytes" in msg:
+            info["wire_bytes"] = msg["wire_bytes"]
         if "paging" in msg:
             info["paging"] = msg["paging"]
         return self._last_state, info
@@ -272,25 +317,43 @@ class ProxyRunner:
     def restarts(self) -> int:
         return self.budget.count
 
+    @property
+    def segments(self):
+        """The data-plane table (historical name kept for callers/tests)."""
+        return self.transport.table if self.transport is not None else None
+
     # -- respawn + replay ------------------------------------------------------------
     def _require_started(self) -> None:
         if not self.started or self.proxy is None:
             raise RuntimeError("ProxyRunner is not started")
 
-    def _spawn_and_replay(self, *, upload_only: bool = False) -> list[int]:
+    def _next_endpoint(self, *, failed: bool) -> tuple[str, int] | None:
+        if self.endpoint_provider is None:
+            return None
+        return self.endpoint_provider(failed=failed)
+
+    def _spawn_and_replay(
+        self, *, upload_only: bool = False, failed: bool = False
+    ) -> list[int]:
         """Bring up a fresh incarnation from the API log (+ the mirror);
         returns the step numbers replayed."""
-        self.proxy = DeviceProxy(**self._proxy_opts).start()
+        endpoint = self._next_endpoint(failed=failed)
+        self.proxy = DeviceProxy(endpoint=endpoint, **self._proxy_opts).start()
+        self.proxy.on_data = self.transport.on_chunks
         self.proxy.send_program(self.program_spec)
         self.proxy.register(
-            self.segments.workdir,
-            self.segments.layout,
+            **self.transport.register_fields(),
             chunk_bytes=self.chunk_bytes,
             device_capacity_bytes=self.device_capacity_bytes,
             page_bytes=self.page_bytes,
             eviction_policy=self.eviction_policy,
+            promote_threshold=self.promote_threshold,
+            promote_window=self.promote_window,
         )
-        self.proxy.upload(step=self.last_synced_step)
+        self.proxy.upload(
+            step=self.last_synced_step,
+            payload_frames=self.transport.payload_frames(None),
+        )
         if upload_only:
             return []
         _prog, _reg, steps = self.log.replay_plan()
@@ -299,25 +362,41 @@ class ProxyRunner:
         return steps
 
     def _recover(self) -> None:
-        """The kill-replay path: respawn, rewrite segments from the last
-        acked sync, replay logged steps past it. A fresh incarnation dying
-        *during* the replay spends more budget and retries, rather than
-        aborting while budget remains."""
+        """The kill-replay path: bring up a fresh incarnation (possibly on
+        a different endpoint), rewrite the data plane from the last acked
+        sync, replay logged steps past it. A fresh incarnation dying
+        *during* the replay spends more budget and retries — with a
+        jittered backoff so a flapping endpoint is not hammered — rather
+        than aborting while budget remains."""
         t0 = time.perf_counter()
+        attempt = 0
         while True:
             self.budget.spend(f"last synced step {self.last_synced_step}")
             old = self.proxy
             self.proxy = None
             if old is not None:
                 old.close(graceful=False)
-            # a SIGKILL mid-SYNC may have torn the segment bytes: restore
-            # them from the host mirror before the replay upload reads them
+            if attempt and self.respawn_backoff_s:
+                # full jitter, exponentially widening, capped at ~2s: avoid
+                # thundering back onto an endpoint that just died under load
+                time.sleep(random.uniform(
+                    0.0, min(self.respawn_backoff_s * (2 ** attempt), 2.0)
+                ))
+            attempt += 1
+            # a SIGKILL mid-SYNC may have torn the data-plane bytes (half-
+            # written segments, or only some streamed frames applied):
+            # restore them from the host mirror before the replay upload
             if self._last_state is not None:
-                self.segments.write_state(self._last_state)
+                self.transport.stage(self._last_state, None)
             try:
-                steps = self._spawn_and_replay()
+                steps = self._spawn_and_replay(failed=True)
                 break
             except ProxyDiedError:
+                # the fresh incarnation died too: release its socket (and
+                # local process, if any) before the next attempt
+                if self.proxy is not None:
+                    self.proxy.close(graceful=False)
+                    self.proxy = None
                 continue
         # the fresh incarnation re-executed exactly the steps past the
         # last watermark: the mirror is stale by that many steps again
@@ -326,4 +405,5 @@ class ProxyRunner:
             "recovery_s": time.perf_counter() - t0,
             "replayed_steps": len(steps),
             "resumed_from_step": self.last_synced_step,
+            "endpoint": getattr(self.proxy, "endpoint", None),
         })

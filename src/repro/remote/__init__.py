@@ -1,0 +1,46 @@
+"""Remote device proxies: cross-host data plane + placement.
+
+CRUM's headline scenario is hybrid CUDA/MPI computation across nodes; CRAC
+shows the proxy split surviving a host boundary once device state travels
+over an explicit transport. This package is that seam:
+
+``transport``
+    the :class:`ChunkTransport` axis — shared-segment (local, zero-copy)
+    vs streamed (length-prefixed dirty-chunk frames over the msgpack TCP
+    connection, optional per-frame zstd).
+
+``placement``
+    which proxy host serves which worker: the coordinator's
+    PROXY_ENDPOINT handshake, least-loaded assignment, and
+    reschedule-onto-a-survivor when a proxy host dies.
+
+``host``
+    the proxy-host daemon: a process that serves proxy sessions for any
+    number of remote applications over TCP.
+"""
+from repro.remote.transport import (
+    ChunkTransport,
+    SegmentChunkTransport,
+    StreamChunkTransport,
+    make_transport,
+)
+from repro.remote.placement import (
+    CoordEndpointProvider,
+    PlacementMap,
+    ProxyEndpoint,
+    request_proxy_endpoint,
+)
+from repro.remote.host import ProxyHostConfig, ProxyHostHandle
+
+__all__ = [
+    "ChunkTransport",
+    "SegmentChunkTransport",
+    "StreamChunkTransport",
+    "make_transport",
+    "CoordEndpointProvider",
+    "PlacementMap",
+    "ProxyEndpoint",
+    "request_proxy_endpoint",
+    "ProxyHostConfig",
+    "ProxyHostHandle",
+]

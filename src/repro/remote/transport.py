@@ -1,0 +1,316 @@
+"""ChunkTransport — how device-state bytes cross the app/proxy boundary.
+
+The proxy control plane (``repro.proxy.protocol``) is already
+location-transparent: tiny msgpack frames over TCP. What pins a proxy to
+the application's machine is the *data* plane — file-backed MAP_SHARED
+segments both processes mmap. This module abstracts that into a transport
+axis:
+
+``segment``
+    the existing local path: bulk bytes move through a shared
+    :class:`~repro.proxy.segments.SegmentTable`; UPLOAD/SYNC control
+    frames carry no payload. Zero-copy, but both ends must share a
+    filesystem (same host).
+
+``stream``
+    the cross-host path: UPLOAD/SYNC payloads travel as length-prefixed
+    CHUNKS frames *on the control connection itself*, each frame a batch
+    of ``[path, chunk_index, raw_len]`` entries plus their concatenated
+    bytes (optionally zstd-compressed per frame). Both ends keep a
+    :class:`~repro.proxy.segments.PrivateTable` as their local terminal.
+    Steady-state wire bytes scale with *dirty chunks* (PR 4's chunk-delta
+    machinery decides what is dirty), not with state size.
+
+The application side drives a :class:`ChunkTransport`; the proxy side uses
+the module-level helpers (:func:`make_proxy_table`,
+:func:`recv_chunk_frames`, :func:`encode_chunk_frames`) from inside the
+service dispatch loop.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import numpy as np
+
+from repro.proxy.segments import PrivateTable, SegmentTable, StateTable
+
+# payload batching target per CHUNKS frame — far under protocol.MAX_FRAME,
+# large enough that framing overhead stays negligible
+FRAME_PAYLOAD_BYTES = 1 << 20
+
+TRANSPORTS = ("segment", "stream")
+
+
+def _zstd():
+    try:
+        import zstandard
+
+        return zstandard
+    except ImportError:
+        return None
+
+
+def encode_chunk_frames(
+    table: StateTable,
+    chunks: dict[str, list[int]],
+    chunk_bytes: int,
+    *,
+    compress: bool | None = None,
+) -> tuple[list[dict], int, int]:
+    """Pack the given chunks' current table bytes into CHUNKS frame dicts.
+
+    Returns (frames, raw_bytes, wire_bytes): ``raw_bytes`` is the payload
+    before compression, ``wire_bytes`` what actually rides the connection.
+    ``compress=None`` auto-enables zstd when the package is importable —
+    the receiving side decodes per the frame's ``codec`` field, so both
+    ends must have it (they share this codebase's environment).
+    """
+    zstd = _zstd() if compress in (None, True) else None
+    if compress is True and zstd is None:
+        raise RuntimeError("compress=True but zstandard is not installed")
+    cctx = zstd.ZstdCompressor(level=1) if zstd is not None else None
+
+    frames: list[dict] = []
+    items: list[list] = []
+    parts: list[bytes] = []
+    pending = 0
+    raw_total = wire_total = 0
+
+    def flush() -> None:
+        nonlocal items, parts, pending, wire_total
+        if not items:
+            return
+        data = b"".join(parts)
+        codec = "raw"
+        if cctx is not None:
+            packed = cctx.compress(data)
+            if len(packed) < len(data):
+                data, codec = packed, "zstd"
+        frames.append({"codec": codec, "items": items, "data": data})
+        wire_total += len(data)
+        items, parts, pending = [], [], 0
+
+    for path in sorted(chunks):
+        for i in sorted(int(x) for x in chunks[path]):
+            piece = table.chunk_bytes_of(path, i, chunk_bytes)
+            n = int(piece.nbytes)
+            items.append([path, i, n])
+            parts.append(piece.tobytes())
+            pending += n
+            raw_total += n
+            if pending >= FRAME_PAYLOAD_BYTES:
+                flush()
+    flush()
+    return frames, raw_total, wire_total
+
+
+def apply_chunk_frame(
+    table: StateTable, msg: dict, chunk_bytes: int
+) -> tuple[int, int]:
+    """Splice one CHUNKS frame's payload into the table.
+
+    Returns (raw_bytes, wire_bytes) applied.
+    """
+    data = msg["data"]
+    wire = len(data)
+    if msg.get("codec") == "zstd":
+        zstd = _zstd()
+        if zstd is None:
+            raise RuntimeError(
+                "received a zstd CHUNKS frame but zstandard is not installed"
+            )
+        data = zstd.ZstdDecompressor().decompress(data)
+    off = 0
+    cb = int(chunk_bytes)
+    for path, index, raw_len in msg["items"]:
+        table.write_range(path, int(index) * cb, data[off : off + int(raw_len)])
+        off += int(raw_len)
+    if off != len(data):
+        raise ValueError(
+            f"CHUNKS frame payload is {len(data)}B but items claim {off}B"
+        )
+    return off, wire
+
+
+def recv_chunk_frames(conn, n_frames: int, table: StateTable, chunk_bytes: int) -> int:
+    """Consume exactly ``n_frames`` CHUNKS frames from ``conn`` into the
+    table (the proxy side of a streamed UPLOAD). Returns raw bytes applied.
+    Raises ``ConnectionError`` on EOF mid-payload (torn upload: the caller
+    dies and the app-side runner replays)."""
+    import socket
+
+    from repro.proxy.protocol import MSG_CHUNKS
+
+    total = 0
+    for _ in range(int(n_frames)):
+        while True:
+            try:
+                msg = conn.recv()
+                break
+            except (socket.timeout, TimeoutError):
+                continue
+        if msg is None:
+            raise ConnectionError("EOF mid-UPLOAD payload")
+        if msg.get("type") != MSG_CHUNKS:
+            raise ValueError(
+                f"expected CHUNKS payload frame, got {msg.get('type')!r}"
+            )
+        raw, _ = apply_chunk_frame(table, msg, chunk_bytes)
+        total += raw
+    return total
+
+
+def make_proxy_table(msg: dict) -> StateTable:
+    """The proxy-side table for a REGISTER frame's transport fields."""
+    kind = msg.get("transport", "segment")
+    if kind == "stream":
+        return PrivateTable.attach(msg["layout"])
+    if kind == "segment":
+        return SegmentTable.attach(msg["workdir"], msg["layout"])
+    raise ValueError(f"unknown transport {kind!r}; have {TRANSPORTS}")
+
+
+class ChunkTransport:
+    """Application-side data plane for one registered device state.
+
+    Owns the app's :class:`StateTable` (the mirror the runner reads back
+    after SYNC) and knows how to move bytes toward the proxy (``stage`` +
+    ``payload_frames``) and how to ingest the proxy's SYNC payload
+    (``on_chunks``). Wire counters separate payload that rode the TCP
+    connection (``wire_tx``/``wire_rx``) from bytes written into a shared
+    data plane (``table.bytes_written`` covers both sides' view of that).
+    """
+
+    kind = "?"
+
+    def __init__(self, table: StateTable, chunk_bytes: int):
+        self.table = table
+        self.chunk_bytes = int(chunk_bytes)
+        self.wire_tx = 0      # payload bytes sent on the connection
+        self.wire_rx = 0      # payload bytes received on the connection
+        self.raw_tx = 0       # pre-compression payload bytes sent
+        self.raw_rx = 0
+
+    # -- app -> proxy -----------------------------------------------------------
+    def stage(self, state: Any, chunks: dict[str, list[int]] | None) -> int:
+        """Write ``state`` (or just ``chunks`` of it) into the mirror table."""
+        if chunks is None:
+            return self.table.write_state(state)
+        return self.table.write_chunks(state, chunks, self.chunk_bytes)
+
+    def payload_frames(
+        self, chunks: dict[str, list[int]] | None
+    ) -> list[dict] | None:
+        """CHUNKS frames to send right after the UPLOAD control frame
+        (None: the data plane is shared, nothing rides the wire)."""
+        return None
+
+    # -- proxy -> app -----------------------------------------------------------
+    def on_chunks(self, msg: dict) -> None:
+        """A CHUNKS frame arrived ahead of SYNCED (streamed transport)."""
+        raise RuntimeError(
+            f"{self.kind} transport does not expect CHUNKS frames"
+        )
+
+    def read_state(self) -> Any:
+        return self.table.read_state()
+
+    # -- plumbing ---------------------------------------------------------------
+    def register_fields(self) -> dict:
+        """Transport fields for REGISTER (and the API log's register record)."""
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        return {
+            "transport": self.kind,
+            "wire_tx": self.wire_tx,
+            "wire_rx": self.wire_rx,
+            "raw_tx": self.raw_tx,
+            "raw_rx": self.raw_rx,
+            "data_plane_bytes": self.table.bytes_written,
+        }
+
+    def close(self, *, unlink: bool = False) -> None:
+        self.table.close(unlink=unlink)
+
+
+class SegmentChunkTransport(ChunkTransport):
+    """Local zero-copy transport over shared MAP_SHARED segments."""
+
+    kind = "segment"
+
+    def register_fields(self) -> dict:
+        return {
+            "transport": "segment",
+            "workdir": self.table.workdir,
+            "layout": self.table.layout,
+        }
+
+
+class StreamChunkTransport(ChunkTransport):
+    """Cross-host transport: payloads as CHUNKS frames on the connection."""
+
+    kind = "stream"
+
+    def __init__(self, table: StateTable, chunk_bytes: int, *,
+                 compress: bool | None = None):
+        super().__init__(table, chunk_bytes)
+        self.compress = compress
+
+    def payload_frames(
+        self, chunks: dict[str, list[int]] | None
+    ) -> list[dict]:
+        if chunks is None:
+            chunks = self.table.all_chunks(self.chunk_bytes)
+        frames, raw, wire = encode_chunk_frames(
+            self.table, chunks, self.chunk_bytes, compress=self.compress
+        )
+        self.raw_tx += raw
+        self.wire_tx += wire
+        return frames
+
+    def on_chunks(self, msg: dict) -> None:
+        raw, wire = apply_chunk_frame(self.table, msg, self.chunk_bytes)
+        self.raw_rx += raw
+        self.wire_rx += wire
+
+    def register_fields(self) -> dict:
+        return {"transport": "stream", "layout": self.table.layout}
+
+
+def make_transport(
+    kind: str,
+    state: Any,
+    chunk_bytes: int,
+    *,
+    workdir: str | None = None,
+    compress: bool | None = None,
+) -> ChunkTransport:
+    """Application-side factory: build the table from ``state`` and wrap it."""
+    if kind == "segment":
+        return SegmentChunkTransport(
+            SegmentTable.create(state, workdir=workdir), chunk_bytes
+        )
+    if kind == "stream":
+        return StreamChunkTransport(
+            PrivateTable.create(state, workdir=workdir),
+            chunk_bytes,
+            compress=compress,
+        )
+    raise ValueError(f"unknown transport {kind!r}; have {TRANSPORTS}")
+
+
+def default_log_dir(prefix: str = "crum-proxy-log-") -> str:
+    """A directory for the API log when no segment workdir exists (the
+    streamed transport has no files of its own)."""
+    return tempfile.mkdtemp(prefix=prefix)
+
+
+def endpoint_arg(value: str) -> tuple[str, int]:
+    """Parse a ``host:port`` CLI argument."""
+    host, _, port = value.rpartition(":")
+    if not host or not port.isdigit():
+        raise ValueError(f"expected host:port, got {value!r}")
+    return host, int(port)

@@ -45,6 +45,13 @@ class PagingStats:
     h2d_bytes: int = 0
     d2h_bytes: int = 0
     resident_high_water: int = 0  # peak resident bytes
+    # access-counter promotion (Volta-style): a cold read is served
+    # *remotely* (device reads host memory over the bus, no migration)
+    # until the page's access count within the window crosses the
+    # threshold — then it is promoted to a device frame
+    remote_reads: int = 0
+    remote_read_bytes: int = 0
+    promotions: int = 0         # migrations triggered by crossing the threshold
 
     @property
     def faults(self) -> int:
@@ -54,7 +61,8 @@ class PagingStats:
         d = {k: int(getattr(self, k)) for k in (
             "faults_read", "faults_write", "hits", "prefetches", "evictions",
             "writebacks", "invalidations", "h2d_bytes", "d2h_bytes",
-            "resident_high_water",
+            "resident_high_water", "remote_reads", "remote_read_bytes",
+            "promotions",
         )}
         d["faults"] = self.faults
         return d

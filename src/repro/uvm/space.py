@@ -70,10 +70,19 @@ class ManagedSpace:
         page_bytes: int = DEFAULT_PAGE_BYTES,
         eviction_policy: str = "lru",
         fault_window_pages: int = 32,
+        promote_threshold: int = 0,
+        promote_window: int = 0,
     ):
         self.device_capacity_bytes = int(device_capacity_bytes)
         self.page_bytes = int(page_bytes)
         self.policy_name = eviction_policy
+        # access-counter promotion (Volta-style): with threshold N > 1, a
+        # HOST page *read* is served remotely (no migration) until it has
+        # been read N times within ``promote_window`` ticks — only then is
+        # it promoted to a device frame. 0/1 = classic first-touch
+        # migration. Writes always migrate (write-allocate).
+        self.promote_threshold = int(promote_threshold)
+        self.promote_window = int(promote_window)
         self.arena = DeviceArena(self.device_capacity_bytes, self.page_bytes)
         self.pager = Pager(
             arena=self.arena,
@@ -107,6 +116,7 @@ class ManagedSpace:
             device_capacity_bytes=self.device_capacity_bytes,
             page_bytes=self.page_bytes,
             policy=self.policy_name,
+            promote_threshold=self.promote_threshold,
             resident_bytes=self.device_bytes_resident(),
             total_bytes=self.total_bytes(),
         )
@@ -156,19 +166,58 @@ class ManagedSpace:
         for w_lo in range(lo_page, hi_page, self.fault_window):
             yield w_lo, min(hi_page, w_lo + self.fault_window)
 
+    def _split_promotion(
+        self, table: PageTable, pages: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(migrate, remote) page split under the promotion threshold.
+
+        Resident pages always go to ``migrate`` (they're hits); HOST pages
+        whose windowed access count is still below the threshold are served
+        remotely — the count advances here, so the Nth read promotes.
+        """
+        host = table.residency[pages] == Residency.HOST
+        if not host.any():
+            return pages, pages[:0]
+        cold = pages[host]
+        if self.promote_window:
+            stale = self._tick - table.access_tick[cold] > self.promote_window
+            table.access_count[cold[stale]] = 0
+        # counting THIS access: crossing the threshold promotes now
+        promote = table.access_count[cold] + 1 >= self.promote_threshold
+        remote = cold[~promote]
+        table.access_count[remote] += 1
+        table.access_tick[remote] = self._tick
+        self.pager.stats.promotions += int(promote.sum())
+        return np.concatenate([pages[~host], cold[promote]]), remote
+
     def read_range(self, path: str, lo: int, hi: int) -> np.ndarray:
-        """Device read of byte range [lo, hi): fault in, return the bytes."""
+        """Device read of byte range [lo, hi): fault in, return the bytes.
+
+        With ``promote_threshold`` > 1, cold (HOST) pages below the
+        threshold are read *remotely* — bytes served from host backing
+        with no migration, the Volta access-counter behaviour — so a
+        once-touched page never costs a frame or an eviction.
+        """
         region = self._regions[path]
         table = region.table
         out = np.empty(hi - lo, np.uint8)
         p_lo, p_hi = table.pages_for_range(lo, hi)
         read_mostly = bool(table.advice & Advice.READ_MOSTLY)
+        if self.promote_threshold > 1:
+            # access epoch: promotion windows are tick-based, so reads
+            # must advance the clock (writes already do)
+            self._tick += 1
         for w_lo, w_hi in self._windows(p_lo, p_hi):
             pages = np.arange(w_lo, w_hi)
-            self.pager.fault_in(
-                table, pages, write=False, tick=self._tick,
-                pin=True, read_mostly=read_mostly,
-            )
+            if self.promote_threshold > 1:
+                pages, remote = self._split_promotion(table, pages)
+            else:
+                remote = pages[:0]
+            if pages.size:
+                self.pager.fault_in(
+                    table, pages, write=False, tick=self._tick,
+                    pin=True, read_mostly=read_mostly,
+                )
             for p in pages:
                 s_lo, s_hi = table.page_span(int(p))
                 c_lo, c_hi = max(s_lo, lo), min(s_hi, hi)
@@ -177,6 +226,13 @@ class ManagedSpace:
                     out[c_lo - lo : c_hi - lo] = self.arena.frames[
                         fid, c_lo - s_lo : c_hi - s_lo
                     ]
+            for p in remote:
+                s_lo, s_hi = table.page_span(int(p))
+                c_lo, c_hi = max(s_lo, lo), min(s_hi, hi)
+                if c_lo < c_hi:
+                    out[c_lo - lo : c_hi - lo] = region.host[c_lo:c_hi]
+                    self.pager.stats.remote_reads += 1
+                    self.pager.stats.remote_read_bytes += c_hi - c_lo
             self.pager.unpin_all()
         return out
 

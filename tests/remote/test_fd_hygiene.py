@@ -1,0 +1,96 @@
+"""Resource hygiene on the reconnect path (``remote`` marker): every
+ProxyDiedError branch closes its socket, so >= 20 kill/respawn cycles
+leak no file descriptors in the application process."""
+import os
+
+import pytest
+
+from repro.proxy import ProxyRunner
+
+pytestmark = pytest.mark.remote
+
+SPEC = {"name": "numpy_sgd", "rows": 4, "width": 16, "seed": 0}
+CYCLES = 22
+
+
+def _open_fds() -> int:
+    return len(os.listdir("/proc/self/fd"))
+
+
+@pytest.mark.skipif(not os.path.isdir("/proc/self/fd"),
+                    reason="needs /proc (Linux)")
+@pytest.mark.parametrize("transport", ["segment", "stream"])
+def test_no_fd_leak_across_kill_respawn_cycles(transport):
+    r = ProxyRunner(
+        SPEC, chunk_bytes=1 << 10, transport=transport,
+        max_restarts=CYCLES + 2, respawn_backoff_s=0.0,
+    )
+    r.start()
+    try:
+        step = 0
+        for _ in range(3):  # settle allocations (mp plumbing, buffers)
+            step += 1
+            r.step(step)
+        r.sync_state()
+        before = _open_fds()
+        for _ in range(CYCLES):
+            r.kill()
+            step += 1
+            r.step(step)      # detects death -> respawn + replay
+            r.sync_state()
+        after = _open_fds()
+        assert r.restarts == CYCLES
+        # a couple of fds of jitter are tolerated (GC timing); a leak of
+        # one fd per cycle would show up as >= CYCLES
+        assert after - before <= 4, (
+            f"fd leak across {CYCLES} cycles: {before} -> {after}"
+        )
+    finally:
+        r.close()
+
+
+def test_recover_backoff_is_jittered(monkeypatch):
+    """A respawn attempt that itself fails is retried after a *random*,
+    exponentially widening backoff — never a fixed hammer interval."""
+    from repro.remote.host import ProxyHostHandle
+    import repro.proxy.supervisor as sup_mod
+
+    windows = []
+    monkeypatch.setattr(
+        sup_mod.random, "uniform",
+        lambda a, b: windows.append((a, b)) or 0.0,
+    )
+
+    daemons = [ProxyHostHandle(f"b-ph{i}").start() for i in range(2)]
+    # after the first death: two DEAD endpoints, then the live survivor —
+    # recovery attempts 1 and 2 fail, attempt 3 lands
+    replacements = [("127.0.0.1", 1), ("127.0.0.1", 1), daemons[1].addr]
+    current = [daemons[0].addr]
+
+    def provider(failed=False):
+        if failed:
+            current[0] = replacements.pop(0)
+        return current[0]
+
+    r = ProxyRunner(
+        SPEC, chunk_bytes=1 << 10, transport="stream", max_restarts=6,
+        endpoint_provider=provider, respawn_backoff_s=0.05,
+    )
+    r.start()
+    try:
+        r.step(1)
+        r.sync_state()
+        daemons[0].kill()
+        r.step(2)       # death detected -> recover through the dead pair
+        _, info = r.sync_state()
+        assert info["step"] == 2
+        assert r.restarts == 3  # one per attempt (two dead + the landing)
+        # backoff windows: full jitter from 0, cap widening per attempt
+        assert len(windows) == 2  # attempt 0 never sleeps
+        assert all(a == 0.0 for a, _ in windows)
+        caps = [b for _, b in windows]
+        assert caps == sorted(caps) and caps[0] < caps[-1]
+    finally:
+        r.close()
+        for d in daemons:
+            d.terminate()

@@ -1,0 +1,155 @@
+"""Placement: the map's assignment policy + the coordinator handshake."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.coord.coordinator import Coordinator
+from repro.coord.protocol import MSG_FINISHED, MSG_JOIN, MSG_WELCOME, connect
+from repro.remote.placement import (
+    PlacementMap,
+    register_proxy_endpoint,
+    request_proxy_endpoint,
+)
+
+
+# -- PlacementMap ---------------------------------------------------------------
+
+def test_assign_sticky_and_least_loaded():
+    pm = PlacementMap()
+    pm.register("a", "127.0.0.1", 1)
+    pm.register("b", "127.0.0.1", 2)
+    e0 = pm.assign(0)
+    e1 = pm.assign(1)
+    assert {e0.name, e1.name} == {"a", "b"}  # spread, not piled
+    assert pm.assign(0).name == e0.name      # sticky
+    e2 = pm.assign(2)
+    assert pm.loads()[e2.name] <= 2
+
+
+def test_dead_endpoint_reassigns_to_survivor():
+    pm = PlacementMap()
+    pm.register("a", "127.0.0.1", 1)
+    pm.register("b", "127.0.0.1", 2)
+    first = pm.assign(0)
+    pm.report_dead(first.name)
+    second = pm.assign(0)
+    assert second.name != first.name
+    assert [w for w, _ in pm.history] == [0, 0]  # the audit trail
+
+
+def test_exclude_and_exhaustion():
+    pm = PlacementMap()
+    pm.register("a", "127.0.0.1", 1)
+    assert pm.assign(0, exclude=("a",)) is None
+    # dead-marked endpoints are offered as a LAST resort ("dead" can be a
+    # transient verdict; trying beats failing the worker outright) —
+    # None only when everything is excluded
+    pm.report_dead("a")
+    assert pm.assign(1).name == "a"
+    assert pm.assign(1, exclude=("a",)) is None
+
+
+def test_dead_endpoint_revivable_by_reregistration():
+    pm = PlacementMap()
+    pm.register("a", "127.0.0.1", 1)
+    pm.report_dead("a")
+    pm.register("a", "127.0.0.1", 1)  # daemon came back
+    assert pm.endpoints["a"].alive
+
+
+# -- the coordinator handshake ---------------------------------------------------
+
+@pytest.fixture
+def live_coordinator(tmp_path):
+    """A Coordinator whose event loop is running (n_hosts=1); the fixture
+    tears it down by joining as that host and reporting FINISHED."""
+    coord = Coordinator(str(tmp_path / "root"), n_hosts=1).start()
+    err = []
+
+    def drive():
+        try:
+            coord.run(deadline_s=60.0)
+        except Exception as e:
+            err.append(e)
+
+    t = threading.Thread(target=drive, daemon=True)
+    t.start()
+    yield coord
+    conn = connect(coord.address)
+    conn.settimeout(1.0)
+    conn.send(MSG_JOIN, host=0, pid=1, restored_from=None)
+    while True:
+        msg = conn.recv()
+        if msg and msg.get("type") == MSG_WELCOME:
+            break
+    conn.send(MSG_FINISHED, host=0, step=0, digest="x")
+    t.join(timeout=30)
+    conn.close()
+    assert not err, err
+
+
+def test_register_acquire_dead_handshake(live_coordinator):
+    coord = live_coordinator
+    register_proxy_endpoint(coord.address, name="ph0", addr="127.0.0.1",
+                            port=7001)
+    register_proxy_endpoint(coord.address, name="ph1", addr="127.0.0.1",
+                            port=7002)
+    got = request_proxy_endpoint(coord.address, worker=0)
+    assert got is not None and got["name"] in ("ph0", "ph1")
+    # sticky across re-acquire
+    again = request_proxy_endpoint(coord.address, worker=0)
+    assert again["name"] == got["name"]
+    # death report reschedules onto the survivor
+    moved = request_proxy_endpoint(
+        coord.address, worker=0, failed=got["name"], exclude=(got["name"],)
+    )
+    assert moved is not None and moved["name"] != got["name"]
+    # all dead -> None (the worker surfaces budget exhaustion, not a hang)
+    none = request_proxy_endpoint(
+        coord.address, worker=0, failed=moved["name"],
+        exclude=(got["name"], moved["name"]),
+    )
+    assert none is None
+    # the journal recorded placements and the proxy-host death
+    events = [e["event"] for e in _read_log(coord.log_path)]
+    assert "proxy_endpoint" in events
+    assert "proxy_placement" in events
+    assert "proxy_host_death" in events
+
+
+def test_malformed_side_channel_frame_never_kills_the_cluster(
+    live_coordinator,
+):
+    """The side channel accepts arbitrary un-JOINed peers: a bad frame
+    gets an error reply; the event loop (and the cluster) survives."""
+    import socket as socket_mod
+    from repro.coord.protocol import MSG_PROXY_ENDPOINT
+
+    coord = live_coordinator
+    conn = connect(coord.address)
+    conn.settimeout(1.0)
+    try:
+        conn.send(MSG_PROXY_ENDPOINT, op="register", name="ghost")  # no port
+        while True:
+            try:
+                msg = conn.recv()
+                break
+            except (socket_mod.timeout, TimeoutError):
+                continue
+        assert msg["type"] == MSG_PROXY_ENDPOINT
+        assert "bad frame" in msg.get("error", "")
+    finally:
+        conn.close()
+    # the coordinator still serves well-formed requests afterwards
+    register_proxy_endpoint(coord.address, name="ok", addr="127.0.0.1",
+                            port=7009)
+    got = request_proxy_endpoint(coord.address, worker=5)
+    assert got is not None and got["name"] == "ok"
+
+
+def _read_log(path):
+    import json
+
+    with open(path) as f:
+        return [json.loads(line) for line in f]

@@ -1,0 +1,143 @@
+"""Cross-endpoint drills (``remote`` marker; dedicated CI job): SIGKILL a
+proxy-host daemon mid-run -> reschedule onto a survivor + API-log replay;
+the coordinator-placed cluster variant; elastic N->M cluster restarts."""
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.coord.supervisor import run_cluster
+from repro.proxy import ProxyRunner, make_program
+from repro.utils.tree import tree_digest, tree_equal
+
+pytestmark = pytest.mark.remote
+
+SPEC = {"name": "numpy_sgd", "rows": 8, "width": 32, "seed": 0}
+
+
+def _inline_run(n_steps, spec=SPEC):
+    prog = make_program(spec)
+    s = prog.init_state()
+    for step in range(1, n_steps + 1):
+        s, _ = prog.step(s, step)
+    return s
+
+
+def test_daemon_kill_reschedules_onto_survivor():
+    from repro.remote.host import ProxyHostHandle
+
+    daemons = [ProxyHostHandle(f"r-ph{i}").start() for i in range(2)]
+    order = list(daemons)
+    used = []
+
+    def provider(failed=False):
+        if failed:
+            order.pop(0)
+        used.append(order[0].name)
+        return order[0].addr
+
+    ref = _inline_run(12)
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10, transport="stream",
+                    endpoint_provider=provider, max_restarts=2)
+    r.start()
+    try:
+        for s in range(1, 7):
+            r.step(s)
+        r.sync_state()
+        daemons[0].kill()  # the HOST dies, not just the session
+        for s in range(7, 13):
+            r.step(s)
+        state, info = r.sync_state()
+        assert r.restarts == 1
+        assert used[0] != used[-1], "never moved endpoints"
+        assert info["step"] == 12
+        assert tree_equal(state, ref)
+        assert info["digest"] == tree_digest(ref)
+    finally:
+        r.close()
+        for d in daemons:
+            d.terminate()
+
+
+def test_cluster_proxy_host_kill_drill(tmp_path):
+    """The acceptance drill: a worker's proxy lives on a remote endpoint;
+    SIGKILL of that proxy host is survived — the coordinator reschedules
+    onto a survivor, the API log replays, and training state is
+    bit-identical to an unkilled run."""
+    report = run_cluster(
+        root=str(tmp_path / "cluster"), n_hosts=2, total_steps=6,
+        ckpt_every=2, backend="thread", loop="numpy",
+        device_runner="proxy", proxy_hosts=2, kill_proxy_host=0,
+        deadline_s=300.0,
+    )
+    assert report.lockstep()
+    assert report.latest_committed == 6
+    assert report.killed_proxy_hosts == ["ph0"]
+    # the audit trail shows at least one worker moving endpoints
+    by_worker = {}
+    for w, name in report.proxy_placements:
+        by_worker.setdefault(w, []).append(name)
+    moved = [w for w, names in by_worker.items() if len(set(names)) > 1]
+    assert moved, f"no reschedule in {report.proxy_placements}"
+
+    # bit-identical to an unkilled (local-proxy) run of the same config
+    ref = run_cluster(
+        root=str(tmp_path / "ref"), n_hosts=2, total_steps=6, ckpt_every=2,
+        backend="thread", loop="numpy", device_runner="proxy",
+        deadline_s=300.0,
+    )
+    assert ref.lockstep()
+    assert set(ref.final_digests.values()) == set(
+        report.final_digests.values()
+    )
+
+
+@pytest.mark.parametrize("n_new", [3, 6])
+def test_cluster_elastic_restart_4_hosts_onto(tmp_path, n_new):
+    """A committed 4-host checkpoint restores onto 3 and 6 hosts and the
+    continued run lands on the bit-identical final state."""
+    rows = max(4, n_new, 2) * 8  # state shape pinned across host counts
+    spec = dict(SPEC, rows=rows, width=64)
+    root = str(tmp_path / "cluster")
+    phase1 = run_cluster(
+        root=root, n_hosts=4, total_steps=2, ckpt_every=2,
+        backend="thread", loop="numpy", rows=rows, width=64,
+        deadline_s=300.0,
+    )
+    assert phase1.latest_committed == 2
+
+    phase2 = run_cluster(
+        root=root, n_hosts=n_new, total_steps=5, ckpt_every=2,
+        backend="thread", loop="numpy", rows=rows, width=64,
+        deadline_s=300.0,
+    )
+    assert phase2.lockstep()
+    assert phase2.latest_committed == 4
+    # every phase-2 worker restored from the 4-host image (the journal is
+    # shared across phases: phase-1 joins carry restored_from=None)
+    import json
+
+    with open(phase2.log_path) as f:
+        events = [json.loads(line) for line in f]
+    restored = {e["host"] for e in events
+                if e["event"] == "join" and e.get("restored_from") == 2}
+    assert restored == set(range(n_new))
+    # bit-identical to the same program run uninterrupted
+    ref = _inline_run(5, spec)
+    assert set(phase2.final_digests.values()) == {tree_digest(ref)}
+
+
+def test_cluster_remote_proxies_happy_path(tmp_path):
+    """No drill: coordinator-placed remote proxies just work, and the
+    placement spreads workers across daemons."""
+    report = run_cluster(
+        root=str(tmp_path / "cluster"), n_hosts=2, total_steps=4,
+        ckpt_every=2, backend="thread", loop="numpy",
+        device_runner="proxy", proxy_hosts=2, deadline_s=300.0,
+    )
+    assert report.lockstep()
+    assert report.latest_committed == 4
+    assert report.aborted == []
+    names = {name for _, name in report.proxy_placements}
+    assert names == {"ph0", "ph1"}  # least-loaded spread, one each

@@ -1,0 +1,160 @@
+"""ChunkTransport unit + parity tests (the cheap, tier-1 half of the
+remote subsystem; the daemon kill/reschedule drills are ``remote``-marked
+in test_reschedule.py)."""
+import numpy as np
+import pytest
+
+from repro.proxy.segments import PrivateTable, SegmentTable
+from repro.remote.transport import (
+    FRAME_PAYLOAD_BYTES,
+    apply_chunk_frame,
+    encode_chunk_frames,
+    endpoint_arg,
+    make_proxy_table,
+    make_transport,
+)
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((64, 16)).astype(np.float32),
+        "b": rng.standard_normal((16,)).astype(np.float32),
+    }
+
+
+CB = 1 << 8
+
+
+def test_frame_roundtrip_private_tables():
+    state = _state()
+    src = PrivateTable.create(state)
+    dst = PrivateTable.attach(src.layout)
+    frames, raw, wire = encode_chunk_frames(src, src.all_chunks(CB), CB)
+    assert raw == src.total_bytes()
+    for f in frames:
+        apply_chunk_frame(dst, {"type": "CHUNKS", **f}, CB)
+    got = PrivateTable.attach(src.layout)
+    got._buffers = dst._buffers
+    got._treedef = src._treedef
+    for path in src.layout:
+        np.testing.assert_array_equal(dst.view(path), src.view(path))
+
+
+def test_delta_frames_carry_only_named_chunks():
+    state = _state()
+    src = PrivateTable.create(state)
+    dst = PrivateTable.attach(src.layout)
+    # copy everything first, then mutate one chunk and send only it
+    for f in encode_chunk_frames(src, src.all_chunks(CB), CB)[0]:
+        apply_chunk_frame(dst, f, CB)
+    w = np.asarray(state["w"]).copy()
+    w.reshape(-1)[0] = 123.0
+    src.write_state(dict(state, w=w))
+    frames, raw, wire = encode_chunk_frames(src, {"w": [0]}, CB)
+    assert raw == CB  # exactly one chunk's bytes
+    for f in frames:
+        apply_chunk_frame(dst, f, CB)
+    np.testing.assert_array_equal(dst.view("w"), src.view("w"))
+    np.testing.assert_array_equal(dst.view("b"), src.view("b"))
+
+
+def test_frames_batch_under_payload_target():
+    big = {"w": np.zeros(3 * FRAME_PAYLOAD_BYTES, np.uint8)}
+    t = PrivateTable.create(big)
+    cb = 1 << 16
+    frames, raw, _ = encode_chunk_frames(t, t.all_chunks(cb), cb,
+                                         compress=False)
+    assert raw == 3 * FRAME_PAYLOAD_BYTES
+    assert len(frames) >= 3
+    for f in frames:
+        assert len(f["data"]) <= FRAME_PAYLOAD_BYTES + cb
+        assert sum(n for _, _, n in f["items"]) == len(f["data"])
+
+
+def test_zstd_per_frame_when_available():
+    zstd = pytest.importorskip("zstandard")
+    # compressible content: zeros
+    t = PrivateTable.create({"w": np.zeros(4 * CB, np.uint8)})
+    frames, raw, wire = encode_chunk_frames(t, t.all_chunks(CB), CB,
+                                            compress=True)
+    assert wire < raw
+    assert all(f["codec"] == "zstd" for f in frames)
+    dst = PrivateTable.attach(t.layout)
+    for f in frames:
+        apply_chunk_frame(dst, f, CB)
+    np.testing.assert_array_equal(dst.view("w"), t.view("w"))
+
+
+def test_incompressible_frames_fall_back_to_raw():
+    rng = np.random.default_rng(3)
+    t = PrivateTable.create({"w": rng.integers(0, 256, 4 * CB).astype(np.uint8)})
+    frames, raw, wire = encode_chunk_frames(t, t.all_chunks(CB), CB)
+    # whether or not zstd exists, raw payload must never be inflated
+    assert wire <= raw
+
+
+def test_apply_frame_length_mismatch_rejected():
+    t = PrivateTable.create({"w": np.zeros(2 * CB, np.uint8)})
+    with pytest.raises(ValueError, match="items claim"):
+        apply_chunk_frame(
+            t, {"codec": "raw", "items": [["w", 0, CB]], "data": b"x" * (CB + 1)},
+            CB,
+        )
+
+
+def test_write_range_bounds_checked():
+    t = PrivateTable.create({"w": np.zeros(CB, np.uint8)})
+    with pytest.raises(ValueError, match="outside leaf"):
+        t.write_range("w", CB - 1, b"xx")
+    with pytest.raises(KeyError):
+        t.write_range("nope", 0, b"x")
+
+
+def test_stream_transport_sync_ingest():
+    state = _state()
+    app = make_transport("stream", state, CB)
+    # proxy side mutates, encodes changed chunks, app ingests via on_chunks
+    proxy_table = make_proxy_table({"transport": "stream",
+                                    "layout": app.table.layout})
+    for f in encode_chunk_frames(app.table, app.table.all_chunks(CB), CB)[0]:
+        apply_chunk_frame(proxy_table, f, CB)
+    w = np.asarray(state["w"]).copy()
+    w.reshape(-1)[7] = 42.0
+    proxy_table.write_state(dict(state, w=w))
+    frames, _, _ = encode_chunk_frames(proxy_table, {"w": [0]}, CB)
+    for f in frames:
+        app.on_chunks({"type": "CHUNKS", **f})
+    got = app.read_state()
+    np.testing.assert_array_equal(got["w"], w)
+    assert app.wire_rx > 0
+
+
+def test_segment_transport_rejects_chunks_frames():
+    app = make_transport("segment", _state(), CB)
+    try:
+        with pytest.raises(RuntimeError, match="does not expect"):
+            app.on_chunks({"codec": "raw", "items": [], "data": b""})
+    finally:
+        app.close(unlink=True)
+
+
+def test_make_proxy_table_kinds(tmp_path):
+    state = _state()
+    seg = SegmentTable.create(state, workdir=str(tmp_path))
+    t = make_proxy_table({"workdir": str(tmp_path), "layout": seg.layout})
+    assert isinstance(t, SegmentTable)
+    np.testing.assert_array_equal(t.view("w"), seg.view("w"))
+    t2 = make_proxy_table({"transport": "stream", "layout": seg.layout})
+    assert isinstance(t2, PrivateTable)
+    with pytest.raises(ValueError, match="unknown transport"):
+        make_proxy_table({"transport": "carrier-pigeon", "layout": {}})
+    seg.close(unlink=True)
+
+
+def test_endpoint_arg():
+    assert endpoint_arg("10.0.0.2:7070") == ("10.0.0.2", 7070)
+    with pytest.raises(ValueError):
+        endpoint_arg("7070")
+    with pytest.raises(ValueError):
+        endpoint_arg("host:")

@@ -1,0 +1,99 @@
+"""Access-counter-driven promotion (Volta-style): a HOST page is promoted
+to a device frame only after N reads within a window; colder reads are
+served remotely (no migration, no frame pressure)."""
+import numpy as np
+
+from repro.uvm import ManagedSpace
+
+PAGE = 256
+
+
+def _space(threshold, window=0, n_pages=8, cap_pages=8):
+    state = {
+        "w": np.arange(n_pages * PAGE, dtype=np.uint8),
+        "other": np.zeros(2 * PAGE, np.uint8),
+    }
+    sp = ManagedSpace(
+        cap_pages * PAGE, page_bytes=PAGE,
+        promote_threshold=threshold, promote_window=window,
+    )
+    sp.register(state)
+    return sp, state
+
+
+def test_cold_reads_stay_host_until_threshold():
+    sp, state = _space(threshold=3)
+    for i in range(1, 3):
+        out = sp.read_leaf("w")
+        np.testing.assert_array_equal(out, state["w"])  # remote reads serve
+        assert sp.device_bytes_resident() == 0, f"read {i} migrated early"
+        assert sp.stats.promotions == 0
+    assert sp.stats.remote_reads == 2 * 8
+    assert sp.stats.remote_read_bytes == 2 * 8 * PAGE
+    # the third read crosses the threshold: every page promotes
+    out = sp.read_leaf("w")
+    np.testing.assert_array_equal(out, state["w"])
+    assert sp.stats.promotions == 8
+    assert sp.device_bytes_resident() == 8 * PAGE
+    # promoted pages are ordinary resident pages now: further reads hit
+    hits_before = sp.stats.hits
+    sp.read_leaf("w")
+    assert sp.stats.hits == hits_before + 8
+    sp.check_invariants()
+
+
+def test_threshold_zero_is_first_touch_migration():
+    sp, state = _space(threshold=0)
+    sp.read_leaf("w")
+    assert sp.stats.remote_reads == 0
+    assert sp.stats.faults_read == 8
+    assert sp.device_bytes_resident() == 8 * PAGE
+
+
+def test_writes_always_migrate_write_allocate():
+    sp, _ = _space(threshold=5)
+    sp.write_range("w", 0, np.ones(PAGE, np.uint8))
+    assert sp.device_bytes_resident() == PAGE  # no remote-write path
+    assert sp.stats.remote_reads == 0
+    assert bool(sp.table("w").wb_dirty[0])
+    sp.check_invariants()
+
+
+def test_window_expiry_resets_the_count():
+    # threshold 2, window 1 tick: two back-to-back reads promote...
+    sp, _ = _space(threshold=2, window=1)
+    sp.read_leaf("w")
+    sp.read_leaf("w")
+    assert sp.stats.promotions == 8
+
+    # ...but a stale first read (window expired) does NOT count toward
+    # the second: reads separated by > window ticks stay remote
+    sp2, _ = _space(threshold=2, window=1)
+    sp2.read_leaf("w")
+    for _ in range(3):  # other-region reads advance the access clock
+        sp2.read_leaf("other")
+    sp2.read_leaf("w")  # 4 ticks later: counter restarted, still remote
+    assert sp2.stats.promotions == 2  # only 'other' (2 pages, 2nd read)
+    assert sp2.device_bytes_resident() == 2 * PAGE  # only 'other'
+    assert sp2.table("w").residency.max() == 0  # w fully HOST
+
+
+def test_promoted_content_correct_after_mixed_access():
+    sp, state = _space(threshold=2)
+    sp.read_leaf("w")                      # remote
+    sp.write_range("w", 3 * PAGE, np.full(PAGE, 7, np.uint8))  # migrates p3
+    out = sp.read_leaf("w")                # promotes the rest
+    want = state["w"].copy()
+    want[3 * PAGE : 4 * PAGE] = 7
+    np.testing.assert_array_equal(out, want)
+    np.testing.assert_array_equal(sp.peek_leaf("w"), want)
+    sp.check_invariants()
+
+
+def test_stats_dict_reports_promotion_fields():
+    sp, _ = _space(threshold=3)
+    sp.read_leaf("w")
+    d = sp.stats_dict()
+    assert d["promote_threshold"] == 3
+    assert d["remote_reads"] == 8
+    assert d["promotions"] == 0
