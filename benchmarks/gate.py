@@ -1,0 +1,116 @@
+"""Overhead-envelope gate — the CI teeth for the hot-path pipeline.
+
+Reads a ``benchmarks.run --json`` dump (or runs the proxy benchmark
+itself) and FAILS when the pipelined proxy falls out of the paper's
+overhead envelope or the pipeline refactor's wins regress:
+
+  1. proxied overhead (kernel-ish regime, pipelined): within the paper's
+     ~6% average envelope, times a tolerance factor for CI-runner jitter
+     (default 2.0 -> 12%, the paper's own worst case).
+  2. pipelined epoch-sync stall <= half the blocking barrier's stall
+     (both regimes) — the overlap must actually overlap.
+  3. fused digesting removes the boundary digest scan entirely.
+  4. kill-replay (including with an epoch SYNC in flight) restores
+     bit-identically.
+
+    PYTHONPATH=src python -m benchmarks.gate --json BENCH_results.json
+    PYTHONPATH=src python -m benchmarks.gate            # run + gate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PAPER_ENVELOPE_PCT = 6.0
+STALL_RATIO_MAX = 0.5
+
+
+def _load_rows(path: str | None) -> list[dict]:
+    if path is not None:
+        with open(path) as f:
+            doc = json.load(f)
+        return doc["rows"] if isinstance(doc, dict) else doc
+    from benchmarks import proxy_overhead
+    from benchmarks.common import ROWS
+
+    proxy_overhead.run()
+    return ROWS
+
+
+def _by_name(rows: list[dict]) -> dict[str, dict]:
+    return {r["name"]: r for r in rows}
+
+
+def check(rows: list[dict], *, tolerance: float = 2.0) -> list[str]:
+    """Returns the list of violations (empty = gate passes)."""
+    named = _by_name(rows)
+    bad: list[str] = []
+
+    def need(name: str) -> dict | None:
+        r = named.get(name)
+        if r is None:
+            bad.append(f"missing benchmark row {name!r}")
+        return r
+
+    # 1. paper envelope, kernel-ish regime (the regime the paper measures:
+    #    real kernels, not bare control-plane framing)
+    r = need("fig4_proxy_overhead_pipelined_kernelish_2ms_step")
+    if r is not None:
+        limit = PAPER_ENVELOPE_PCT * tolerance
+        if float(r["overhead_pct"]) > limit:
+            bad.append(
+                f"pipelined proxy overhead {r['overhead_pct']}% exceeds "
+                f"the paper envelope {PAPER_ENVELOPE_PCT}% x{tolerance} = "
+                f"{limit}%"
+            )
+
+    # 2. the overlap win: epoch sync stalls <= 50% of the blocking barrier
+    for regime in ("stress_60us_step", "kernelish_2ms_step"):
+        r = need(f"pipeline_sync_stall_epoch_{regime}")
+        if r is not None and float(r["stall_ratio"]) > STALL_RATIO_MAX:
+            bad.append(
+                f"epoch sync stall ratio {r['stall_ratio']} ({regime}) "
+                f"exceeds {STALL_RATIO_MAX} — the pipelined sync is not "
+                f"overlapping"
+            )
+
+    # 3. fused digesting: no boundary scan left
+    r = need("fused_digest_boundary_fused")
+    if r is not None and not r.get("boundary_scan_gone"):
+        bad.append(
+            f"fused digest boundary still scans (digest_us="
+            f"{r.get('digest_us')})"
+        )
+
+    # 4. recovery correctness is not a perf number — it is a hard gate
+    r = need("proxy_kill_replay_recovery")
+    if r is not None and not r.get("bit_identical"):
+        bad.append("kill-replay recovery was not bit-identical")
+    r = need("proxy_kill_replay_inflight_epoch")
+    if r is not None and not r.get("boundary_bit_identical"):
+        bad.append(
+            "kill with an in-flight epoch sync lost the boundary image"
+        )
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="gate an existing benchmarks.run --json dump "
+                         "instead of running the proxy benchmark")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="multiplier on the paper's 6%% envelope "
+                         "(default 2.0 -> 12%%, the paper's worst case)")
+    args = ap.parse_args(argv)
+    violations = check(_load_rows(args.json), tolerance=args.tolerance)
+    for v in violations:
+        print(f"[gate] FAIL: {v}", file=sys.stderr)
+    if not violations:
+        print("[gate] overhead envelope + pipeline wins: OK")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

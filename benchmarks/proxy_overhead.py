@@ -14,6 +14,17 @@ runner: per-step wall time executing the step program
 Second measurement: SIGKILL the proxy mid-training and time the supervised
 recovery (respawn + API-log replay + segment re-push) until training has
 caught back up to the kill point with a verified bit-identical digest.
+
+Third measurement (the hot-path pipeline refactor): what the app actually
+*stalls* at a sync boundary — the legacy blocking barrier (issue SYNC,
+wait for SYNCED) vs the pipelined epoch sync (issue SYNC{epoch}, keep
+stepping, collect the ack at the next boundary). The epoch path's stall
+must be a fraction of the barrier's, because the boundary work overlaps
+the next window's steps. Plus fused digesting: the step program emits
+chunk digests as part of each step, so the boundary's digest scan
+disappears (phase_us.digest -> 0). And the kill drill with an epoch SYNC
+in flight: replay must re-issue it and the collected boundary image must
+stay bit-identical.
 """
 from __future__ import annotations
 
@@ -65,6 +76,65 @@ def _proxied_per_step(spec, *, flush_every_step: bool) -> float:
     return t
 
 
+def _sync_stall(spec, *, pipelined: bool, app_work_s: float) -> tuple[float, float]:
+    """(median, mean) seconds the app is BLOCKED per sync boundary.
+
+    The app is *paced*: it spends ``app_work_s`` of its own time per step
+    (input pipeline, metrics, host-side bookkeeping — what a real train
+    loop does between submits), so the proxy keeps pace instead of
+    accumulating an unbounded backlog. Blocking mode then stalls for the
+    boundary's drain+digest+fetch+ack; pipelined mode issues the epoch
+    SYNC and pays only whatever of that work is left when the *next*
+    boundary collects the ack — the overlap the refactor buys."""
+    r = ProxyRunner(spec, chunk_bytes=1 << 18)
+    r.start()
+    step = 0
+    stalls: list[float] = []
+    windows = 6
+    pending = None
+
+    def app_window():
+        nonlocal step, pending
+        for _ in range(WINDOW):
+            step += 1
+            r.step(step)
+            if app_work_s:
+                time.sleep(app_work_s)
+            if pending is not None:
+                # opportunistic poll between steps — exactly what the
+                # trainer's pipelined loop does; a landed ack costs 0 stall
+                if r.sync_poll(pending) is not None:
+                    pending = None
+
+    # warmup window (first sync pays first-copy costs either way)
+    app_window()
+    r.sync_state()
+    if pipelined:
+        pending = r.sync_begin()  # every measured window collects an epoch
+    for _ in range(windows):
+        app_window()
+        if pipelined:
+            stall = 0.0
+            if pending is not None:
+                _, info = r.sync_collect(pending)
+                stall = info["stall_us"] / 1e6
+            stalls.append(stall)
+            pending = r.sync_begin()
+        else:
+            t0 = time.perf_counter()
+            r.sync_state()
+            stalls.append(time.perf_counter() - t0)
+    if pending is not None:
+        r.sync_collect(pending)
+    r.close()
+    # median boundary stall: an occasional window where the ack lands at
+    # the boundary itself (and the collect waits behind a queued step or
+    # two) is real but not the typical cost a train loop pays — the mean
+    # rides along so the spike tail stays visible
+    stalls.sort()
+    return stalls[len(stalls) // 2], sum(stalls) / len(stalls)
+
+
 def run() -> None:
     for regime, step_time_s in REGIMES.items():
         spec = dict(SPEC, step_time_s=step_time_s)
@@ -82,6 +152,58 @@ def run() -> None:
                 within_paper_envelope=bool(ov <= 12.0),
                 paper_claim="6% avg / 12% worst (proxied CUDA calls)",
             )
+
+    # -- sync-boundary stall: blocking barrier vs pipelined epoch -----------
+    for regime, step_time_s in REGIMES.items():
+        spec = dict(SPEC, step_time_s=step_time_s)
+        # the app's own per-step time: a hair over the proxy's, so the
+        # pipeline stays drained and the boundary stall isolates sync work
+        app_work_s = step_time_s + 300e-6
+        blk_med, blk_mean = _sync_stall(
+            spec, pipelined=False, app_work_s=app_work_s
+        )
+        ep_med, ep_mean = _sync_stall(
+            spec, pipelined=True, app_work_s=app_work_s
+        )
+        ratio = ep_med / blk_med if blk_med > 0 else 0.0
+        row(
+            f"pipeline_sync_stall_blocking_{regime}",
+            blk_med * 1e6,
+            mean_us=round(blk_mean * 1e6, 1),
+            sync_window=WINDOW,
+        )
+        row(
+            f"pipeline_sync_stall_epoch_{regime}",
+            ep_med * 1e6,
+            mean_us=round(ep_mean * 1e6, 1),
+            sync_window=WINDOW,
+            stall_ratio=round(ratio, 3),
+            overlap_win=bool(ratio <= 0.5),
+        )
+
+    # -- fused digesting: the boundary scan disappears ----------------------
+    for fused in (False, True):
+        spec = dict(SPEC, step_time_s=0.0)
+        r = ProxyRunner(spec, chunk_bytes=1 << 18, fused_digests=fused)
+        r.start()
+        step = 0
+        digest_us = sync_us = 0.0
+        iters = 4
+        for _ in range(iters):
+            for _ in range(WINDOW):
+                step += 1
+                r.step(step)
+            _, info = r.sync_state()
+            phase = info.get("phase_us", {})
+            digest_us += float(phase.get("digest", 0.0))
+            sync_us += float(phase.get("sync", 0.0))
+        r.close()
+        row(
+            f"fused_digest_boundary_{'fused' if fused else 'scan'}",
+            sync_us / iters,
+            digest_us=round(digest_us / iters, 1),
+            boundary_scan_gone=bool(fused and digest_us == 0.0),
+        )
 
     # -- kill-replay recovery latency ---------------------------------------
     prog = make_program(SPEC)
@@ -111,6 +233,34 @@ def run() -> None:
         replayed_steps=rec.get("replayed_steps", 0),
         restarts=r.restarts,
         bit_identical=bool(info2["digest"] == ref_digest),
+    )
+    r.close()
+
+    # -- kill with an epoch SYNC in flight ----------------------------------
+    prog = make_program(SPEC)
+    boundary_ref = prog.init_state()
+    for s in range(1, kill_at + 1):
+        boundary_ref, _ = prog.step(boundary_ref, s)
+    boundary_digest = tree_digest(boundary_ref)
+
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 18)
+    r.start()
+    for s in range(1, kill_at + 1):
+        r.step(s)
+    epoch = r.sync_begin()
+    r.kill()  # SIGKILL with the epoch SYNC un-acked
+    t0 = time.perf_counter()
+    for s in range(kill_at + 1, end + 1):
+        r.step(s)  # death detected -> respawn + replay (re-issues the SYNC)
+    _, einfo = r.sync_collect(epoch)
+    recovery = time.perf_counter() - t0
+    row(
+        "proxy_kill_replay_inflight_epoch",
+        recovery * 1e6,
+        recovery_ms=round(recovery * 1e3, 1),
+        restarts=r.restarts,
+        boundary_step=einfo["step"],
+        boundary_bit_identical=bool(einfo["digest"] == boundary_digest),
     )
     r.close()
 

@@ -13,8 +13,10 @@ it as the ``BENCH_results.json`` artifact.
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import platform
+import subprocess
 import sys
 
 from benchmarks import ckpt_restart, coord_commit, incremental, overhead, roofline
@@ -34,6 +36,17 @@ ALL = {
     "remote_proxy": remote_proxy.run,            # cross-host transport + reschedule
     "roofline": roofline.run,                    # §Roofline emitter
 }
+
+
+def _git_rev() -> str | None:
+    """The commit the numbers belong to (None outside a git checkout)."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, check=True, timeout=10,
+        ).stdout.strip()
+    except Exception:
+        return None
 
 
 def main(argv=None) -> int:
@@ -62,6 +75,9 @@ def main(argv=None) -> int:
             "schema": "crum-bench-rows/1",
             "python": platform.python_version(),
             "platform": platform.platform(),
+            "git_rev": _git_rev(),
+            "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                .isoformat(timespec="seconds"),
             "benchmarks": names,
             "failed": failures,
             "rows": ROWS,

@@ -204,11 +204,62 @@ def bench_ckpt_blocking_envelope() -> None:
     )
 
 
+def bench_fused_digest_boundary() -> None:
+    """Fused digests compose with paged dirty marks: a checkpoint boundary
+    handed ``device_digests`` (the step's own fused final pass) must beat
+    the same boundary running the separate digest scan — digest_us drops
+    to 0 while the paged delta (chunks_synced ~ pages dirtied) stays
+    identical."""
+    from repro.kernels.ops import tree_chunk_digests
+
+    chunk_bytes = 32 << 10
+    patch = np.ones(16, np.float32)
+    results = {}
+    for fused in (False, True):
+        state = {"device": _state(), "host": {"step": np.int64(0)}}
+        sp = ManagedSpace(_total_bytes(state["device"]), page_bytes=PAGE)
+        sp.register(state["device"])
+        with tempfile.TemporaryDirectory() as root:
+            ck = ForkedCheckpointer(
+                ChunkStore(root),
+                chunk_bytes=chunk_bytes,
+                dirty_source=sp.as_dirty_source("device/"),
+            )
+            state["device"] = sp.peek_state()
+            ck.save_async(0, state).wait()  # base image
+            iters = 4
+            sync_us = digest_us = 0.0
+            chunks = 0
+            for step in range(1, iters + 1):
+                for p in range(8):
+                    sp.write_range("layer0", p * PAGE, patch)
+                state["device"] = sp.peek_state()
+                state["host"]["step"] = np.int64(step)
+                dd = (
+                    tree_chunk_digests(state, chunk_bytes) if fused else None
+                )
+                r = ck.save_async(step, state, device_digests=dd).wait()
+                sync_us += r.sync_us
+                digest_us += r.digest_us
+                chunks += r.chunks_synced
+            ck.close()
+        results[fused] = (sync_us / iters, digest_us / iters, chunks)
+    for fused, (sync_us, digest_us, chunks) in results.items():
+        row(
+            f"uvm_fused_digest_{'fused' if fused else 'scan'}",
+            sync_us,
+            digest_us=round(digest_us, 1),
+            chunks_synced=chunks,
+            boundary_scan_gone=bool(fused and digest_us == 0.0),
+        )
+
+
 def run() -> None:
     bench_step_overhead()
     bench_eviction_policy()
     bench_ckpt_delta()
     bench_ckpt_blocking_envelope()
+    bench_fused_digest_boundary()
 
 
 if __name__ == "__main__":

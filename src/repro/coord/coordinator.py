@@ -78,6 +78,13 @@ class RoundRecord:
     chunks_synced: int = 0        # chunks fetched device->host this round
     chunks_clean: int = 0         # chunks proven (or known) unchanged
     bytes_skipped: int = 0        # bytes the clean chunks did not move
+    # phase-1 breakdown summed over participants (microseconds): how the
+    # blocking window split between shadow sync, digesting (0 when fused
+    # digests covered the boundary), fetching, and pipelined-sync stall
+    sync_us: float = 0.0
+    digest_us: float = 0.0
+    fetch_us: float = 0.0
+    stall_us: float = 0.0
 
 
 @dataclass
@@ -401,6 +408,10 @@ class Coordinator:
         rec.bytes_skipped = sum(
             int(m.get("bytes_skipped", 0)) for m in r.acks.values()
         )
+        for phase in ("sync_us", "digest_us", "fetch_us", "stall_us"):
+            setattr(rec, phase, round(sum(
+                float(m.get(phase, 0.0)) for m in r.acks.values()
+            ), 1))
         rec.stragglers = self.stragglers.stragglers()
         rec.status = "committed"
         self.latest_committed = r.step

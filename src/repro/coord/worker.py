@@ -452,4 +452,11 @@ def _persist_shards(conn, cfg: WorkerConfig, ck, state, step: int) -> None:
         chunks_synced=r.chunks_synced,
         chunks_clean=r.chunks_clean,
         bytes_skipped=r.bytes_skipped,
+        # phase-1 breakdown (hot-path observability): where the blocking
+        # microseconds went on this host, and how long it stalled on a
+        # pipelined sync ack (0 when the sync path is the inline barrier)
+        sync_us=r.sync_us,
+        digest_us=r.digest_us,
+        fetch_us=r.fetch_us,
+        stall_us=r.stall_us,
     )

@@ -80,6 +80,14 @@ class CheckpointResult:
     chunks_synced: int = 0     # chunks actually fetched device->host
     chunks_clean: int = 0      # chunks the sync proved (or knew) unchanged
     bytes_skipped: int = 0     # bytes the clean chunks did NOT move
+    # phase-1 breakdown (microseconds): where the blocking time went —
+    # digesting (0 when fused digests pre-hashed the boundary), fetching
+    # dirty chunks, the whole shadow sync, and — proxy mode — how long the
+    # train loop actually stalled waiting for the pipelined SYNCED ack
+    sync_us: float = 0.0
+    digest_us: float = 0.0
+    fetch_us: float = 0.0
+    stall_us: float = 0.0
     error: str | None = None
     done: threading.Event = field(default_factory=threading.Event, repr=False)
 
@@ -603,9 +611,20 @@ class ForkedCheckpointer:
 
     # -- the checkpoint entry point ------------------------------------------
     def save_async(
-        self, step: int, state: Any, *, meta: dict | None = None
+        self,
+        step: int,
+        state: Any,
+        *,
+        meta: dict | None = None,
+        device_digests: dict[str, list[int]] | None = None,
     ) -> CheckpointResult:
-        """Phase 1 inline (blocking, fast); phase 2 on the persist backend."""
+        """Phase 1 inline (blocking, fast); phase 2 on the persist backend.
+
+        ``device_digests`` are per-chunk digests the step already computed
+        as a fused final pass (``kernels.ops.tree_chunk_digests``): the
+        boundary sync compares them instead of re-scanning the state, so
+        ``digest_us`` drops to zero for covered leaves. Composes with
+        ``dirty_source`` page marks (the intersection is fetched)."""
         result = CheckpointResult(step=step, blocking_s=0.0)
         with self.timings.measure("ckpt/blocking") as _:
             t0 = time.perf_counter()
@@ -625,7 +644,11 @@ class ForkedCheckpointer:
                 drain(state)
             with self.timings.measure("ckpt/snapshot"):
                 shadow.mark_device_step(marks)
-                stats = shadow.sync(state)
+                t_sync = time.perf_counter()
+                stats = shadow.sync(state, device_digests=device_digests)
+                result.sync_us = (time.perf_counter() - t_sync) * 1e6
+            result.digest_us = stats.digest_us
+            result.fetch_us = stats.fetch_us
             if now_tick is not None:
                 self._buf_tick[buf_i] = now_tick
             skeleton = build_skeleton(state)

@@ -25,6 +25,7 @@ from __future__ import annotations
 import enum
 import mmap
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -76,6 +77,15 @@ class SyncStats:
     # the streamed proxy transport forwards precisely these chunk payloads
     # to the application, so wire bytes track what actually changed
     changed: dict[tuple[str, int], list[int]] = field(default_factory=dict)
+    # which sync epoch produced this image (-1: unepoched / legacy barrier)
+    epoch: int = -1
+    # phase breakdown: time spent hashing device chunks vs moving bytes —
+    # fused digesting (digests computed inside the step) drives digest_us
+    # toward zero, which is what the pipeline benchmarks assert
+    digest_us: float = 0.0
+    fetch_us: float = 0.0
+    # chunks whose digest the step already supplied (no boundary scan)
+    chunks_prehashed: int = 0
 
     def merge(self, other: "SyncStats") -> None:
         self.chunks_total += other.chunks_total
@@ -84,6 +94,9 @@ class SyncStats:
         self.bytes_fetched += other.bytes_fetched
         self.leaves += other.leaves
         self.changed.update(other.changed)
+        self.digest_us += other.digest_us
+        self.fetch_us += other.fetch_us
+        self.chunks_prehashed += other.chunks_prehashed
 
 
 @dataclass
@@ -208,6 +221,12 @@ class ShadowStateManager:
         # a persist of the *previous* generation can be recognized and
         # dropped instead of installing stale digests into fresh streams
         self.generation = 0
+        # sync epochs: each begin_sync_epoch() names one step-boundary
+        # image. The epoch is carried through SyncStats (and, in the proxy,
+        # through SYNCED frames) so a caller that pipelines SYNC behind the
+        # next STEP can match images to boundaries asynchronously instead
+        # of treating every sync as a barrier.
+        self.sync_epoch = 0
 
     def _alloc_buffer(self, nbytes: int, key: tuple[str, int] | None = None) -> np.ndarray:
         if self.segment_factory is not None and key is not None:
@@ -335,28 +354,70 @@ class ShadowStateManager:
                 s.states[i] = ChunkState.HOST_DIRTY
 
     # -- sync (the read-fault path, batched) ------------------------------------
-    def sync(self, state: Any) -> SyncStats:
+    def begin_sync_epoch(self) -> int:
+        """Open a new sync epoch and return its number.
+
+        An epoch names one step-boundary image: the caller issues
+        ``begin_sync_epoch()`` at the boundary, keeps stepping, and runs
+        ``sync(state, epoch=...)`` against the boundary state while the
+        *next* step mutates the live buffers — the double-buffered overlap
+        the proxy's pipelined SYNC{epoch} is built on.
+        """
+        self.sync_epoch += 1
+        return self.sync_epoch
+
+    def sync(
+        self,
+        state: Any,
+        *,
+        epoch: int | None = None,
+        device_digests: dict[str, list[int]] | None = None,
+    ) -> SyncStats:
         """Bring the shadow up to date with the device; returns transfer stats.
 
         Only chunks whose device digest differs from the shadow digest are
         materialized on host — CRUM's read-fault economy at chunk scale.
+
+        ``device_digests`` ({path: per-chunk u64 digests}) are digests the
+        step program already computed as a fused final pass: a listed path
+        skips the boundary digest scan entirely and compares the supplied
+        digests against the shadow's. They compose with page-granular
+        ``precise`` marks (the intersection is fetched) instead of racing
+        them. Like precise marks, they apply only to single-stream
+        (whole-leaf, ordinal-0) paths; sharded leaves fall back to the
+        scan, whose chunk indexing is per-shard.
         """
         if not self._registered:
             self.register(state)
         flat, _ = flatten_with_paths(state)
-        stats = SyncStats()
+        per_path: dict[str, int] = {}
+        if device_digests:
+            for p, _o in self._streams:
+                per_path[p] = per_path.get(p, 0) + 1
+        stats = SyncStats(epoch=epoch if epoch is not None else self.sync_epoch)
         for path, leaf in flat.items():
             for ordinal, start, stop, data in _owned_host_shards(leaf):
                 stream = self._streams.get((path, ordinal))
                 if stream is None:  # new leaf appeared: register on the fly
                     self.register(state)
                     stream = self._streams[(path, ordinal)]
-                st = self._sync_stream(stream, data)
+                known = None
+                if (
+                    device_digests
+                    and ordinal == 0
+                    and per_path.get(path) == 1
+                ):
+                    k = device_digests.get(path)
+                    if k is not None and len(k) == stream.n_chunks:
+                        known = [int(d) for d in k]
+                st = self._sync_stream(stream, data, known=known)
                 stats.merge(st)
             stats.leaves += 1
         return stats
 
-    def _sync_stream(self, stream: _ShardStream, data: Any) -> SyncStats:
+    def _sync_stream(
+        self, stream: _ShardStream, data: Any, known: list[int] | None = None
+    ) -> SyncStats:
         stats = SyncStats(
             chunks_total=stream.n_chunks, bytes_total=stream.nbytes
         )
@@ -364,6 +425,7 @@ class ShadowStateManager:
             # first sync: everything must move regardless — bulk copy; the
             # digest pass is skipped when a persist phase will backfill it
             stream.precise = False
+            t0 = time.perf_counter()
             with self.timings.measure("shadow/fetch"):
                 stream.buffer = self._alloc_buffer(
                     stream.nbytes, (stream.path, stream.shard_ordinal)
@@ -376,11 +438,17 @@ class ShadowStateManager:
                 stats.changed[(stream.path, stream.shard_ordinal)] = list(
                     range(stream.n_chunks)
                 )
-            if self.defer_first_digests:
+            stats.fetch_us += (time.perf_counter() - t0) * 1e6
+            if known is not None:
+                stream.digests = list(known)
+                stats.chunks_prehashed += stream.n_chunks
+            elif self.defer_first_digests:
                 stream.digests = [-2] * stream.n_chunks  # pending backfill
             else:
+                t0 = time.perf_counter()
                 with self.timings.measure("shadow/digest"):
                     stream.digests = self._device_digests(data, stream)
+                stats.digest_us += (time.perf_counter() - t0) * 1e6
             return stats
         dirty = [
             i for i, st in enumerate(stream.states)
@@ -390,15 +458,34 @@ class ShadowStateManager:
         if not dirty:
             return stats
 
-        if precise:
+        if known is not None:
+            # fused digests: the step already hashed the chunks, so the
+            # boundary compare is pure bookkeeping (not counted as digest
+            # time — no hash runs here) — and it *composes* with
+            # page-granular marks: only chunks that are both marked dirty
+            # AND hash-changed are fetched (shadow digests still unknown
+            # from a deferred first sync count as changed)
+            keep = {
+                i for i in dirty
+                if stream.digests[i] < 0 or known[i] != stream.digests[i]
+            }
+            changed = sorted(keep)
+            for i in dirty:
+                if i not in keep:
+                    stream.states[i] = ChunkState.CLEAN
+            dev_digests = known
+            stats.chunks_prehashed += len(dirty)
+        elif precise:
             # page-granular marks are authoritative: fetch exactly them, no
             # digest scan over the (mostly clean) rest of the leaf — the
             # whole point of the UVM dirty-bit integration
             dev_digests = None
             changed = dirty
         else:
+            t0 = time.perf_counter()
             with self.timings.measure("shadow/digest"):
                 dev_digests = self._device_digests(data, stream)
+            stats.digest_us += (time.perf_counter() - t0) * 1e6
 
             changed = [
                 i for i in dirty if dev_digests[i] != stream.digests[i]
@@ -412,6 +499,7 @@ class ShadowStateManager:
             return stats
         stats.changed[(stream.path, stream.shard_ordinal)] = sorted(changed)
 
+        t_fetch = time.perf_counter()
         with self.timings.measure("shadow/fetch"):
             if stream.buffer is None:
                 stream.buffer = self._alloc_buffer(
@@ -434,6 +522,7 @@ class ShadowStateManager:
                 stream.states = [ChunkState.CLEAN] * stream.n_chunks
                 stats.chunks_fetched = stream.n_chunks
                 stats.bytes_fetched = stream.nbytes
+                stats.fetch_us += (time.perf_counter() - t_fetch) * 1e6
                 return stats
             fetch = self._make_chunk_fetcher(data, stream, changed)
             for i in changed:
@@ -446,6 +535,7 @@ class ShadowStateManager:
                 stream.states[i] = ChunkState.CLEAN
                 stats.chunks_fetched += 1
                 stats.bytes_fetched += hi - lo
+        stats.fetch_us += (time.perf_counter() - t_fetch) * 1e6
         return stats
 
     def _make_chunk_fetcher(self, data: Any, stream: _ShardStream, changed: list[int]):

@@ -251,34 +251,78 @@ class CheckpointedTrainer:
         on_metrics: Callable[[int, Any], None] | None,
         stop: Callable[[], bool] | None = None,
     ) -> Any:
-        """Proxy mode: forward pipelined STEP calls, materialize the host
-        mirror only at sync points (checkpoints and the final step).
-        Batches are program-internal (deterministic in the step number) —
-        that determinism is what makes kill-replay bit-identical."""
+        """Proxy mode: forward pipelined STEP calls; checkpoint boundaries
+        issue a pipelined epoch SYNC and keep stepping — the SYNCED ack is
+        polled opportunistically each iteration and only *collected*
+        (blocking) when the next boundary needs the data plane, so the
+        boundary stall overlaps with the following steps' compute. Batches
+        are program-internal (deterministic in the step number) — that
+        determinism is what makes kill-replay bit-identical."""
         step = start_step
         synced_at = start_step - 1
+        pending: tuple[int, int] | None = None  # (epoch, boundary step)
         for _ in range(num_steps):
             step += 1
             with self.timings.measure("train/step"):
                 self.runner.step(step)
             state["host"]["step"] = np.int64(step)
+            if pending is not None:
+                res = self.runner.sync_poll(pending[0])
+                if res is not None:
+                    synced_at = self._commit_boundary(
+                        state, pending[1], res, on_metrics
+                    )
+                    pending = None
             if self.policy.should_checkpoint(step):
-                state["device"], info = self._sync_mirror()
-                synced_at = step
-                if on_metrics is not None:
-                    on_metrics(step, info.get("metrics", {}))
-                self.checkpoint_now(step, state)
+                if pending is not None:
+                    # one epoch in flight at a time: the data plane must be
+                    # mirrored before the next SYNC rewrites it
+                    synced_at = self._collect_boundary(
+                        state, pending, on_metrics
+                    )
+                with self.timings.measure("train/proxy_sync_begin"):
+                    pending = (self.runner.sync_begin(), step)
             if stop is not None and stop():
                 break
+        if pending is not None:
+            synced_at = self._collect_boundary(state, pending, on_metrics)
         if synced_at != step:
-            state["device"], info = self._sync_mirror()
+            with self.timings.measure("train/proxy_sync"):
+                state["device"], info = self.runner.sync_state()
             if on_metrics is not None:
                 on_metrics(step, info.get("metrics", {}))
         return state
 
-    def _sync_mirror(self) -> tuple[Any, dict]:
+    def _collect_boundary(
+        self,
+        state: Any,
+        pending: tuple[int, int],
+        on_metrics: Callable[[int, Any], None] | None,
+    ) -> int:
         with self.timings.measure("train/proxy_sync"):
-            return self.runner.sync_state()
+            res = self.runner.sync_collect(pending[0])
+        return self._commit_boundary(state, pending[1], res, on_metrics)
+
+    def _commit_boundary(
+        self,
+        state: Any,
+        boundary: int,
+        res: tuple[Any, dict],
+        on_metrics: Callable[[int, Any], None] | None,
+    ) -> int:
+        """SYNCED{epoch} for a checkpoint boundary arrived: checkpoint the
+        boundary image under the boundary's step number (the loop may have
+        run ahead of it — the whole point of the overlap)."""
+        device, info = res
+        state["device"] = device
+        ck_state = dict(state)
+        ck_state["host"] = dict(state["host"])
+        ck_state["host"]["step"] = np.int64(boundary)
+        if on_metrics is not None:
+            on_metrics(boundary, info.get("metrics", {}))
+        r = self.checkpoint_now(boundary, ck_state)
+        r.stall_us = float(info.get("stall_us", 0.0))
+        return boundary
 
     def materialize(self, state: Any) -> Any:
         """Refresh ``state["device"]`` from the managed space (no-op when
@@ -309,12 +353,18 @@ class CheckpointedTrainer:
 
     # -- teardown ---------------------------------------------------------------
     def finish(self) -> list[CheckpointResult]:
-        done = self.checkpointer.wait_all()
+        # wait on THIS trainer's results, not the checkpointer's pending
+        # list: a persist that completed before the next save_async's reap
+        # has already left that list, and wait_all() alone would silently
+        # return fewer results than checkpoints taken
+        self.checkpointer.wait_all()
+        for r in self.results:
+            r.done.wait()
         self.checkpointer.close()
         if self.runner is not None:
             self.runner.close()
         self._gc()  # in-flight persists have committed by now
-        return done
+        return list(self.results)
 
 
 def _get(tree: Any, *keys: str, default=None) -> Any:

@@ -85,6 +85,39 @@ def digests_to_u64(d: jax.Array | np.ndarray) -> np.ndarray:
     return (d[:, 0].astype(np.uint64) << np.uint64(32)) | d[:, 1].astype(np.uint64)
 
 
+def tree_chunk_digests(
+    state, chunk_bytes: int, *, use_pallas: Dispatch = "auto"
+) -> dict[str, list[int]]:
+    """Per-chunk u64 digests of every leaf: {path: [digest, ...]}.
+
+    The fused-digest primitive: a step program calls this as its final
+    pass so the sync boundary receives ready-made digests instead of
+    re-scanning the state (``ShadowStateManager.sync(device_digests=...)``).
+    jax leaves go through the :func:`chunk_digests` kernel dispatch
+    (Pallas on TPU, jnp reference elsewhere); host leaves hash with the
+    bit-identical numpy reference.
+    """
+    from repro.checkpoint.chunking import chunk_digest_np
+    from repro.utils.tree import flatten_with_paths
+
+    flat, _ = flatten_with_paths(state)
+    out: dict[str, list[int]] = {}
+    for path, leaf in flat.items():
+        if isinstance(leaf, jax.Array):
+            d = digests_to_u64(
+                chunk_digests(leaf, chunk_bytes, use_pallas=use_pallas)
+            )
+            out[path] = [int(x) for x in d]
+            continue
+        raw = np.ascontiguousarray(np.asarray(leaf)).reshape(-1).view(np.uint8)
+        cb = int(chunk_bytes)
+        out[path] = [
+            chunk_digest_np(raw[i * cb : min(raw.nbytes, (i + 1) * cb)])
+            for i in range(num_chunks(raw.nbytes, cb))
+        ]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

@@ -11,15 +11,26 @@ step programs make the result bit-identical to the uninterrupted run.
 Records are u32-length-prefixed msgpack maps (the coordinator protocol's
 framing, applied to a file) with a ``call`` discriminator::
 
-    {"call": "program",  "spec": {...}}
-    {"call": "register", "layout": {...}, "chunk_bytes": int, "workdir": str}
-    {"call": "upload",   "step": int, "paths": [..] | None}   None = all
-    {"call": "step",     "step": int}
-    {"call": "sync",     "step": int, "digest": str}
+    {"call": "program",    "spec": {...}}
+    {"call": "register",   "layout": {...}, "chunk_bytes": int, "workdir": str}
+    {"call": "upload",     "step": int, "paths": [..] | None}   None = all
+    {"call": "step",       "step": int}
+    {"call": "sync_begin", "epoch": int, "step": int}
+    {"call": "sync",       "step": int, "digest": str, "epoch": int?}
 
 SYNC records are write-side only (the proxy never reads them): they mark
 the replay low-water line — everything at or before the last synced step
 is already captured in the segments' bytes.
+
+Pipelined epoch syncs split into two records because issue and ack are no
+longer the same moment: ``sync_begin`` is appended when the SYNC{epoch}
+frame is *issued* (so its position marks the step boundary inside the
+pipelined call stream), and the ``sync`` ack record — appended only once
+SYNCED{epoch} arrived and the mirror was captured — is what makes that
+boundary a replay watermark. An issued-but-unacked epoch sync is NOT a
+watermark (the mirror never saw its image); replay re-executes the steps
+before it and re-issues the SYNC at the same position, so the application
+can still collect the ack after a kill.
 """
 from __future__ import annotations
 
@@ -73,28 +84,58 @@ class ApiLog:
     def replay_plan(self) -> tuple[dict | None, dict | None, list[int]]:
         """(program_spec, register_record, steps_to_replay).
 
-        Everything a fresh proxy needs: the program, the allocation table,
-        and the step calls to re-execute on top of the pushed snapshot.
-        The watermark is *positional*: a sync OR upload record captures the
-        device state at that point (the segments/mirror hold it), so only
-        step calls appearing after the latest such record are replayed —
-        an upload (e.g. a restore pushed onto a live runner) supersedes
-        steps issued before it.
+        The step-only view of :meth:`replay_actions` — kept for callers
+        that predate pipelined epoch syncs and only re-execute STEPs.
+        """
+        program, register, actions = self.replay_actions()
+        return program, register, [a[1] for a in actions if a[0] == "step"]
+
+    def replay_actions(
+        self,
+    ) -> tuple[dict | None, dict | None, list[tuple]]:
+        """(program_spec, register_record, ordered replay actions).
+
+        Actions are the calls a fresh proxy must re-execute, in pipeline
+        order, on top of the pushed mirror: ``("step", n)`` and
+        ``("sync", epoch, step)`` (an issued-but-unacked epoch sync that
+        must be re-issued at the same boundary so its SYNCED{epoch} can
+        still be collected).
+
+        Watermarks are *positional*: an upload or a legacy (un-epoched)
+        sync record captures the device state at that point — everything
+        before it is in the mirror. An epoch sync's ack record instead
+        clears up to *its own sync_begin position*: the mirror holds the
+        epoch-boundary image, so steps issued while that sync was in
+        flight (logged after the begin, executed after the boundary) still
+        replay.
         """
         program = register = None
-        steps: list[int] = []
+        actions: list[tuple] = []
         for rec in iter_records(self.path):
             call = rec.get("call")
             if call == "program":
                 program = rec.get("spec")
             elif call == "register":
                 register = rec
-                steps = []
-            elif call in ("sync", "upload"):
-                steps = []  # snapshot watermark: earlier steps are captured
+                actions = []
+            elif call == "upload":
+                actions = []  # snapshot watermark: earlier calls captured
             elif call == "step":
-                steps.append(int(rec["step"]))
-        return program, register, steps
+                actions.append(("step", int(rec["step"])))
+            elif call == "sync_begin":
+                actions.append(
+                    ("sync", int(rec["epoch"]), int(rec.get("step", 0)))
+                )
+            elif call == "sync":
+                epoch = rec.get("epoch")
+                if epoch is None:
+                    actions = []  # legacy barrier sync: positional watermark
+                    continue
+                for i, a in enumerate(actions):
+                    if a[0] == "sync" and a[1] == int(epoch):
+                        del actions[: i + 1]
+                        break
+        return program, register, actions
 
 
 def iter_records(path: str) -> Iterator[dict[str, Any]]:

@@ -76,6 +76,13 @@ class DeviceProxy:
         # streamed transport: CHUNKS frames arriving ahead of a SYNCED
         # reply are handed here (the runner wires its transport's ingest)
         self.on_data: Callable[[dict], None] | None = None
+        # pipelined epoch SYNCs: SYNCED{epoch} frames that arrive while we
+        # are waiting for something else are parked here until collected —
+        # the asynchronous half of the non-barrier sync path
+        self._synced: dict[int, dict] = {}
+        # inflight watermark at each epoch's SYNC frame: once SYNCED{epoch}
+        # arrives, everything sent before that SYNC has executed
+        self._sync_marks: dict[int, int] = {}
 
     # -- lifecycle ---------------------------------------------------------------
     def start(self) -> "DeviceProxy":
@@ -204,6 +211,12 @@ class DeviceProxy:
                 raise RuntimeError(
                     f"proxy call {msg.get('op')} failed: {msg.get('error')}"
                 )
+            if mtype == MSG_SYNCED and msg.get("epoch") is not None:
+                # a pipelined epoch sync completed while we waited for
+                # something else: park it for collect_synced() — an epoch
+                # SYNCED never answers a barrier sync
+                self._synced[int(msg["epoch"])] = msg
+                continue
             if mtype == want:
                 return msg
             # stale frame from before a died-and-replayed call: drop it
@@ -264,4 +277,88 @@ class DeviceProxy:
         self._send(MSG_SYNC)
         msg = self._recv_reply(MSG_SYNCED, timeout=timeout)
         self.inflight = 0
+        return msg
+
+    # -- pipelined epoch sync -----------------------------------------------------
+    def sync_begin(self, epoch: int) -> None:
+        """Issue SYNC{epoch} fire-and-forget: the proxy executes it in
+        pipeline order (after everything sent so far), and the matching
+        SYNCED{epoch} is collected later — the app keeps stepping instead
+        of stalling on the boundary."""
+        self._send(MSG_SYNC, epoch=int(epoch))
+        self._sync_marks[int(epoch)] = self.inflight
+
+    def poll_synced(self, epoch: int) -> dict | None:
+        """Non-blocking: the parked SYNCED{epoch} if it has arrived (or
+        arrives within a sub-millisecond drain of the socket), else None."""
+        epoch = int(epoch)
+        if epoch not in self._synced and self.conn is not None:
+            old = self.conn.sock.gettimeout()
+            try:
+                self.conn.settimeout(0.0005)
+                while epoch not in self._synced:
+                    try:
+                        msg = self.conn.recv()
+                    except (socket.timeout, TimeoutError):
+                        break
+                    except OSError as e:
+                        raise self._die(f"recv failed: {e}", e)
+                    if msg is None:
+                        raise self._die("proxy EOF while polling SYNCED")
+                    self._absorb(msg)
+            finally:
+                if self.conn is not None:
+                    self.conn.settimeout(old)
+        if epoch not in self._synced:
+            return None
+        return self._take_synced(epoch)
+
+    def collect_synced(self, epoch: int, *, timeout: float | None = None) -> dict:
+        """Block until SYNCED{epoch} arrives and return it."""
+        epoch = int(epoch)
+        deadline = time.monotonic() + (timeout or self.op_timeout_s)
+        while epoch not in self._synced:
+            if time.monotonic() > deadline:
+                raise self._die(
+                    f"no SYNCED(epoch={epoch}) within "
+                    f"{timeout or self.op_timeout_s}s "
+                    f"(proxy {'alive' if self.alive() else 'dead'})"
+                )
+            if self.conn is None:
+                raise ProxyDiedError("proxy connection is closed")
+            try:
+                msg = self.conn.recv()
+            except (socket.timeout, TimeoutError):
+                if not self.alive():
+                    raise self._die(
+                        f"proxy died while waiting for SYNCED(epoch={epoch})"
+                    )
+                continue
+            except OSError as e:
+                raise self._die(f"recv failed: {e}", e)
+            if msg is None:
+                raise self._die(
+                    f"proxy EOF while waiting for SYNCED(epoch={epoch})"
+                )
+            self._absorb(msg)
+        return self._take_synced(epoch)
+
+    def _absorb(self, msg: dict) -> None:
+        """Route one frame received outside a _recv_reply() wait."""
+        mtype = msg.get("type")
+        if mtype == MSG_CHUNKS and self.on_data is not None:
+            self.on_data(msg)
+        elif mtype == MSG_SYNCED and msg.get("epoch") is not None:
+            self._synced[int(msg["epoch"])] = msg
+        elif mtype == MSG_ERR:
+            raise RuntimeError(
+                f"proxy call {msg.get('op')} failed: {msg.get('error')}"
+            )
+        # anything else (stale FLUSHED/OK from a replayed call): drop
+
+    def _take_synced(self, epoch: int) -> dict:
+        msg = self._synced.pop(epoch)
+        # everything sent before that SYNC frame has now executed
+        mark = self._sync_marks.pop(epoch, 0)
+        self.inflight = max(0, self.inflight - mark)
         return msg

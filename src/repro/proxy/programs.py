@@ -35,6 +35,26 @@ class StepProgram:
         """(new_device_state, metrics) — pure in (device_state, step)."""
         raise NotImplementedError
 
+    def step_with_digests(
+        self, device_state: Any, step: int, chunk_bytes: int
+    ) -> tuple[Any, dict, dict[str, list[int]]]:
+        """Step, then emit per-chunk digests of the new state as a fused
+        final pass: (new_state, metrics, {path: [u64 digest, ...]}).
+
+        The proxy service calls this (instead of :meth:`step`) when the
+        runner registered with ``fused_digests=True``, and hands the
+        digests of the *last* step before a SYNC to
+        ``ShadowStateManager.sync(device_digests=...)`` — the boundary
+        digest scan disappears because the step already paid for it (on
+        TPU as one extra Pallas pass over state that is already hot).
+        Programs with a cheaper in-step hash can override; this default
+        composes :meth:`step` with ``kernels.ops.tree_chunk_digests``.
+        """
+        from repro.kernels.ops import tree_chunk_digests
+
+        new_state, metrics = self.step(device_state, step)
+        return new_state, metrics, tree_chunk_digests(new_state, chunk_bytes)
+
     def on_restore(self, device_state: Any) -> Any:
         """Adapt a freshly-restored (numpy) state for this program."""
         return device_state

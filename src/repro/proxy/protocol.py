@@ -35,7 +35,13 @@ Application -> proxy::
                                      optionally zstd-compressed per frame
     STEP      {step}                 run one train step — pipelined, NO reply
     FLUSH     {seq}                  pipeline barrier (control-plane only)
-    SYNC      {}                     flush + device state -> data plane
+    SYNC      {epoch?}               device state -> data plane at this
+                                     point in the pipeline. With ``epoch``
+                                     the call is *pipelined like STEP*: no
+                                     barrier, the app keeps issuing STEPs
+                                     and matches the SYNCED{epoch} ack
+                                     asynchronously. Without it: the
+                                     legacy blocking barrier.
     SHUTDOWN  {}                     clean exit
 
 Proxy -> application::
@@ -47,11 +53,19 @@ Proxy -> application::
                                      payload of the in-progress SYNC (sent
                                      before its SYNCED)
     SYNCED    {step, digest, metrics, chunks_synced, bytes_synced,
-               wire_bytes?, paging?}
+               epoch?, phase_us?, wire_bytes?, paging?}
+                                     ``epoch`` echoes the SYNC's epoch;
+                                     ``phase_us`` breaks the window down
+                                     ({step, digest, sync} microseconds)
+                                     for the pipeline observability path
 
 STEP carrying no reply is the proxying economy the paper measures in
 Fig. 4: the app runs ahead of the proxy exactly like JAX's async dispatch
-runs ahead of the device (see ``core/drain.py``); SYNC is the flush.
+runs ahead of the device (see ``core/drain.py``); SYNC is the flush. An
+epoch-tagged SYNC extends the same economy to the sync boundary itself:
+the proxy still executes it in pipeline order (so the image is exactly
+the step-boundary state), but the app overlaps the drain+digest+fetch
+work with its next steps instead of stalling on the ack.
 """
 from __future__ import annotations
 

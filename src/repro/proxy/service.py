@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import os
 import socket
+import time
 from typing import Any
 
 from repro.proxy.protocol import (
@@ -78,6 +79,18 @@ class ProxyService:
         self._space_sync_tick = -1
         self.last_step = 0
         self.last_metrics: dict = {}
+        # fused digesting (REGISTER fused_digests=True): every STEP ends
+        # with a chunk-digest pass over the new state, so the SYNC boundary
+        # compares ready-made hashes instead of re-scanning the state
+        self.fused_digests = False
+        self._last_digests: dict[str, list[int]] | None = None
+        # trained zstd dictionary for streamed CHUNKS frames (REGISTER zdict)
+        self._zdict: bytes | None = None
+        # per-window phase accounting, reset at every SYNC: how the wall
+        # time between two sync boundaries split between stepping and
+        # boundary work (reported in SYNCED phase_us)
+        self._win_step_us = 0.0
+        self._win_steps = 0
 
     def serve(self) -> None:
         while True:
@@ -103,24 +116,12 @@ class ProxyService:
                 self._on_upload(msg)
             elif mtype == MSG_STEP:
                 # pipelined: no reply — the app is already issuing the next call
-                if self.space is not None:
-                    # device access through the pager: fault the working
-                    # set in under the budget, write-allocate results back
-                    dstate = self.space.read_state()
-                    dstate, self.last_metrics = self.program.step(
-                        dstate, int(msg["step"])
-                    )
-                    self.space.write_state(dstate)
-                else:
-                    self.dstate, self.last_metrics = self.program.step(
-                        self.dstate, int(msg["step"])
-                    )
-                self.last_step = int(msg["step"])
+                self._on_step(msg)
             elif mtype == MSG_FLUSH:
                 self.conn.send(MSG_FLUSHED, seq=msg.get("seq", 0),
                                step=self.last_step)
             elif mtype == MSG_SYNC:
-                self._on_sync()
+                self._on_sync(msg)
             elif mtype == MSG_SHUTDOWN:
                 return False
             else:
@@ -132,6 +133,31 @@ class ProxyService:
                 MSG_ERR, op=str(mtype), error=f"{type(e).__name__}: {e}"
             )
         return True
+
+    def _step_fn(self, dstate: Any, step: int) -> tuple[Any, dict]:
+        """One step, with the fused digest pass when registered for it."""
+        if self.fused_digests:
+            dstate, metrics, self._last_digests = self.program.step_with_digests(
+                dstate, step, self.shadow.chunk_bytes
+            )
+            return dstate, metrics
+        return self.program.step(dstate, step)
+
+    def _on_step(self, msg: dict) -> None:
+        t0 = time.perf_counter()
+        if self.space is not None:
+            # device access through the pager: fault the working
+            # set in under the budget, write-allocate results back
+            dstate = self.space.read_state()
+            dstate, self.last_metrics = self._step_fn(dstate, int(msg["step"]))
+            self.space.write_state(dstate)
+        else:
+            self.dstate, self.last_metrics = self._step_fn(
+                self.dstate, int(msg["step"])
+            )
+        self.last_step = int(msg["step"])
+        self._win_step_us += (time.perf_counter() - t0) * 1e6
+        self._win_steps += 1
 
     # -- state-creating calls (the replayed ones) ------------------------------
     def _on_program(self, msg: dict) -> None:
@@ -146,6 +172,10 @@ class ProxyService:
 
         self.transport = msg.get("transport", "segment")
         self.table = make_proxy_table(msg)
+        self.fused_digests = bool(msg.get("fused_digests"))
+        self._last_digests = None
+        zd = msg.get("zdict")
+        self._zdict = bytes(zd) if zd else None
         self.shadow = ShadowStateManager(
             chunk_bytes=int(msg.get("chunk_bytes", 1 << 20)),
             digest_on_device=False,
@@ -188,8 +218,12 @@ class ProxyService:
             from repro.remote.transport import recv_chunk_frames
 
             recv_chunk_frames(
-                self.conn, n_frames, self.table, self.shadow.chunk_bytes
+                self.conn, n_frames, self.table, self.shadow.chunk_bytes,
+                dict_bytes=self._zdict,
             )
+        # a host push changed device bytes outside any step: digests the
+        # last step emitted no longer describe the state
+        self._last_digests = None
         chunks = msg.get("chunks")
         if self.space is not None and chunks is not None:
             self._delta_upload_into_space(msg, chunks)
@@ -257,9 +291,14 @@ class ProxyService:
             chunks_uploaded=stats.chunks_uploaded,
         )
 
-    def _on_sync(self) -> None:
+    def _on_sync(self, msg: dict | None = None) -> None:
         from repro.utils.tree import tree_digest
 
+        t0 = time.perf_counter()
+        epoch = (msg or {}).get("epoch")
+        # fused digests describe the state after the last executed step —
+        # exactly the boundary this (pipeline-ordered) SYNC captures
+        device_digests = self._last_digests if self.fused_digests else None
         fields: dict[str, Any] = {}
         if self.space is not None:
             # page-delta sync: mark exactly the chunks written since the
@@ -271,13 +310,13 @@ class ProxyService:
             )
             state = self.space.peek_state()
             self.shadow.mark_device_step(marks)
-            stats = self.shadow.sync(state)
+            stats = self.shadow.sync(state, device_digests=device_digests)
             self._space_sync_tick = tick
             fields["paging"] = self.space.stats_dict()
         else:
             state = self.dstate
             self.shadow.mark_device_step()
-            stats = self.shadow.sync(state)
+            stats = self.shadow.sync(state, device_digests=device_digests)
         if self.transport == "stream":
             # the app side cannot see this table: ship exactly the chunks
             # this sync materialized as CHUNKS frames ahead of the SYNCED —
@@ -290,12 +329,25 @@ class ProxyService:
                 if ordinal == 0 and idxs
             }
             frames, raw, wire = encode_chunk_frames(
-                self.table, changed, self.shadow.chunk_bytes
+                self.table, changed, self.shadow.chunk_bytes,
+                dict_bytes=self._zdict,
             )
             for frame in frames:
                 self.conn.send(MSG_CHUNKS, **frame)
             fields["wire_bytes"] = wire
             fields["raw_bytes"] = raw
+        if epoch is not None:
+            fields["epoch"] = int(epoch)
+        fields["phase_us"] = {
+            "step": round(self._win_step_us, 1),
+            "steps": self._win_steps,
+            "digest": round(stats.digest_us, 1),
+            "fetch": round(stats.fetch_us, 1),
+            "sync": round((time.perf_counter() - t0) * 1e6, 1),
+            "prehashed_chunks": stats.chunks_prehashed,
+        }
+        self._win_step_us = 0.0
+        self._win_steps = 0
         self.conn.send(
             MSG_SYNCED,
             step=self.last_step,

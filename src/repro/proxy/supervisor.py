@@ -60,6 +60,8 @@ class ProxyRunner:
         chunk_bytes: int = 1 << 20,
         transport: str = "segment",
         compress: bool | None = None,
+        train_dict: bool = False,
+        fused_digests: bool = False,
         endpoint_provider: Callable[..., tuple[str, int]] | None = None,
         device_capacity_bytes: int | None = None,
         page_bytes: int | None = None,
@@ -79,6 +81,13 @@ class ProxyRunner:
         self.chunk_bytes = int(chunk_bytes)
         self.transport_kind = transport
         self.compress = compress
+        # stream transport: train a zstd dictionary on the initial state's
+        # chunks and ship it in REGISTER — small-chunk frames compress
+        # against shared context instead of starting cold every time
+        self.train_dict = bool(train_dict)
+        # fused digesting: every proxied STEP ends with a chunk-digest
+        # pass, so SYNC boundaries compare ready-made hashes (no scan)
+        self.fused_digests = bool(fused_digests)
         # placement seam: when set, incarnations connect OUT to whatever
         # endpoint the provider names (provider(failed=True) after a death
         # reports the loss and may return a different host — the
@@ -112,6 +121,15 @@ class ProxyRunner:
         self.started = False
         self.last_synced_step = 0
         self.last_digest: str | None = None
+        # pipelined epoch syncs: monotonically increasing epoch counter and
+        # the (at most one) issued-but-unacked epoch:
+        #   epoch -> (boundary step, _steps_since_sync at issue time)
+        # Serialized on purpose: the data-plane table is rewritten by every
+        # SYNC, so the mirror of epoch N must be captured before epoch N+1
+        # is allowed to touch the table.
+        self._sync_epoch = 0
+        self._pending_epochs: dict[int, tuple[int, int]] = {}
+        self._last_issued_step = 0
         self._last_state: Any = None  # host mirror of the last acked sync
         # STEP frames issued since the last acked sync/upload: while any
         # are outstanding the proxy's device state has moved PAST the
@@ -143,6 +161,7 @@ class ProxyRunner:
             self.chunk_bytes,
             workdir=self._explicit_workdir,
             compress=self.compress,
+            train_dict=self.train_dict,
         )
         log_path = self._log_path
         if log_path is None:
@@ -161,9 +180,11 @@ class ProxyRunner:
             "eviction_policy": self.eviction_policy,
             "promote_threshold": self.promote_threshold,
             "promote_window": self.promote_window,
+            "fused_digests": self.fused_digests,
         })
         self.log.append({"call": "upload", "step": int(base_step), "paths": None})
         self.last_synced_step = int(base_step)
+        self._last_issued_step = int(base_step)
         self._last_state = self.transport.read_state()
         self._steps_since_sync = 0
         self._spawn_and_replay(upload_only=True)
@@ -180,6 +201,10 @@ class ProxyRunner:
         Returns the proxy's UPLOAD ack ({bytes_uploaded, chunks_uploaded}).
         """
         self._require_started()
+        # an UPLOAD record is a positional watermark that clears everything
+        # before it from the replay tail — collect any in-flight epoch sync
+        # first so its ack (and mirror) are not silently dropped
+        self._drain_pending()
         chunks = (
             self._chunk_delta(device_state)
             if self._steps_since_sync == 0 else None
@@ -254,6 +279,7 @@ class ProxyRunner:
         self._require_started()
         self.log.append({"call": "step", "step": int(step)})
         self._steps_since_sync += 1
+        self._last_issued_step = int(step)
         try:
             self.proxy.step(int(step))
         except ProxyDiedError:
@@ -268,41 +294,110 @@ class ProxyRunner:
             self._recover()
 
     def sync_state(self) -> tuple[Any, dict[str, Any]]:
-        """Flush the pipeline, sync device->data plane, return (state, info).
+        """Blocking sync: issue an epoch SYNC and immediately collect it.
 
-        The returned state is a host-side copy (safe to checkpoint, safe to
-        keep as the recovery mirror). ``info`` carries the proxy's step,
-        state digest, per-sync transfer stats and last step metrics.
+        The compat barrier — ``sync_begin()`` + ``sync_collect()`` with no
+        overlap in between. The returned state is a host-side copy (safe to
+        checkpoint, safe to keep as the recovery mirror). ``info`` carries
+        the proxy's step, state digest, per-sync transfer stats and last
+        step metrics.
         """
+        return self.sync_collect(self.sync_begin())
+
+    def sync_begin(self) -> int:
+        """Issue a pipelined SYNC at the current step boundary; returns its
+        epoch. The caller keeps stepping and later matches the ack with
+        ``sync_poll``/``sync_collect`` — the proxy still executes the sync
+        in pipeline order, so the captured image is exactly the state at
+        this boundary."""
         self._require_started()
+        self._drain_pending()  # serialize: one in-flight epoch at a time
+        self._sync_epoch += 1
+        epoch = self._sync_epoch
+        self.log.append({
+            "call": "sync_begin",
+            "epoch": epoch,
+            "step": self._last_issued_step,
+        })
+        self._pending_epochs[epoch] = (
+            self._last_issued_step, self._steps_since_sync,
+        )
+        try:
+            self.proxy.sync_begin(epoch)
+        except ProxyDiedError:
+            self._recover()  # replay re-issues this SYNC at its boundary
+        return epoch
+
+    def sync_poll(self, epoch: int) -> tuple[Any, dict[str, Any]] | None:
+        """Non-blocking: (state, info) if SYNCED{epoch} has arrived, else
+        None. Proxy death during the poll triggers recovery (which re-issues
+        the pending sync) and reports None — poll again later."""
+        self._require_started()
+        try:
+            msg = self.proxy.poll_synced(epoch)
+        except ProxyDiedError:
+            self._recover()
+            return None
+        if msg is None:
+            return None
+        return self._finish_sync(epoch, msg, stall_us=0.0)
+
+    def sync_collect(
+        self, epoch: int, *, timeout: float | None = None
+    ) -> tuple[Any, dict[str, Any]]:
+        """Block until SYNCED{epoch} arrives; returns (state, info). The
+        blocked wall time is reported as ``info["stall_us"]`` — the number
+        the pipelined trainer drives toward zero."""
+        self._require_started()
+        t0 = time.perf_counter()
         while True:
             try:
-                msg = self.proxy.sync(timeout=self.sync_timeout_s)
+                msg = self.proxy.collect_synced(
+                    epoch, timeout=timeout or self.sync_timeout_s
+                )
                 break
             except ProxyDiedError:
-                self._recover()
-        self.last_synced_step = int(msg["step"])
+                self._recover()  # replay re-issued the SYNC: collect again
+        stall_us = (time.perf_counter() - t0) * 1e6
+        return self._finish_sync(epoch, msg, stall_us=stall_us)
+
+    def _drain_pending(self) -> None:
+        for epoch in sorted(self._pending_epochs):
+            self.sync_collect(epoch)
+
+    def _finish_sync(
+        self, epoch: int, msg: dict[str, Any], *, stall_us: float
+    ) -> tuple[Any, dict[str, Any]]:
+        """SYNCED{epoch} arrived: capture the mirror, make the boundary a
+        replay watermark (the ack record), rebase the stale-step counter."""
+        boundary, steps_at_begin = self._pending_epochs.pop(epoch)
+        self.last_synced_step = int(msg.get("step", boundary))
         self.last_digest = msg.get("digest")
         self.log.append({
             "call": "sync",
             "step": self.last_synced_step,
             "digest": self.last_digest,
+            "epoch": epoch,
         })
         self._last_state = self.transport.read_state()
-        self._steps_since_sync = 0
+        # steps issued while this sync was in flight are PAST the mirror
+        self._steps_since_sync = max(
+            0, self._steps_since_sync - steps_at_begin
+        )
         info = {
             "step": self.last_synced_step,
             "digest": self.last_digest,
+            "epoch": epoch,
+            "stall_us": stall_us,
             "metrics": msg.get("metrics", {}),
             "chunks_synced": msg.get("chunks_synced", 0),
             "bytes_synced": msg.get("bytes_synced", 0),
             "restarts": self.budget.count,
             "transport": self.transport.stats(),
         }
-        if "wire_bytes" in msg:
-            info["wire_bytes"] = msg["wire_bytes"]
-        if "paging" in msg:
-            info["paging"] = msg["paging"]
+        for key in ("wire_bytes", "paging", "phase_us"):
+            if key in msg:
+                info[key] = msg[key]
         return self._last_state, info
 
     # -- failure drills ------------------------------------------------------------
@@ -349,6 +444,7 @@ class ProxyRunner:
             eviction_policy=self.eviction_policy,
             promote_threshold=self.promote_threshold,
             promote_window=self.promote_window,
+            fused_digests=self.fused_digests,
         )
         self.proxy.upload(
             step=self.last_synced_step,
@@ -356,9 +452,15 @@ class ProxyRunner:
         )
         if upload_only:
             return []
-        _prog, _reg, steps = self.log.replay_plan()
-        for s in steps:
-            self.proxy.step(s)
+        _prog, _reg, actions = self.log.replay_actions()
+        steps = []
+        for a in actions:
+            if a[0] == "step":
+                self.proxy.step(a[1])
+                steps.append(a[1])
+            else:  # ("sync", epoch, step): unacked epoch sync — re-issue at
+                # the same boundary so its SYNCED{epoch} is still collectable
+                self.proxy.sync_begin(a[1])
         return steps
 
     def _recover(self) -> None:

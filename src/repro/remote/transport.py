@@ -52,25 +52,72 @@ def _zstd():
         return None
 
 
+def train_chunk_dict(
+    table: StateTable,
+    chunk_bytes: int,
+    *,
+    dict_bytes: int = 16 << 10,
+    max_samples: int = 2048,
+) -> bytes | None:
+    """Train a zstd dictionary on the table's current chunk population.
+
+    Small-chunk regimes (many tiny leaves, sub-kilobyte dirty ranges) give
+    a cold per-frame compressor almost nothing to work with; a trained
+    dictionary ships the shared context once, in REGISTER, and every later
+    CHUNKS frame compresses against it. Returns the dictionary bytes, or
+    None when zstandard is unavailable or the samples are too small/too
+    uniform to train on (callers fall back to plain per-frame zstd).
+    """
+    zstd = _zstd()
+    if zstd is None:
+        return None
+    samples = []
+    for path, idx in table.all_chunks(chunk_bytes).items():
+        for i in idx:
+            samples.append(table.chunk_bytes_of(path, i, chunk_bytes).tobytes())
+            if len(samples) >= max_samples:
+                break
+        if len(samples) >= max_samples:
+            break
+    try:
+        return zstd.train_dictionary(int(dict_bytes), samples).as_bytes()
+    except Exception:
+        return None  # too few/too small samples — not an error, just no dict
+
+
 def encode_chunk_frames(
     table: StateTable,
     chunks: dict[str, list[int]],
     chunk_bytes: int,
     *,
     compress: bool | None = None,
+    dict_bytes: bytes | None = None,
 ) -> tuple[list[dict], int, int]:
     """Pack the given chunks' current table bytes into CHUNKS frame dicts.
 
-    Returns (frames, raw_bytes, wire_bytes): ``raw_bytes`` is the payload
-    before compression, ``wire_bytes`` what actually rides the connection.
-    ``compress=None`` auto-enables zstd when the package is importable —
-    the receiving side decodes per the frame's ``codec`` field, so both
-    ends must have it (they share this codebase's environment).
+    Coalescing: entries accumulate across leaves until ~FRAME_PAYLOAD_BYTES
+    of payload, so many small dirty chunks ride one frame instead of one
+    frame each. Returns (frames, raw_bytes, wire_bytes): ``raw_bytes`` is
+    the payload before compression, ``wire_bytes`` what actually rides the
+    connection. ``compress=None`` auto-enables zstd when the package is
+    importable — the receiving side decodes per the frame's ``codec``
+    field, so both ends must have it (they share this codebase's
+    environment). ``dict_bytes`` (a trained dictionary both ends hold, see
+    :func:`train_chunk_dict`) switches the codec to ``zstd-dict``.
     """
     zstd = _zstd() if compress in (None, True) else None
     if compress is True and zstd is None:
         raise RuntimeError("compress=True but zstandard is not installed")
-    cctx = zstd.ZstdCompressor(level=1) if zstd is not None else None
+    cctx = None
+    codec_name = "zstd"
+    if zstd is not None:
+        if dict_bytes:
+            cctx = zstd.ZstdCompressor(
+                level=1, dict_data=zstd.ZstdCompressionDict(dict_bytes)
+            )
+            codec_name = "zstd-dict"
+        else:
+            cctx = zstd.ZstdCompressor(level=1)
 
     frames: list[dict] = []
     items: list[list] = []
@@ -87,7 +134,7 @@ def encode_chunk_frames(
         if cctx is not None:
             packed = cctx.compress(data)
             if len(packed) < len(data):
-                data, codec = packed, "zstd"
+                data, codec = packed, codec_name
         frames.append({"codec": codec, "items": items, "data": data})
         wire_total += len(data)
         items, parts, pending = [], [], 0
@@ -107,7 +154,8 @@ def encode_chunk_frames(
 
 
 def apply_chunk_frame(
-    table: StateTable, msg: dict, chunk_bytes: int
+    table: StateTable, msg: dict, chunk_bytes: int, *,
+    dict_bytes: bytes | None = None,
 ) -> tuple[int, int]:
     """Splice one CHUNKS frame's payload into the table.
 
@@ -115,13 +163,25 @@ def apply_chunk_frame(
     """
     data = msg["data"]
     wire = len(data)
-    if msg.get("codec") == "zstd":
+    codec = msg.get("codec")
+    if codec in ("zstd", "zstd-dict"):
         zstd = _zstd()
         if zstd is None:
             raise RuntimeError(
                 "received a zstd CHUNKS frame but zstandard is not installed"
             )
-        data = zstd.ZstdDecompressor().decompress(data)
+        if codec == "zstd-dict":
+            if not dict_bytes:
+                raise RuntimeError(
+                    "received a zstd-dict CHUNKS frame but no trained "
+                    "dictionary was registered on this end"
+                )
+            dctx = zstd.ZstdDecompressor(
+                dict_data=zstd.ZstdCompressionDict(dict_bytes)
+            )
+        else:
+            dctx = zstd.ZstdDecompressor()
+        data = dctx.decompress(data)
     off = 0
     cb = int(chunk_bytes)
     for path, index, raw_len in msg["items"]:
@@ -134,7 +194,10 @@ def apply_chunk_frame(
     return off, wire
 
 
-def recv_chunk_frames(conn, n_frames: int, table: StateTable, chunk_bytes: int) -> int:
+def recv_chunk_frames(
+    conn, n_frames: int, table: StateTable, chunk_bytes: int, *,
+    dict_bytes: bytes | None = None,
+) -> int:
     """Consume exactly ``n_frames`` CHUNKS frames from ``conn`` into the
     table (the proxy side of a streamed UPLOAD). Returns raw bytes applied.
     Raises ``ConnectionError`` on EOF mid-payload (torn upload: the caller
@@ -157,7 +220,7 @@ def recv_chunk_frames(conn, n_frames: int, table: StateTable, chunk_bytes: int) 
             raise ValueError(
                 f"expected CHUNKS payload frame, got {msg.get('type')!r}"
             )
-        raw, _ = apply_chunk_frame(table, msg, chunk_bytes)
+        raw, _ = apply_chunk_frame(table, msg, chunk_bytes, dict_bytes=dict_bytes)
         total += raw
     return total
 
@@ -192,6 +255,10 @@ class ChunkTransport:
         self.wire_rx = 0      # payload bytes received on the connection
         self.raw_tx = 0       # pre-compression payload bytes sent
         self.raw_rx = 0
+        self.frames_tx = 0    # CHUNKS frames sent (proves coalescing:
+        self.frames_rx = 0    # many dirty chunks, few frames)
+        self.chunks_tx = 0
+        self.chunks_rx = 0
 
     # -- app -> proxy -----------------------------------------------------------
     def stage(self, state: Any, chunks: dict[str, list[int]] | None) -> int:
@@ -229,6 +296,10 @@ class ChunkTransport:
             "wire_rx": self.wire_rx,
             "raw_tx": self.raw_tx,
             "raw_rx": self.raw_rx,
+            "frames_tx": self.frames_tx,
+            "frames_rx": self.frames_rx,
+            "chunks_tx": self.chunks_tx,
+            "chunks_rx": self.chunks_rx,
             "data_plane_bytes": self.table.bytes_written,
         }
 
@@ -255,9 +326,13 @@ class StreamChunkTransport(ChunkTransport):
     kind = "stream"
 
     def __init__(self, table: StateTable, chunk_bytes: int, *,
-                 compress: bool | None = None):
+                 compress: bool | None = None,
+                 zdict: bytes | None = None):
         super().__init__(table, chunk_bytes)
         self.compress = compress
+        # trained zstd dictionary shared with the proxy via REGISTER; both
+        # directions' CHUNKS frames compress against it (codec zstd-dict)
+        self.zdict = zdict
 
     def payload_frames(
         self, chunks: dict[str, list[int]] | None
@@ -265,19 +340,29 @@ class StreamChunkTransport(ChunkTransport):
         if chunks is None:
             chunks = self.table.all_chunks(self.chunk_bytes)
         frames, raw, wire = encode_chunk_frames(
-            self.table, chunks, self.chunk_bytes, compress=self.compress
+            self.table, chunks, self.chunk_bytes, compress=self.compress,
+            dict_bytes=self.zdict,
         )
         self.raw_tx += raw
         self.wire_tx += wire
+        self.frames_tx += len(frames)
+        self.chunks_tx += sum(len(f["items"]) for f in frames)
         return frames
 
     def on_chunks(self, msg: dict) -> None:
-        raw, wire = apply_chunk_frame(self.table, msg, self.chunk_bytes)
+        raw, wire = apply_chunk_frame(
+            self.table, msg, self.chunk_bytes, dict_bytes=self.zdict
+        )
         self.raw_rx += raw
         self.wire_rx += wire
+        self.frames_rx += 1
+        self.chunks_rx += len(msg["items"])
 
     def register_fields(self) -> dict:
-        return {"transport": "stream", "layout": self.table.layout}
+        fields = {"transport": "stream", "layout": self.table.layout}
+        if self.zdict:
+            fields["zdict"] = self.zdict
+        return fields
 
 
 def make_transport(
@@ -287,17 +372,24 @@ def make_transport(
     *,
     workdir: str | None = None,
     compress: bool | None = None,
+    train_dict: bool = False,
 ) -> ChunkTransport:
-    """Application-side factory: build the table from ``state`` and wrap it."""
+    """Application-side factory: build the table from ``state`` and wrap it.
+
+    ``train_dict=True`` (stream only) trains a zstd dictionary on the
+    initial state's chunks and ships it to the proxy in REGISTER.
+    """
     if kind == "segment":
         return SegmentChunkTransport(
             SegmentTable.create(state, workdir=workdir), chunk_bytes
         )
     if kind == "stream":
+        table = PrivateTable.create(state, workdir=workdir)
+        zdict = (
+            train_chunk_dict(table, chunk_bytes) if train_dict else None
+        )
         return StreamChunkTransport(
-            PrivateTable.create(state, workdir=workdir),
-            chunk_bytes,
-            compress=compress,
+            table, chunk_bytes, compress=compress, zdict=zdict,
         )
     raise ValueError(f"unknown transport {kind!r}; have {TRANSPORTS}")
 

@@ -1,0 +1,168 @@
+"""Pipelined epoch syncs: the SYNC boundary overlaps the next steps.
+
+The contract under test: ``sync_begin()`` issues SYNC{epoch} without a
+barrier, the proxy executes it at exactly its position in the call stream
+(so the captured image is the step-boundary state, regardless of how far
+the app has run ahead), and the ack is matched asynchronously — including
+across a SIGKILL, where replay re-issues the pending SYNC at the same
+boundary and the ack is still collectable.
+"""
+import os
+import signal
+
+import pytest
+
+from repro.proxy import ProxyRunner, make_program
+from repro.utils.tree import tree_digest, tree_equal
+
+pytestmark = pytest.mark.integration
+
+SPEC = {"name": "numpy_sgd", "rows": 8, "width": 32, "seed": 0}
+
+
+def _inline_run(n_steps, spec=SPEC):
+    prog = make_program(spec)
+    s = prog.init_state()
+    for step in range(1, n_steps + 1):
+        s, _ = prog.step(s, step)
+    return s
+
+
+def test_epoch_sync_captures_boundary_while_app_runs_ahead():
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10)
+    r.start()
+    try:
+        for s in range(1, 6):
+            r.step(s)
+        epoch = r.sync_begin()
+        for s in range(6, 11):
+            r.step(s)  # the app is past the boundary before the ack lands
+        state, info = r.sync_collect(epoch)
+        assert info["epoch"] == epoch
+        assert info["step"] == 5
+        assert "stall_us" in info
+        assert tree_equal(state, _inline_run(5))
+
+        # and the barrier sync still sees the run-ahead steps
+        state, info = r.sync_state()
+        assert info["step"] == 10
+        assert tree_equal(state, _inline_run(10))
+    finally:
+        r.close()
+
+
+def test_epoch_sync_poll_is_nonblocking_and_eventually_lands():
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10)
+    r.start()
+    try:
+        for s in range(1, 4):
+            r.step(s)
+        epoch = r.sync_begin()
+        res = None
+        for _ in range(2000):
+            res = r.sync_poll(epoch)
+            if res is not None:
+                break
+        assert res is not None, "SYNCED never arrived via poll"
+        state, info = res
+        assert info["step"] == 3
+        assert info["stall_us"] == 0.0
+        assert tree_equal(state, _inline_run(3))
+    finally:
+        r.close()
+
+
+def test_kill_with_inflight_epoch_sync_replays_bit_identical():
+    """SIGKILL while an epoch SYNC is in flight: recovery re-issues the
+    SYNC at its logged boundary, so the ack is still collectable and the
+    boundary image is bit-identical — steps issued after the boundary
+    replay too."""
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10, max_restarts=2)
+    r.start()
+    try:
+        for s in range(1, 6):
+            r.step(s)
+        epoch = r.sync_begin()
+        for s in range(6, 9):
+            r.step(s)
+        os.kill(r.proxy.pid, signal.SIGKILL)
+        for s in range(9, 11):
+            r.step(s)  # death detected here -> respawn + replay
+        state, info = r.sync_collect(epoch)
+        assert r.restarts == 1
+        assert info["step"] == 5
+        assert tree_equal(state, _inline_run(5))
+
+        final, info = r.sync_state()
+        assert info["step"] == 10
+        assert tree_equal(final, _inline_run(10))
+        assert info["digest"] == tree_digest(_inline_run(10))
+    finally:
+        r.close()
+
+
+def test_serialized_epochs_one_inflight_at_a_time():
+    """A second sync_begin() while one epoch is pending collects the first
+    implicitly — the data-plane table holds one boundary image at a time."""
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10)
+    r.start()
+    try:
+        r.step(1)
+        e1 = r.sync_begin()
+        r.step(2)
+        e2 = r.sync_begin()
+        assert e2 == e1 + 1
+        assert list(r._pending_epochs) == [e2]  # e1 was drained
+        state, info = r.sync_collect(e2)
+        assert info["step"] == 2
+        assert tree_equal(state, _inline_run(2))
+        assert r.last_synced_step == 2
+    finally:
+        r.close()
+
+
+def test_fused_digests_skip_boundary_scan():
+    """fused_digests=True: the step program emits chunk digests with each
+    step; the SYNC boundary consumes them instead of re-scanning — the
+    boundary's digest time collapses to zero and the image stays exact."""
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10, fused_digests=True)
+    r.start()
+    try:
+        for s in range(1, 6):
+            r.step(s)
+        state, info = r.sync_state()
+        assert tree_equal(state, _inline_run(5))
+        phase = info["phase_us"]
+        assert phase["prehashed_chunks"] > 0
+        assert phase["digest"] == 0.0
+
+        # second boundary: unchanged chunks are proven clean by the fused
+        # digests alone (no scan), changed ones still move
+        for s in range(6, 11):
+            r.step(s)
+        state, info = r.sync_state()
+        assert tree_equal(state, _inline_run(10))
+        assert info["phase_us"]["digest"] == 0.0
+    finally:
+        r.close()
+
+
+def test_fused_digests_survive_kill_replay():
+    ref = _inline_run(10)
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10, max_restarts=2,
+                    fused_digests=True)
+    r.start()
+    try:
+        for s in range(1, 6):
+            r.step(s)
+        r.sync_state()
+        r.kill()
+        for s in range(6, 11):
+            r.step(s)
+        state, info = r.sync_state()
+        assert r.restarts == 1
+        assert info["step"] == 10
+        assert tree_equal(state, ref)
+        assert info["digest"] == tree_digest(ref)
+    finally:
+        r.close()

@@ -1,0 +1,128 @@
+"""zstd availability gating + trained-dictionary codec.
+
+The explicit contract (previously only implicit): ``compress=True``
+without the optional ``zstandard`` package is a clear, immediate error;
+``compress=None`` silently degrades to raw frames; a ``zstd-dict`` frame
+arriving where no dictionary was registered fails loudly instead of
+corrupting the table. The dictionary round-trip tests run only where
+zstandard exists.
+"""
+import numpy as np
+import pytest
+
+import repro.remote.transport as transport_mod
+from repro.proxy.segments import PrivateTable
+from repro.remote.transport import (
+    apply_chunk_frame,
+    encode_chunk_frames,
+    make_transport,
+    train_chunk_dict,
+)
+
+CB = 1 << 8
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((64, 16)).astype(np.float32),
+        "b": rng.standard_normal((16,)).astype(np.float32),
+    }
+
+
+@pytest.fixture
+def no_zstd(monkeypatch):
+    monkeypatch.setattr(transport_mod, "_zstd", lambda: None)
+
+
+def test_compress_true_without_zstd_is_a_clear_error(no_zstd):
+    t = PrivateTable.create(_state())
+    with pytest.raises(RuntimeError, match="zstandard is not installed"):
+        encode_chunk_frames(t, t.all_chunks(CB), CB, compress=True)
+
+
+def test_compress_auto_without_zstd_passes_raw(no_zstd):
+    src = PrivateTable.create(_state())
+    dst = PrivateTable.attach(src.layout)
+    frames, raw, wire = encode_chunk_frames(
+        src, src.all_chunks(CB), CB, compress=None
+    )
+    assert wire == raw  # nothing compressed, nothing inflated
+    assert all(f["codec"] == "raw" for f in frames)
+    for f in frames:
+        apply_chunk_frame(dst, f, CB)
+    np.testing.assert_array_equal(dst.view("w"), src.view("w"))
+
+
+def test_zstd_frame_without_zstd_receiver_is_a_clear_error(no_zstd):
+    t = PrivateTable.create(_state())
+    with pytest.raises(RuntimeError, match="zstandard is not installed"):
+        apply_chunk_frame(
+            t, {"codec": "zstd", "items": [["w", 0, CB]], "data": b"x"}, CB
+        )
+
+
+def test_train_chunk_dict_without_zstd_returns_none(no_zstd):
+    t = PrivateTable.create(_state())
+    assert train_chunk_dict(t, CB) is None
+
+
+def test_make_transport_train_dict_degrades_without_zstd(no_zstd):
+    tr = make_transport("stream", _state(), CB, train_dict=True)
+    assert tr.zdict is None
+    assert "zdict" not in tr.register_fields()
+    tr.close(unlink=True)
+
+
+def test_stream_transport_counts_frames_and_chunks():
+    tr = make_transport("stream", _state(), CB, compress=False)
+    frames = tr.payload_frames(None)
+    assert tr.frames_tx == len(frames)
+    assert tr.chunks_tx == sum(len(f["items"]) for f in frames)
+    # coalescing: far fewer frames than chunks for small-chunk states
+    assert tr.frames_tx < tr.chunks_tx
+    for f in frames:
+        tr.on_chunks({"type": "CHUNKS", **f})
+    assert tr.frames_rx == len(frames)
+    assert tr.chunks_rx == tr.chunks_tx
+    stats = tr.stats()
+    assert stats["frames_tx"] == tr.frames_tx
+    assert stats["chunks_rx"] == tr.chunks_rx
+    tr.close(unlink=True)
+
+
+# -- trained-dictionary codec (needs the real zstandard) ---------------------
+
+def test_dict_codec_roundtrip():
+    zstd = pytest.importorskip("zstandard")
+    # repetitive content: a dictionary has something to learn
+    state = {"w": np.tile(np.arange(64, dtype=np.uint8), 256)}
+    src = PrivateTable.create(state)
+    zdict = train_chunk_dict(src, CB)
+    if zdict is None:
+        pytest.skip("samples too small to train a dictionary")
+    frames, raw, wire = encode_chunk_frames(
+        src, src.all_chunks(CB), CB, compress=True, dict_bytes=zdict
+    )
+    assert any(f["codec"] == "zstd-dict" for f in frames)
+    assert wire < raw
+    dst = PrivateTable.attach(src.layout)
+    for f in frames:
+        apply_chunk_frame(dst, f, CB, dict_bytes=zdict)
+    np.testing.assert_array_equal(dst.view("w"), src.view("w"))
+
+
+def test_dict_frame_without_registered_dict_is_a_clear_error():
+    zstd = pytest.importorskip("zstandard")
+    state = {"w": np.tile(np.arange(64, dtype=np.uint8), 256)}
+    src = PrivateTable.create(state)
+    zdict = train_chunk_dict(src, CB)
+    if zdict is None:
+        pytest.skip("samples too small to train a dictionary")
+    frames, _, _ = encode_chunk_frames(
+        src, src.all_chunks(CB), CB, compress=True, dict_bytes=zdict
+    )
+    frame = next(f for f in frames if f["codec"] == "zstd-dict")
+    dst = PrivateTable.attach(src.layout)
+    with pytest.raises(RuntimeError, match="no trained dictionary"):
+        apply_chunk_frame(dst, frame, CB)
