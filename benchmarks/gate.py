@@ -24,6 +24,7 @@ import sys
 
 PAPER_ENVELOPE_PCT = 6.0
 STALL_RATIO_MAX = 0.5
+OBS_NOOP_MAX_US = 1.0
 
 
 def _load_rows(path: str | None) -> list[dict]:
@@ -91,6 +92,15 @@ def check(rows: list[dict], *, tolerance: float = 2.0) -> list[str]:
     if r is not None and not r.get("boundary_bit_identical"):
         bad.append(
             "kill with an in-flight epoch sync lost the boundary image"
+        )
+
+    # 5. observability must stay free when off. Soft: only gated when the
+    #    obs_overhead benchmark ran (older dumps predate the row).
+    r = named.get("obs_noop_hook")
+    if r is not None and float(r["us_per_call"]) > OBS_NOOP_MAX_US:
+        bad.append(
+            f"disabled-path obs hook costs {r['us_per_call']}us/call — "
+            f"over {OBS_NOOP_MAX_US}us; the no-op guard is no longer free"
         )
     return bad
 

@@ -1,0 +1,61 @@
+"""Observability cost: the disabled no-op path and the enabled emit path.
+
+The tracing contract (repro/obs/trace.py) is that hot sites pay one
+module-global load plus one identity test when tracing is off. That is
+only true while nobody "helpfully" turns the guard into a function call
+or an allocation — so this benchmark pins it:
+
+  * ``obs_noop_hook`` — the exact disabled-path pattern every
+    instrumented hot site uses (``tr = trace.get()`` hoisted, then the
+    per-event ``if tr is not None`` test). Gate: must stay under 1 us
+    per call; in practice it is tens of *nano*seconds.
+  * ``obs_enabled_span`` — the enabled path: one ``X`` event per call
+    (dict build + json + single O_APPEND write). This is the price a
+    traced run pays per event, for sizing how much instrumentation a
+    hot loop can carry.
+
+The no-op measurement temporarily stashes any live tracer rather than
+calling ``disable()`` so a traced benchmark session (CRUM_OBS_DIR set)
+keeps its shard open across this module.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from benchmarks.common import row, timeit
+from repro.obs import trace
+
+
+def run() -> None:
+    # -- disabled path: the hot-site guard, nothing else -------------------
+    n = 200_000
+    prev = trace.TRACER
+    trace.TRACER = None
+    try:
+        def noop_loop():
+            tr = trace.get()  # hoisted once per hot region, like real sites
+            for _ in range(n):
+                if tr is not None:
+                    tr.instant("never")
+        t_noop = timeit(noop_loop, warmup=1, iters=5) / n
+    finally:
+        trace.TRACER = prev
+    row("obs_noop_hook", t_noop * 1e6,
+        ns_per_call=round(t_noop * 1e9, 2), calls=n)
+
+    # -- enabled path: one complete (X) event per call ---------------------
+    m = 20_000
+    with tempfile.TemporaryDirectory(prefix="crum-obs-bench-") as d:
+        tr = trace.Tracer(d, "bench")  # private instance; global untouched
+
+        def emit_loop():
+            for _ in range(m):
+                t0 = time.perf_counter()
+                tr.complete("bench.evt", t0, step=1)
+        t_emit = timeit(emit_loop, warmup=1, iters=3) / m
+        shard_bytes = os.fstat(tr._fd).st_size
+        os.close(tr._fd)
+    row("obs_enabled_span", t_emit * 1e6,
+        events=m, bytes_per_event=round(shard_bytes / (3 * m + m)))

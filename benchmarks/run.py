@@ -20,9 +20,12 @@ import subprocess
 import sys
 
 from benchmarks import ckpt_restart, coord_commit, incremental, overhead, roofline
-from benchmarks import proxy_overhead, strategies_real, strategies_synthetic
+from benchmarks import obs_overhead, proxy_overhead
+from benchmarks import strategies_real, strategies_synthetic
 from benchmarks import remote_proxy, uvm_paging
 from benchmarks.common import ROWS
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 ALL = {
     "overhead": overhead.run,                    # Fig. 4
@@ -34,6 +37,7 @@ ALL = {
     "coord_commit": coord_commit.run,            # cluster 2-phase commit
     "uvm_paging": uvm_paging.run,                # UVM oversubscription + paged deltas
     "remote_proxy": remote_proxy.run,            # cross-host transport + reschedule
+    "obs_overhead": obs_overhead.run,            # tracing no-op + emit cost
     "roofline": roofline.run,                    # §Roofline emitter
 }
 
@@ -61,6 +65,10 @@ def main(argv=None) -> int:
     if unknown:
         ap.error(f"unknown benchmark(s) {unknown}; have {sorted(ALL)}")
     names = args.names or list(ALL)
+    # gate-with-tracing-on: CRUM_OBS_DIR in the environment turns the full
+    # observability fabric on for the session (proxies and fork children
+    # inherit it), proving the perf envelope holds while instrumented
+    tracer = obs_trace.enable_from_env("bench")
     print("name,us_per_call,derived")
     failures = []
     for n in names:
@@ -81,10 +89,17 @@ def main(argv=None) -> int:
             "benchmarks": names,
             "failed": failures,
             "rows": ROWS,
+            "obs": {
+                "enabled": tracer is not None,
+                "obs_dir": tracer.obs_dir if tracer else None,
+                "run_id": tracer.run_id if tracer else None,
+                "counters": obs_metrics.REGISTRY.counters_snapshot(),
+            },
         }
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"[bench] wrote {len(ROWS)} rows to {args.json}", flush=True)
+    obs_metrics.dump_if_enabled("bench")
     return 1 if failures else 0
 
 

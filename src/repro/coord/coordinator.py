@@ -22,7 +22,6 @@ the checkpoint root (the auditable "manifest chain" of the cluster).
 """
 from __future__ import annotations
 
-import json
 import os
 import queue
 import socket
@@ -53,6 +52,9 @@ from repro.coord.protocol import (
     MSG_WELCOME,
     Connection,
 )
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.journal import JournalWriter
 
 # NOTE: repro.remote.placement is imported lazily in __init__ — that module
 # (and the rest of repro.remote) builds on the proxy package, whose import
@@ -127,8 +129,9 @@ class Coordinator:
         self._restored_from: dict[int, int | None] = {}
         self._round: _Round | None = None
         self._listener: socket.socket | None = None
-        self._log_path = os.path.join(root, "CLUSTER_LOG.jsonl")
-        self._log_lock = threading.Lock()
+        self._journal = JournalWriter(
+            os.path.join(root, "CLUSTER_LOG.jsonl")
+        )
         # proxy placement (remote device proxies): endpoint registry +
         # worker assignments, mutated only on the event-loop thread
         from repro.remote.placement import PlacementMap
@@ -187,13 +190,11 @@ class Coordinator:
             c.close()
         self._conns.clear()
         self._conn_host.clear()
+        self._journal.close()
 
     # -- journal ---------------------------------------------------------------
     def _log(self, event: str, **fields) -> None:
-        line = {"event": event, "t": time.time(), **fields}
-        with self._log_lock:
-            with open(self._log_path, "a") as f:
-                f.write(json.dumps(line) + "\n")
+        self._journal.write(event, **fields)
 
     # -- the event loop --------------------------------------------------------
     def run(self, *, deadline_s: float = 600.0) -> list[RoundRecord]:
@@ -274,6 +275,8 @@ class Coordinator:
             restored_from=msg.get("restored_from"),
             latest_committed=self.latest_committed,
         )
+        obs_trace.instant("coord.join", host=host,
+                          restored_from=msg.get("restored_from"))
         conn.send(
             MSG_WELCOME, host=host, n_hosts=self.n_hosts,
             latest_committed=self.latest_committed,
@@ -335,6 +338,9 @@ class Coordinator:
             r = self._round = _Round(step=step, opened_at=time.monotonic())
             r.record = RoundRecord(step=step)
             self.rounds.append(r.record)
+            tr = obs_trace.get()
+            if tr is not None:
+                tr.begin("coord.round", step=step)
         if step != r.step:
             # a worker at a different boundary than the open round means the
             # cluster lost lockstep — abort, then re-open at the incoming
@@ -418,6 +424,12 @@ class Coordinator:
         self._round = None
         self._broadcast(MSG_COMMIT, step=rec.step)
         self._log("round", **asdict(rec))
+        obs_metrics.absorb_round(asdict(rec))
+        tr = obs_trace.get()
+        if tr is not None:
+            tr.instant("coord.commit", step=rec.step,
+                       bytes_written=rec.bytes_written)
+            tr.end("coord.round")
         self._gc()
 
     def _abort_round(self, reason: str) -> None:
@@ -431,6 +443,11 @@ class Coordinator:
         self._round = None
         self._broadcast(MSG_ABORT, step=rec.step, reason=reason)
         self._log("round", **asdict(rec))
+        obs_metrics.absorb_round(asdict(rec))
+        tr = obs_trace.get()
+        if tr is not None:
+            tr.instant("coord.abort", step=rec.step, reason=reason)
+            tr.end("coord.round")
         # Partial files (data-h*/hostmeta-h*) stay in the uncommitted step
         # dir — invisible to restore, truncated/overwritten by the retry.
         # Deleting here would race a straggler still writing into the dir.
@@ -471,6 +488,7 @@ class Coordinator:
         self._finished.pop(host, None)
         self._log("death", host=host, reason=reason,
                   latest_committed=self.latest_committed)
+        obs_trace.instant("coord.death", host=host, reason=reason)
         r = self._round
         if r is not None and host in r.record.participants:
             self._abort_round(f"host {host} lost mid-round: {reason}")
@@ -490,7 +508,7 @@ class Coordinator:
 
     @property
     def log_path(self) -> str:
-        return self._log_path
+        return self._journal.path
 
     def aborted_rounds(self) -> list[RoundRecord]:
         return [r for r in self.rounds if r.status == "aborted"]

@@ -23,6 +23,8 @@ from multiprocessing.connection import wait as sentinel_wait
 from repro.coord.coordinator import Coordinator, RoundRecord
 from repro.coord.worker import WorkerConfig, worker_entry
 from repro.core.failure import RestartBudget
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -169,6 +171,7 @@ def run_cluster(
     kill_proxy_host: int | None = None,
     kill_proxy_after_commits: int = 1,
     sweep: bool = True,
+    obs_dir: str | None = None,
 ) -> ClusterReport:
     """One coordinated run: coordinator + N supervised worker processes.
 
@@ -194,6 +197,10 @@ def run_cluster(
         )
     if kill_proxy_host is not None and proxy_hosts < 2:
         raise ValueError("the proxy-host kill drill needs a survivor (>= 2)")
+    if obs_dir:
+        # the launcher hosts the coordinator thread; workers and proxy-host
+        # daemons inherit the obs dir through the exported environment
+        obs_trace.enable(obs_dir, "launcher")
 
     coord = Coordinator(
         root,
@@ -277,6 +284,7 @@ def run_cluster(
         raise coord_result["error"]
 
     swept = coord.sweep_uncommitted() if sweep else []
+    obs_metrics.dump_if_enabled("launcher")
     return ClusterReport(
         n_hosts=n_hosts,
         rounds=coord.rounds,

@@ -35,6 +35,8 @@ from repro.checkpoint.store import ChunkStore
 from repro.core.forked import ForkedCheckpointer
 from repro.core.restore import RestoreManager
 from repro.core.shadow import HostShardView
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.coord.protocol import (
     MSG_ABORT,
     MSG_COMMIT,
@@ -300,6 +302,7 @@ def _recv(conn: Connection, deadline: float) -> dict:
 def worker_entry(cfg: WorkerConfig) -> int:
     """Process entry point (multiprocessing spawn target)."""
     os.environ.setdefault("JAX_PLATFORMS", "cpu")  # simulated hosts are CPU
+    obs_trace.enable_from_env(f"worker{cfg.host}")
     deadline = time.monotonic() + cfg.deadline_s
     conn = connect((cfg.coord_host, cfg.coord_port), timeout=cfg.deadline_s)
     conn.settimeout(cfg.sock_timeout_s)
@@ -382,6 +385,7 @@ def worker_entry(cfg: WorkerConfig) -> int:
         ck.close()
         loop.close()
         conn.close()
+        obs_metrics.dump_if_enabled(f"worker{cfg.host}")
     return 0
 
 
@@ -394,6 +398,24 @@ def _checkpoint_round(
     deadline: float,
 ) -> None:
     """Barrier at a boundary; persist on DRAIN; retry the round on ABORT."""
+    tr = obs_trace.get()
+    if tr is not None:
+        tr.begin("worker.round", step=step, host=cfg.host)
+    try:
+        _checkpoint_round_inner(conn, cfg, ck, state, step, deadline)
+    finally:
+        if tr is not None:
+            tr.end("worker.round")
+
+
+def _checkpoint_round_inner(
+    conn: Connection,
+    cfg: WorkerConfig,
+    ck: ForkedCheckpointer,
+    state,
+    step: int,
+    deadline: float,
+) -> None:
     conn.send(MSG_READY, host=cfg.host, step=step)
     while True:
         msg = _recv(conn, deadline)

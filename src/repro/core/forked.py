@@ -63,6 +63,8 @@ from repro.checkpoint.manifest import (
 from repro.checkpoint.store import ChunkStore
 from repro.core.drain import drain
 from repro.core.shadow import ShadowStateManager
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.utils.timing import Timings
 from repro.utils.tree import flatten_with_paths
 
@@ -294,6 +296,11 @@ class ThreadPersistBackend(PersistBackend):
             result.error = f"{type(e).__name__}: {e}"
         finally:
             result.persist_s = time.perf_counter() - t0
+            tr = obs_trace.get()
+            if tr is not None:
+                tr.complete("ckpt.persist", t0, step=result.step,
+                            backend="thread",
+                            bytes_written=result.bytes_written)
             ck._finish_job(job)
 
     def close(self) -> None:
@@ -396,6 +403,9 @@ class ForkPersistBackend(PersistBackend):
         t0 = time.perf_counter()
         err: str | None = None
         manifest = digests = None
+        # the child inherits the parent's registry at fork: snapshot now so
+        # only what THIS persist adds ships back over the result pipe
+        reg_base = obs_metrics.REGISTRY.counters_snapshot()
 
         def stream_counters() -> None:
             _send_msg(out, {
@@ -425,6 +435,19 @@ class ForkPersistBackend(PersistBackend):
             )
         except Exception as e:
             err = f"{type(e).__name__}: {e}"
+        tr = obs_trace.get()
+        if tr is not None:
+            # emitted in the forked child: the tracer notices the pid
+            # change and writes a shard of its own — the merged timeline
+            # shows the COW persist running beside the training steps
+            tr.complete("ckpt.persist", t0, step=counters.step,
+                        backend="fork", error=err,
+                        bytes_written=counters.bytes_written)
+        obs_metrics.REGISTRY.inc("ckpt_fork_persists_total")
+        obs_metrics.REGISTRY.inc("ckpt_fork_bytes_written",
+                                 counters.bytes_written)
+        obs_metrics.REGISTRY.inc("ckpt_fork_chunks_written",
+                                 counters.chunks_written)
         final: dict[str, Any] = {
             "kind": "final",
             "error": err,
@@ -432,6 +455,9 @@ class ForkPersistBackend(PersistBackend):
             "chunks_written": counters.chunks_written,
             "chunks_reused": counters.chunks_reused,
             "bytes_written": counters.bytes_written,
+            "registry_delta": obs_metrics.counter_delta(
+                reg_base, obs_metrics.REGISTRY.counters_snapshot()
+            ),
         }
         if err is None:
             final["manifest"] = manifest.to_bytes()
@@ -465,6 +491,11 @@ class ForkPersistBackend(PersistBackend):
                 result.chunks_reused = final["chunks_reused"]
                 result.bytes_written = final["bytes_written"]
                 result.persist_s = final["persist_s"]
+                # fold the child's counter delta into this process's
+                # registry — child metrics ride the pipe they always rode
+                obs_metrics.REGISTRY.merge_counters(
+                    final.get("registry_delta") or {}
+                )
                 if final["error"]:
                     result.error = final["error"]
                 else:
@@ -663,6 +694,11 @@ class ForkedCheckpointer:
             result.chunks_clean = stats.chunks_total - stats.chunks_fetched
             result.bytes_skipped = stats.bytes_total - stats.bytes_fetched
             result.blocking_s = time.perf_counter() - t0
+            tr = obs_trace.get()
+            if tr is not None:
+                tr.complete("ckpt.phase1", t0, step=step,
+                            chunks_synced=result.chunks_synced,
+                            bytes_snapshot=result.bytes_snapshot)
 
         job = PersistJob(
             result=result,
@@ -750,6 +786,7 @@ class ForkedCheckpointer:
     def _finish_job(self, job: PersistJob) -> None:
         """Common phase-2 epilogue: timing, buffer release, completion."""
         self.timings.add("ckpt/persist", job.result.persist_s)
+        obs_metrics.absorb_checkpoint_result(job.result)
         with self._lock:
             self._inflight_bases.pop(id(job), None)
         job.shadow.unpin()

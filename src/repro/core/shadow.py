@@ -37,6 +37,7 @@ from repro.checkpoint.chunking import (
     chunk_digest_np,
     num_chunks,
 )
+from repro.obs import trace as obs_trace
 from repro.utils.timing import Timings
 from repro.utils.tree import flatten_with_paths, unflatten_from_paths
 
@@ -387,6 +388,8 @@ class ShadowStateManager:
         (whole-leaf, ordinal-0) paths; sharded leaves fall back to the
         scan, whose chunk indexing is per-shard.
         """
+        tr = obs_trace.get()
+        t0 = time.perf_counter() if tr is not None else 0.0
         if not self._registered:
             self.register(state)
         flat, _ = flatten_with_paths(state)
@@ -413,6 +416,11 @@ class ShadowStateManager:
                 st = self._sync_stream(stream, data, known=known)
                 stats.merge(st)
             stats.leaves += 1
+        if tr is not None:
+            tr.complete("shadow.sync", t0, epoch=stats.epoch,
+                        chunks_fetched=stats.chunks_fetched,
+                        bytes_fetched=stats.bytes_fetched,
+                        prehashed=stats.chunks_prehashed)
         return stats
 
     def _sync_stream(

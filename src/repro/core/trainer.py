@@ -43,6 +43,8 @@ from repro.checkpoint.store import ChunkStore
 from repro.core.forked import CheckpointResult, ForkedCheckpointer
 from repro.core.policy import CheckpointPolicy
 from repro.core.restore import RestoreManager
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.utils.timing import Timings
 
 DEVICE_RUNNERS = ("inline", "proxy")
@@ -212,8 +214,10 @@ class CheckpointedTrainer:
         if managed:
             self._ensure_space(state["device"])
         step = start_step
+        tr = obs_trace.get()
         for _ in range(num_steps):
             batch = next(batches)
+            t0 = time.perf_counter() if tr is not None else 0.0
             with self.timings.measure("train/step"):
                 if managed:
                     # device access: fault the working set in under the
@@ -228,6 +232,8 @@ class CheckpointedTrainer:
                         state["device"], batch
                     )
             step += 1
+            if tr is not None:
+                tr.complete("app.step", t0, step=step)
             state["host"]["step"] = np.int64(step)
             if on_metrics is not None:
                 on_metrics(step, metrics)
@@ -261,10 +267,14 @@ class CheckpointedTrainer:
         step = start_step
         synced_at = start_step - 1
         pending: tuple[int, int] | None = None  # (epoch, boundary step)
+        tr = obs_trace.get()
         for _ in range(num_steps):
             step += 1
+            t0 = time.perf_counter() if tr is not None else 0.0
             with self.timings.measure("train/step"):
                 self.runner.step(step)
+            if tr is not None:
+                tr.complete("app.step", t0, step=step)
             state["host"]["step"] = np.int64(step)
             if pending is not None:
                 res = self.runner.sync_poll(pending[0])
@@ -282,6 +292,8 @@ class CheckpointedTrainer:
                     )
                 with self.timings.measure("train/proxy_sync_begin"):
                     pending = (self.runner.sync_begin(), step)
+                if tr is not None:
+                    tr.instant("app.sync_begin", epoch=pending[0], step=step)
             if stop is not None and stop():
                 break
         if pending is not None:
@@ -364,6 +376,9 @@ class CheckpointedTrainer:
         if self.runner is not None:
             self.runner.close()
         self._gc()  # in-flight persists have committed by now
+        if self.space is not None:
+            obs_metrics.absorb_paging(self.space.stats_dict())
+        obs_metrics.dump_if_enabled("app")
         return list(self.results)
 
 

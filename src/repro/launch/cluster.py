@@ -107,6 +107,10 @@ def main(argv=None) -> int:
                          "boundary so a committed image exists)")
     ap.add_argument("--no-sweep", action="store_true",
                     help="keep aborted/partial step dirs for inspection")
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="enable observability: per-process trace shards and "
+                         "metrics snapshots land here (merge with "
+                         "`python -m repro.obs.report DIR`)")
     args = ap.parse_args(argv)
 
     root = args.ckpt_dir or tempfile.mkdtemp(prefix="crum-cluster-")
@@ -132,6 +136,7 @@ def main(argv=None) -> int:
         proxy_hosts=args.proxy_hosts,
         proxy_transport=args.proxy_transport,
         sweep=not args.no_sweep,
+        obs_dir=args.obs_dir,
     )
 
     if args.restart_at_step is not None and args.hosts_after_restart is None:

@@ -12,6 +12,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +29,7 @@ from repro.core import (
 from repro.data import SyntheticBatches
 from repro.launch.mesh import make_host_mesh, make_production_mesh, use_mesh
 from repro.models import build
+from repro.obs import trace as obs_trace
 from repro.optim import get_optimizer, warmup_cosine
 from repro.runtime.sharding import ShardingRules
 from repro.runtime.steps import make_train_step
@@ -77,7 +79,15 @@ def main(argv=None) -> int:
     ap.add_argument("--no-incremental", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="enable observability: trace shards and metrics "
+                         "snapshots land here (the proxy process inherits "
+                         "the setting; merge with "
+                         "`python -m repro.obs.report DIR`)")
     args = ap.parse_args(argv)
+
+    if args.obs_dir:
+        obs_trace.enable(args.obs_dir, "app")
 
     if args.device_runner == "proxy":
         return _main_proxy(args)
@@ -146,11 +156,15 @@ def main(argv=None) -> int:
         if args.device_capacity is not None:
             return _run_managed(args, trainer, state, start, data, preempt)
 
+        tr = obs_trace.get()
         step = start
         for _ in range(args.steps - start):
+            t0 = time.perf_counter() if tr is not None else 0.0
             batch = jax.tree.map(jnp.asarray, next(data))
             state["device"], metrics = step_fn(state["device"], batch)
             step += 1
+            if tr is not None:
+                tr.complete("app.step", t0, step=step)
             state["host"]["step"] = np.int64(step)
             state["host"]["data"] = data.state()
             if step % args.log_every == 0 or step == args.steps:

@@ -1,0 +1,24 @@
+"""Unified observability fabric — tracing, metrics, journal, leak audit.
+
+One subsystem spanning every process in the CRUM stack:
+
+* :mod:`repro.obs.trace` — per-process Chrome ``trace_event`` shards
+  with correlation IDs (run, step, epoch, incarnation); disabled by
+  default with a zero-allocation no-op path.
+* :mod:`repro.obs.metrics` — one registry absorbing the scattered layer
+  stats (PagingStats, transport wire counters, checkpoint phases,
+  restart budgets) under one snake_case naming scheme.
+* :mod:`repro.obs.journal` — the versioned, typed CLUSTER_LOG.jsonl
+  schema.
+* :mod:`repro.obs.leakcheck` — fd + /dev/shm growth audit for soak runs.
+* :mod:`repro.obs.report` — ``python -m repro.obs.report <run_dir>``
+  merges everything into one Perfetto-loadable trace + summary table.
+
+Enable with ``--obs-dir`` on ``launch/train`` / ``launch/cluster`` (or
+``CRUM_OBS_DIR`` in the environment, which is how child processes
+inherit it).
+"""
+from repro.obs import trace
+from repro.obs.metrics import REGISTRY
+
+__all__ = ["trace", "REGISTRY"]

@@ -1,0 +1,116 @@
+"""fd / shared-memory-segment leak audit — the soak-run exit criterion.
+
+The stack opens a lot of kernel objects per proxy incarnation: sockets,
+MAP_SHARED segment fds, ``/dev/shm`` arenas, API-log fds, trace shards.
+ROADMAP item 5's soak harness exits on "zero fd/segment leaks after an
+N-minute run"; this helper is that check, reusable from any drill:
+
+    with LeakCheck(tolerance=2) as lc:
+        ... 20 kill/respawn cycles ...
+    # raises AssertionError naming the leaked fds / segments
+
+Snapshots are taken from ``/proc/self/fd`` (symlink targets, so the
+report names *what* leaked, not just how many) and the ``/dev/shm``
+listing. On platforms without ``/proc`` the check degrades to a no-op
+rather than a false failure.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["ResourceSnapshot", "LeakCheck"]
+
+_FD_DIR = "/proc/self/fd"
+_SHM_DIR = "/dev/shm"
+
+
+class ResourceSnapshot:
+    def __init__(self, fds: dict[int, str] | None, shm: set[str] | None):
+        self.fds = fds
+        self.shm = shm
+
+    @classmethod
+    def capture(cls) -> "ResourceSnapshot":
+        fds: dict[int, str] | None = None
+        try:
+            fds = {}
+            for entry in os.listdir(_FD_DIR):
+                try:
+                    fds[int(entry)] = os.readlink(f"{_FD_DIR}/{entry}")
+                except OSError:
+                    pass  # the listdir fd itself / raced closes
+        except OSError:
+            fds = None
+        shm: set[str] | None = None
+        try:
+            shm = set(os.listdir(_SHM_DIR))
+        except OSError:
+            shm = None
+        return cls(fds, shm)
+
+    @property
+    def supported(self) -> bool:
+        return self.fds is not None
+
+
+class LeakCheck:
+    """Before/after resource audit; assert no growth at exit."""
+
+    def __init__(self, tolerance: int = 0, shm_tolerance: int = 0):
+        self.tolerance = tolerance
+        self.shm_tolerance = shm_tolerance
+        self.before: ResourceSnapshot | None = None
+        self.after: ResourceSnapshot | None = None
+
+    def start(self) -> "LeakCheck":
+        self.before = ResourceSnapshot.capture()
+        return self
+
+    def stop(self) -> "LeakCheck":
+        self.after = ResourceSnapshot.capture()
+        return self
+
+    def diff(self) -> dict:
+        assert self.before is not None, "call start() first"
+        if self.after is None:
+            self.stop()
+        b, a = self.before, self.after
+        if not (b.supported and a.supported):
+            return {"supported": False, "fd_growth": 0, "new_fds": [],
+                    "shm_growth": 0, "new_shm": []}
+        new_fds = sorted(
+            f"{n} -> {tgt}"
+            for n, tgt in a.fds.items()
+            if n not in b.fds
+        )
+        new_shm = sorted((a.shm or set()) - (b.shm or set()))
+        return {
+            "supported": True,
+            "fd_growth": len(a.fds) - len(b.fds),
+            "new_fds": new_fds,
+            "shm_growth": len(a.shm or ()) - len(b.shm or ()),
+            "new_shm": new_shm,
+        }
+
+    def assert_no_growth(self, note: str = "") -> None:
+        d = self.diff()
+        if not d["supported"]:
+            return
+        prefix = f"[leakcheck{': ' + note if note else ''}] "
+        assert d["fd_growth"] <= self.tolerance, (
+            prefix + f"fd count grew by {d['fd_growth']} "
+            f"(> tolerance {self.tolerance}); new fds: {d['new_fds']}"
+        )
+        assert d["shm_growth"] <= self.shm_tolerance, (
+            prefix + f"/dev/shm grew by {d['shm_growth']} "
+            f"(> tolerance {self.shm_tolerance}); new: {d['new_shm']}"
+        )
+
+    def __enter__(self) -> "LeakCheck":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop()
+        if exc_type is None:
+            self.assert_no_growth()
+        return False

@@ -1,0 +1,316 @@
+"""Run-dir reporter — merge shards into one Perfetto trace + summary.
+
+    PYTHONPATH=src python -m repro.obs.report <run_dir>
+    PYTHONPATH=src python -m repro.obs.report <run_dir> --check   # CI
+
+Inputs found under ``<run_dir>`` (the ``--obs-dir`` of a run):
+
+* ``trace-<process>-<pid>.jsonl`` — per-process trace_event shards,
+* ``metrics-<process>-<pid>.json`` — per-process registry snapshots,
+* ``CLUSTER_LOG.jsonl`` — coordinator journal (also looked up one level
+  up, where ``launch/cluster`` keeps it) — journal records become
+  instants on a synthetic "cluster-journal" track so commits/deaths line
+  up against the process timelines.
+
+Outputs: ``<run_dir>/merged.trace.json`` (open in https://ui.perfetto.dev
+or chrome://tracing) and a text summary — per-span p50/p99, stall ratio,
+fault/eviction rates, wire vs dirty bytes.
+
+``--check`` additionally validates the merged trace against the
+trace_event schema (required keys per phase, balanced ``B``/``E``
+nesting per (pid, tid) in every shard) and exits non-zero on violation —
+the CI teeth for satellite "trace correctness".
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.obs.journal import read_journal
+
+# Synthetic pid for the journal track — far outside real pid ranges.
+JOURNAL_PID = 99999999
+
+_REQUIRED = ("name", "ph", "ts")
+_PHASES = {"B", "E", "X", "i", "I", "C", "M"}
+
+
+def load_shards(run_dir: str) -> tuple[list[dict], list[str]]:
+    """All events from every trace-*.jsonl shard; skips torn lines."""
+    events: list[dict] = []
+    shards = sorted(glob.glob(os.path.join(run_dir, "trace-*.jsonl")))
+    for path in shards:
+        with open(path, encoding="utf-8", errors="replace") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    ev = json.loads(line)
+                except ValueError:
+                    continue  # torn tail (SIGKILL mid-write)
+                if isinstance(ev, dict):
+                    ev["_shard"] = os.path.basename(path)
+                    events.append(ev)
+    return events, shards
+
+
+def find_journal(run_dir: str, explicit: str | None = None) -> str | None:
+    for cand in (
+        explicit,
+        os.path.join(run_dir, "CLUSTER_LOG.jsonl"),
+        os.path.join(os.path.dirname(os.path.abspath(run_dir)),
+                     "CLUSTER_LOG.jsonl"),
+    ):
+        if cand and os.path.exists(cand):
+            return cand
+    return None
+
+
+def journal_events(journal_path: str) -> list[dict]:
+    """Coordinator journal records → instants on a synthetic track."""
+    out: list[dict] = [
+        {
+            "name": "process_name",
+            "ph": "M",
+            "pid": JOURNAL_PID,
+            "tid": 0,
+            "ts": 0,
+            "args": {"name": "cluster-journal"},
+        }
+    ]
+    for rec in read_journal(journal_path):
+        args = {k: v for k, v in vars(rec).items()
+                if k not in ("extra", "schema") and v not in (None, [], "")}
+        args.update(rec.extra)
+        out.append(
+            {
+                "name": f"journal.{rec.event}",
+                "ph": "i",
+                "s": "p",
+                "pid": JOURNAL_PID,
+                "tid": 0,
+                "ts": int(rec.t * 1e6),
+                "args": args,
+            }
+        )
+    return out
+
+
+def merge_metrics(run_dir: str) -> dict:
+    """Sum per-process registry snapshots into one run-level view."""
+    counters: dict[str, float] = {}
+    gauges: dict[str, float] = {}
+    processes: list[str] = []
+    for path in sorted(glob.glob(os.path.join(run_dir, "metrics-*.json"))):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            continue
+        processes.append(str(doc.get("process") or
+                             os.path.basename(path)))
+        for k, v in (doc.get("counters") or {}).items():
+            if isinstance(v, (int, float)):
+                counters[k] = counters.get(k, 0) + v
+        for k, v in (doc.get("gauges") or {}).items():
+            if isinstance(v, (int, float)):
+                # gauges are per-process cumulative values: sum across
+                # processes gives the run total (e.g. uvm_faults per space)
+                gauges[k] = gauges.get(k, 0) + v
+    return {"counters": counters, "gauges": gauges, "processes": processes}
+
+
+# -- validation -------------------------------------------------------------
+
+
+def validate_events(events: list[dict]) -> list[str]:
+    """trace_event schema + nesting problems (empty list = valid)."""
+    problems: list[str] = []
+    stacks: dict[tuple, list[str]] = {}
+    for i, ev in enumerate(events):
+        where = f"event {i} ({ev.get('_shard', '?')})"
+        for k in _REQUIRED:
+            if k not in ev:
+                problems.append(f"{where}: missing {k!r}")
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            problems.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if ph != "M" and ("pid" not in ev or "tid" not in ev):
+            problems.append(f"{where}: missing pid/tid")
+            continue
+        if ph == "X" and not isinstance(ev.get("dur"), (int, float)):
+            problems.append(f"{where}: X event without numeric dur")
+        key = (ev.get("pid"), ev.get("tid"))
+        if ph == "B":
+            stacks.setdefault(key, []).append(ev.get("name", ""))
+        elif ph == "E":
+            stack = stacks.setdefault(key, [])
+            if not stack:
+                problems.append(
+                    f"{where}: orphaned E {ev.get('name')!r} on {key}"
+                )
+            else:
+                stack.pop()
+    for key, stack in stacks.items():
+        if stack:
+            problems.append(f"unclosed B events on {key}: {stack}")
+    return problems
+
+
+# -- summary ----------------------------------------------------------------
+
+
+def _pct(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+    return sorted_vals[idx]
+
+
+def span_durations(events: list[dict]) -> dict[str, list[float]]:
+    """Per-name duration samples (µs) from X events and matched B/E pairs."""
+    durs: dict[str, list[float]] = {}
+    open_b: dict[tuple, list[dict]] = {}
+    for ev in sorted(events, key=lambda e: e.get("ts", 0)):
+        ph = ev.get("ph")
+        if ph == "X":
+            durs.setdefault(ev.get("name", "?"), []).append(
+                float(ev.get("dur", 0))
+            )
+        elif ph == "B":
+            open_b.setdefault((ev.get("pid"), ev.get("tid")), []).append(ev)
+        elif ph == "E":
+            stack = open_b.get((ev.get("pid"), ev.get("tid")))
+            if stack:
+                b = stack.pop()
+                durs.setdefault(b.get("name", "?"), []).append(
+                    float(ev.get("ts", 0)) - float(b.get("ts", 0))
+                )
+    return durs
+
+
+def summarize(events: list[dict], metrics: dict) -> str:
+    durs = span_durations(events)
+    lines: list[str] = []
+    lines.append(f"{'span':<28}{'count':>8}{'p50_us':>12}{'p99_us':>12}"
+                 f"{'total_ms':>12}")
+    for name in sorted(durs):
+        vals = sorted(durs[name])
+        lines.append(
+            f"{name:<28}{len(vals):>8}{_pct(vals, 0.5):>12.0f}"
+            f"{_pct(vals, 0.99):>12.0f}{sum(vals) / 1e3:>12.1f}"
+        )
+
+    c = metrics.get("counters", {})
+    g = metrics.get("gauges", {})
+    step_total = sum(durs.get("app.step", [])) or sum(
+        durs.get("proxy.step", [])
+    )
+    stall_total = sum(durs.get("app.sync_stall", []))
+    lines.append("")
+    lines.append("derived:")
+    if step_total:
+        lines.append(
+            f"  stall_ratio            {stall_total / step_total:.4f}  "
+            f"(sync stall / step time)"
+        )
+    steps = len(durs.get("proxy.step", [])) or len(durs.get("app.step", []))
+    faults = g.get("uvm_faults", 0)
+    evictions = g.get("uvm_evictions", 0)
+    if steps:
+        lines.append(f"  uvm_faults_per_step    {faults / steps:.2f}")
+        lines.append(f"  uvm_evictions_per_step {evictions / steps:.2f}")
+    wire = g.get("transport_wire_tx", 0) + g.get("transport_wire_rx", 0)
+    dirty = c.get("proxy_bytes_synced", 0) or c.get("ckpt_bytes_written", 0)
+    if wire or dirty:
+        ratio = f"  ({wire / dirty:.3f}x)" if dirty else ""
+        lines.append(
+            f"  wire_bytes vs dirty    {int(wire)} / {int(dirty)}{ratio}"
+        )
+    restarts = c.get("proxy_restarts", 0)
+    if restarts:
+        lines.append(f"  proxy_restarts         {int(restarts)}")
+    rounds = c.get("coord_rounds_total", 0)
+    if rounds:
+        lines.append(
+            f"  coord_rounds           {int(rounds)} "
+            f"({int(c.get('coord_rounds_committed', 0))} committed)"
+        )
+    if metrics.get("processes"):
+        lines.append(
+            f"  metric sources         {', '.join(metrics['processes'])}"
+        )
+    return "\n".join(lines)
+
+
+# -- entry point ------------------------------------------------------------
+
+
+def merge(run_dir: str, journal: str | None = None,
+          out: str | None = None) -> tuple[str, list[dict], dict]:
+    events, shards = load_shards(run_dir)
+    jpath = find_journal(run_dir, journal)
+    if jpath:
+        events.extend(journal_events(jpath))
+    events.sort(key=lambda e: e.get("ts", 0))
+    metrics = merge_metrics(run_dir)
+    out = out or os.path.join(run_dir, "merged.trace.json")
+    doc = {
+        "traceEvents": [
+            {k: v for k, v in ev.items() if k != "_shard"} for ev in events
+        ],
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "schema": "crum-trace/1",
+            "shards": [os.path.basename(s) for s in shards],
+            "journal": jpath,
+            "metrics": metrics,
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, default=str)
+    return out, events, metrics
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("run_dir", help="obs dir holding trace-*.jsonl shards")
+    ap.add_argument("--journal", default=None,
+                    help="explicit CLUSTER_LOG.jsonl path")
+    ap.add_argument("--out", default=None,
+                    help="merged trace path (default <run_dir>/merged.trace.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate trace_event schema + span nesting; "
+                         "exit non-zero on violation")
+    args = ap.parse_args(argv)
+
+    if not os.path.isdir(args.run_dir):
+        print(f"[obs] no such run dir: {args.run_dir}", file=sys.stderr)
+        return 2
+    out, events, metrics = merge(args.run_dir, args.journal, args.out)
+    n_shard_events = sum(1 for e in events if "_shard" in e)
+    print(f"[obs] merged {n_shard_events} events -> {out}")
+    print(summarize(events, metrics))
+    if args.check:
+        problems = validate_events(events)
+        if problems:
+            for p in problems[:50]:
+                print(f"[obs] INVALID: {p}", file=sys.stderr)
+            print(f"[obs] trace validation FAILED "
+                  f"({len(problems)} problem(s))", file=sys.stderr)
+            return 1
+        print(f"[obs] trace validation OK ({n_shard_events} events, "
+              f"{len(metrics.get('processes', []))} metric shards)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,6 +40,8 @@ from typing import Any, Iterator
 
 import msgpack
 
+from repro.obs import metrics as obs_metrics
+
 _LEN = struct.Struct("<I")
 MAX_RECORD = 64 << 20  # a single log record this large is a bug
 
@@ -64,6 +66,8 @@ class ApiLog:
         self._f.flush()
         if self.fsync:
             os.fsync(self._f.fileno())
+        obs_metrics.REGISTRY.inc("apilog_records_total")
+        obs_metrics.REGISTRY.inc("apilog_bytes_total", len(data))
 
     def close(self) -> None:
         if not self._f.closed:

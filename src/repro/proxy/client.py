@@ -29,6 +29,7 @@ import socket
 import time
 from typing import Any, Callable
 
+from repro.obs import trace as obs_trace
 from repro.proxy.protocol import (
     MSG_CHUNKS,
     MSG_ERR,
@@ -100,8 +101,11 @@ class DeviceProxy:
         listener.bind(("127.0.0.1", 0))
         listener.listen(1)
         host, port = listener.getsockname()
+        tr = obs_trace.get()
         cfg = ProxyServiceConfig(
-            host=host, port=port, jax_platforms=self.jax_platforms
+            host=host, port=port, jax_platforms=self.jax_platforms,
+            obs_dir=tr.obs_dir if tr is not None else None,
+            obs_run=tr.run_id if tr is not None else None,
         )
         self.proc = self.ctx.Process(
             target=proxy_entry, args=(cfg,), name=self.name, daemon=True
@@ -170,6 +174,7 @@ class DeviceProxy:
         if self.conn is not None:
             self.conn.close()
             self.conn = None
+        obs_trace.instant("proxy.died", why=why)
         err = ProxyDiedError(why)
         err.__cause__ = cause
         return err

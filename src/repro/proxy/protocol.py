@@ -110,3 +110,9 @@ class ProxyServiceConfig:
     port: int
     jax_platforms: str | None = "cpu"
     sock_timeout_s: float = 1.0
+    # observability (not part of the replayable state — a respawn works
+    # with or without it): where to write this incarnation's trace shard.
+    # Normally inherited via CRUM_OBS_DIR; explicit here for spawn paths
+    # whose environment is scrubbed.
+    obs_dir: str | None = None
+    obs_run: str | None = None

@@ -29,6 +29,8 @@ import socket
 import time
 from typing import Any
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.proxy.protocol import (
     MSG_ERR,
     MSG_CHUNKS,
@@ -51,6 +53,11 @@ def proxy_entry(cfg: ProxyServiceConfig) -> int:
     """Process entry point (multiprocessing spawn target, local mode)."""
     if cfg.jax_platforms:
         os.environ.setdefault("JAX_PLATFORMS", cfg.jax_platforms)
+    if cfg.obs_dir:
+        obs_trace.enable(cfg.obs_dir, "proxy", run_id=cfg.obs_run,
+                         set_env=False)
+    else:
+        obs_trace.enable_from_env("proxy")
     conn = connect((cfg.host, cfg.port), timeout=60.0)
     conn.settimeout(cfg.sock_timeout_s)
     service = ProxyService(conn)
@@ -58,6 +65,7 @@ def proxy_entry(cfg: ProxyServiceConfig) -> int:
         service.serve()
     finally:
         conn.close()
+        obs_metrics.dump_if_enabled("proxy")
     return 0
 
 
@@ -91,6 +99,9 @@ class ProxyService:
         # boundary work (reported in SYNCED phase_us)
         self._win_step_us = 0.0
         self._win_steps = 0
+        # incarnation number (REGISTER obs field): tags every step/sync
+        # span so a merged trace separates replayed work from first runs
+        self._obs_inc = 0
 
     def serve(self) -> None:
         while True:
@@ -158,6 +169,10 @@ class ProxyService:
         self.last_step = int(msg["step"])
         self._win_step_us += (time.perf_counter() - t0) * 1e6
         self._win_steps += 1
+        tr = obs_trace.get()
+        if tr is not None:
+            tr.complete("proxy.step", t0, step=self.last_step,
+                        inc=self._obs_inc)
 
     # -- state-creating calls (the replayed ones) ------------------------------
     def _on_program(self, msg: dict) -> None:
@@ -170,6 +185,13 @@ class ProxyService:
         from repro.core.shadow import ShadowStateManager
         from repro.remote.transport import make_proxy_table
 
+        obs = msg.get("obs") or {}
+        self._obs_inc = int(obs.get("inc") or 0)
+        if obs.get("dir"):
+            # a thread-hosted session (remote daemon) may serve a run it
+            # was not spawned by — the REGISTER frame carries the obs dir
+            obs_trace.enable(obs["dir"], "proxy", run_id=obs.get("run"),
+                             set_env=False)
         self.transport = msg.get("transport", "segment")
         self.table = make_proxy_table(msg)
         self.fused_digests = bool(msg.get("fused_digests"))
@@ -210,6 +232,7 @@ class ProxyService:
         return self.space.peek_state() if self.space is not None else self.dstate
 
     def _on_upload(self, msg: dict) -> None:
+        t0 = time.perf_counter()
         # streamed transport: the payload follows the UPLOAD frame as
         # exactly n_frames CHUNKS frames — land them in the table first,
         # then ingest from the table exactly like the segment path
@@ -227,6 +250,10 @@ class ProxyService:
         chunks = msg.get("chunks")
         if self.space is not None and chunks is not None:
             self._delta_upload_into_space(msg, chunks)
+            tr = obs_trace.get()
+            if tr is not None:
+                tr.complete("proxy.upload", t0, step=self.last_step,
+                            inc=self._obs_inc, delta=True)
             return
         state = self._device_view()
         if chunks is not None:
@@ -254,6 +281,11 @@ class ProxyService:
             bytes_uploaded=stats.bytes_uploaded,
             chunks_uploaded=stats.chunks_uploaded,
         )
+        tr = obs_trace.get()
+        if tr is not None:
+            tr.complete("proxy.upload", t0, step=self.last_step,
+                        inc=self._obs_inc,
+                        bytes_uploaded=stats.bytes_uploaded)
 
     def _delta_upload_into_space(self, msg: dict, chunks: dict) -> None:
         """Chunk-delta upload into a paged device: splice ONLY the uploaded
@@ -357,6 +389,21 @@ class ProxyService:
             bytes_synced=stats.bytes_fetched,
             **fields,
         )
+        tr = obs_trace.get()
+        if tr is not None:
+            tr.complete(
+                "proxy.sync", t0, step=self.last_step,
+                inc=self._obs_inc,
+                epoch=fields.get("epoch"),
+                chunks_synced=stats.chunks_fetched,
+                bytes_synced=stats.bytes_fetched,
+            )
+            paging = fields.get("paging")
+            if paging:
+                tr.counter("uvm", **{
+                    k: v for k, v in paging.items()
+                    if isinstance(v, (int, float)) and not isinstance(v, bool)
+                })
 
 
 # Backwards-compatible alias (pre-remote name)

@@ -39,6 +39,8 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core.failure import RestartBudget
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.proxy.api_log import ApiLog
 from repro.proxy.client import DeviceProxy
 from repro.proxy.protocol import ProxyDiedError
@@ -395,9 +397,21 @@ class ProxyRunner:
             "restarts": self.budget.count,
             "transport": self.transport.stats(),
         }
-        for key in ("wire_bytes", "paging", "phase_us"):
+        for key in ("wire_bytes", "raw_bytes", "paging", "phase_us"):
             if key in msg:
                 info[key] = msg[key]
+        # one registry absorbs the whole SYNCED summary — paging counters,
+        # wire counters and phase breakdown ride the frame they always rode
+        obs_metrics.absorb_sync_info(info)
+        tr = obs_trace.get()
+        if tr is not None and stall_us:
+            # backdated span: the boundary stalled [now - stall_us, now]
+            tr.complete(
+                "app.sync_stall",
+                time.perf_counter() - stall_us / 1e6,
+                epoch=epoch,
+                step=self.last_synced_step,
+            )
         return self._last_state, info
 
     # -- failure drills ------------------------------------------------------------
@@ -436,6 +450,11 @@ class ProxyRunner:
         self.proxy = DeviceProxy(endpoint=endpoint, **self._proxy_opts).start()
         self.proxy.on_data = self.transport.on_chunks
         self.proxy.send_program(self.program_spec)
+        # correlation IDs ride the REGISTER frame: the service tags its
+        # step/sync spans with this incarnation number, so a merged trace
+        # separates pre-kill execution from post-respawn replay (and a
+        # remote daemon learns the obs dir for runs it was not spawned by)
+        tr = obs_trace.get()
         self.proxy.register(
             **self.transport.register_fields(),
             chunk_bytes=self.chunk_bytes,
@@ -445,6 +464,11 @@ class ProxyRunner:
             promote_threshold=self.promote_threshold,
             promote_window=self.promote_window,
             fused_digests=self.fused_digests,
+            obs={
+                "inc": self.budget.count,
+                "run": tr.run_id if tr is not None else None,
+                "dir": tr.obs_dir if tr is not None else None,
+            },
         )
         self.proxy.upload(
             step=self.last_synced_step,
@@ -472,6 +496,30 @@ class ProxyRunner:
         than aborting while budget remains."""
         t0 = time.perf_counter()
         attempt = 0
+        tr = obs_trace.get()
+        if tr is not None:
+            tr.begin("proxy.respawn", resumed_from=self.last_synced_step)
+        try:
+            steps = self._recover_loop(attempt)
+        finally:
+            if tr is not None:
+                tr.end("proxy.respawn")
+        obs_metrics.REGISTRY.inc("proxy_restarts")
+        if tr is not None:
+            tr.instant("proxy.replayed", steps=len(steps),
+                       inc=self.budget.count,
+                       resumed_from=self.last_synced_step)
+        # the fresh incarnation re-executed exactly the steps past the
+        # last watermark: the mirror is stale by that many steps again
+        self._steps_since_sync = len(steps)
+        self.recoveries.append({
+            "recovery_s": time.perf_counter() - t0,
+            "replayed_steps": len(steps),
+            "resumed_from_step": self.last_synced_step,
+            "endpoint": getattr(self.proxy, "endpoint", None),
+        })
+
+    def _recover_loop(self, attempt: int) -> list[int]:
         while True:
             self.budget.spend(f"last synced step {self.last_synced_step}")
             old = self.proxy
@@ -491,8 +539,7 @@ class ProxyRunner:
             if self._last_state is not None:
                 self.transport.stage(self._last_state, None)
             try:
-                steps = self._spawn_and_replay(failed=True)
-                break
+                return self._spawn_and_replay(failed=True)
             except ProxyDiedError:
                 # the fresh incarnation died too: release its socket (and
                 # local process, if any) before the next attempt
@@ -500,12 +547,3 @@ class ProxyRunner:
                     self.proxy.close(graceful=False)
                     self.proxy = None
                 continue
-        # the fresh incarnation re-executed exactly the steps past the
-        # last watermark: the mirror is stale by that many steps again
-        self._steps_since_sync = len(steps)
-        self.recoveries.append({
-            "recovery_s": time.perf_counter() - t0,
-            "replayed_steps": len(steps),
-            "resumed_from_step": self.last_synced_step,
-            "endpoint": getattr(self.proxy, "endpoint", None),
-        })

@@ -44,6 +44,7 @@ def serve_forever(cfg: ProxyHostConfig, port_q=None, on_bound=None) -> None:
     if cfg.jax_platforms:
         os.environ.setdefault("JAX_PLATFORMS", cfg.jax_platforms)
     from repro.coord.protocol import Connection
+    from repro.obs import trace as obs_trace
     from repro.proxy.service import ProxyService
 
     listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -51,6 +52,7 @@ def serve_forever(cfg: ProxyHostConfig, port_q=None, on_bound=None) -> None:
     listener.bind((cfg.bind, cfg.port))
     listener.listen(64)
     port = listener.getsockname()[1]
+    obs_trace.enable_from_env(f"proxyhost-{port}")
     if port_q is not None:
         port_q.put(port)
     else:
@@ -62,10 +64,12 @@ def serve_forever(cfg: ProxyHostConfig, port_q=None, on_bound=None) -> None:
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         conn = Connection(sock)
         conn.settimeout(cfg.sock_timeout_s)
+        obs_trace.instant("host.session_open", port=port)
         try:
             ProxyService(conn).serve()
         finally:
             conn.close()
+            obs_trace.instant("host.session_close", port=port)
 
     while True:
         try:

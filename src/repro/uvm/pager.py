@@ -67,6 +67,11 @@ class PagingStats:
         d["faults"] = self.faults
         return d
 
+    def canonical(self) -> dict:
+        """Registry-form counters: the one snake_case scheme every layer
+        emits through (``uvm_<metric>``; see repro.obs.metrics)."""
+        return {f"uvm_{k}": v for k, v in self.as_dict().items()}
+
 
 class EvictionPolicy:
     """Victim selection over device frames. Frames are identified by index

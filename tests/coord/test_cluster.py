@@ -20,11 +20,18 @@ def _read_log(path):
 
 
 def test_happy_path_two_hosts(tmp_path):
+    from repro.obs.leakcheck import LeakCheck
+
     root = str(tmp_path / "cluster")
-    report = run_cluster(
-        root=root, n_hosts=2, total_steps=4, ckpt_every=2,
-        backend="thread", loop="numpy", deadline_s=180.0,
-    )
+    # the launcher must not accrete fds or /dev/shm segments across a
+    # full coordinator round-trip (workers are separate processes; their
+    # sockets, queues and sentinels all close with the run)
+    with LeakCheck(tolerance=4, shm_tolerance=2) as lc:
+        report = run_cluster(
+            root=root, n_hosts=2, total_steps=4, ckpt_every=2,
+            backend="thread", loop="numpy", deadline_s=180.0,
+        )
+    assert lc.diff()["fd_growth"] <= 4
     assert [r.step for r in report.committed] == [2, 4]
     assert report.aborted == []
     assert report.latest_committed == 4

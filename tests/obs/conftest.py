@@ -1,0 +1,13 @@
+"""Observability tests mutate process-global state (the module tracer,
+the metrics registry, CRUM_OBS_* env) — restore all of it per test."""
+import pytest
+
+from repro.obs import trace
+from repro.obs.metrics import REGISTRY
+
+
+@pytest.fixture(autouse=True)
+def _obs_hygiene():
+    yield
+    trace.disable()  # closes the shard fd and pops CRUM_OBS_DIR/_RUN
+    REGISTRY.reset()

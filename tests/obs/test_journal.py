@@ -1,0 +1,99 @@
+"""CLUSTER_LOG.jsonl schema round-trip — every record kind the
+coordinator writes parses back into its typed dataclass."""
+import json
+
+from repro.obs import journal as j
+
+
+def _roundtrip(tmp_path, event, **fields):
+    path = str(tmp_path / "CLUSTER_LOG.jsonl")
+    w = j.JournalWriter(path)
+    w.write(event, **fields)
+    w.close()
+    recs = j.read_journal(path)
+    assert len(recs) == 1
+    return recs[0]
+
+
+def test_round_roundtrip(tmp_path):
+    rec = _roundtrip(
+        tmp_path, "round", step=6, status="committed", reason="",
+        participants=[0, 1], acked=[0, 1], stragglers=[], commit_s=0.02,
+        round_s=0.5, persist_s_max=0.3, bytes_written=4096,
+        chunks_synced=4, chunks_clean=12, bytes_skipped=12288,
+        sync_us=800.0, digest_us=0.0, fetch_us=120.0, stall_us=40.0,
+    )
+    assert isinstance(rec, j.RoundLine)
+    assert rec.schema == j.JOURNAL_SCHEMA
+    assert rec.committed and rec.step == 6 and rec.acked == [0, 1]
+    assert rec.bytes_written == 4096 and rec.extra == {}
+    assert rec.t > 0
+
+
+def test_all_other_kinds_roundtrip(tmp_path):
+    cases = {
+        "join": dict(host=1, pid=4242, restored_from=3, latest_committed=3),
+        "death": dict(host=2, reason="heartbeat", latest_committed=3),
+        "finished": dict(host=0, step=9, digest="abc123"),
+        "shutdown": dict(finished=[0, 1, 2]),
+        "proxy_endpoint": dict(name="ph0", addr="127.0.0.1", port=7070),
+        "proxy_placement": dict(worker=1, name="ph0", rescheduled=True),
+        "proxy_host_death": dict(name="ph0", worker=1),
+    }
+    path = str(tmp_path / "CLUSTER_LOG.jsonl")
+    w = j.JournalWriter(path)
+    for event, fields in cases.items():
+        w.write(event, **fields)
+    w.close()
+    recs = j.read_journal(path)
+    assert [r.event for r in recs] == list(cases)
+    for rec, (event, fields) in zip(recs, cases.items()):
+        assert type(rec) is j.RECORD_TYPES[event]
+        for k, v in fields.items():
+            assert getattr(rec, k) == v, (event, k)
+        assert rec.extra == {}
+
+
+def test_unknown_event_and_fields_are_tolerated(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    w = j.JournalWriter(path)
+    w.write("someday_event", payload=1)
+    w.write("join", host=0, brand_new_field="v1.1")
+    w.close()
+    generic, join = j.read_journal(path)
+    assert type(generic) is j.JournalRecord
+    assert generic.extra["payload"] == 1
+    assert isinstance(join, j.JoinLine) and join.host == 0
+    assert join.extra == {"brand_new_field": "v1.1"}  # reader survives writer v1.1
+
+
+def test_legacy_schemaless_and_torn_lines(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    with open(path, "w") as f:
+        # pre-versioning line: no schema, no t
+        f.write(json.dumps({"event": "death", "host": 1, "reason": "old"}) + "\n")
+        f.write('{"event": "round", "step": 3, "stat')  # SIGKILL tail
+    recs = j.read_journal(path)
+    assert len(recs) == 1
+    assert isinstance(recs[0], j.DeathLine)
+    assert recs[0].schema == j.JOURNAL_SCHEMA  # legacy defaults to v1
+    assert recs[0].reason == "old"
+
+
+def test_rounds_helper(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    w = j.JournalWriter(path)
+    w.write("join", host=0)
+    w.write("round", step=2, status="committed")
+    w.write("round", step=4, status="aborted", reason="death")
+    w.close()
+    rs = j.rounds(path)
+    assert [r.step for r in rs] == [2, 4]
+    assert [r.committed for r in rs] == [True, False]
+
+
+def test_writer_never_raises_after_close(tmp_path):
+    w = j.JournalWriter(str(tmp_path / "log.jsonl"))
+    w.close()
+    w.write("round", step=1)  # EBADF swallowed
+    w.close()                 # idempotent

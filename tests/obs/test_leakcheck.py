@@ -1,0 +1,65 @@
+"""LeakCheck unit tests (Linux-only where /proc is required)."""
+import os
+
+import pytest
+
+from repro.obs.leakcheck import LeakCheck, ResourceSnapshot
+
+needs_proc = pytest.mark.skipif(
+    not os.path.isdir("/proc/self/fd"), reason="needs /proc (Linux)"
+)
+
+
+@needs_proc
+def test_clean_region_passes(tmp_path):
+    with LeakCheck():
+        with open(tmp_path / "f", "w") as f:
+            f.write("x")  # opened AND closed inside: no growth
+
+
+@needs_proc
+def test_fd_leak_detected_and_named(tmp_path):
+    lc = LeakCheck().start()
+    leaked = open(tmp_path / "leaky", "w")  # noqa: SIM115
+    try:
+        with pytest.raises(AssertionError, match="leaky"):
+            lc.assert_no_growth("unit")
+        d = lc.diff()
+        assert d["fd_growth"] >= 1
+        assert any("leaky" in s for s in d["new_fds"])
+    finally:
+        leaked.close()
+
+
+@needs_proc
+def test_tolerance_allows_jitter(tmp_path):
+    lc = LeakCheck(tolerance=1).start()
+    leaked = open(tmp_path / "one", "w")  # noqa: SIM115
+    try:
+        lc.stop()
+        lc.assert_no_growth()  # 1 fd <= tolerance 1
+    finally:
+        leaked.close()
+
+
+@needs_proc
+def test_exception_passthrough_skips_assert():
+    # a failing drill must surface ITS error, not a secondary leak report
+    with pytest.raises(RuntimeError, match="drill failed"):
+        with LeakCheck():
+            f = open("/dev/null")  # noqa: SIM115
+            try:
+                raise RuntimeError("drill failed")
+            finally:
+                f.close()
+
+
+def test_unsupported_platform_degrades_to_noop(monkeypatch):
+    import repro.obs.leakcheck as lk
+
+    monkeypatch.setattr(lk, "_FD_DIR", "/nonexistent-proc/fd")
+    monkeypatch.setattr(lk, "_SHM_DIR", "/nonexistent-shm")
+    snap = ResourceSnapshot.capture()
+    assert not snap.supported
+    with LeakCheck():
+        pass  # no false failure without /proc

@@ -1,0 +1,117 @@
+"""Registry unit tests + the canonical absorption helpers."""
+import json
+from types import SimpleNamespace
+
+from repro.obs import metrics as m
+from repro.obs import trace
+
+
+def test_counters_gauges_hists():
+    r = m.Registry()
+    r.inc("a")
+    r.inc("a", 4)
+    r.set("g", 10)
+    r.set("g", 3)  # latest wins
+    for v in range(100):
+        r.observe("h", v)
+    assert r.counters_snapshot() == {"a": 5}
+    snap = r.snapshot()
+    assert snap["schema"] == m.METRICS_SCHEMA
+    assert snap["gauges"] == {"g": 3}
+    h = snap["hists"]["h"]
+    assert h["count"] == 100 and h["max"] == 99
+    assert 45 <= h["p50"] <= 55 and h["p99"] >= 95
+
+
+def test_hist_decimation_bounds_memory():
+    r = m.Registry()
+    for v in range(m._HIST_CAP * 3):
+        r.observe("h", v)
+    assert len(r._hists["h"]) < m._HIST_CAP
+    # the spread survives decimation: max is recent, p50 mid-range
+    s = r.hist_summary("h")
+    assert s["max"] >= m._HIST_CAP * 3 - 2
+
+
+def test_counter_delta_and_merge():
+    before = {"x": 5, "y": 2}
+    after = {"x": 9, "y": 2, "z": 1}
+    d = m.counter_delta(before, after)
+    assert d == {"x": 4, "z": 1}  # unchanged keys dropped
+    r = m.Registry()
+    r.inc("x", 100)
+    r.merge_counters(d)
+    assert r.counters_snapshot() == {"x": 104, "z": 1}
+
+
+def test_absorb_sync_info_nested():
+    r = m.Registry()
+    m.absorb_sync_info(
+        {
+            "step": 5,
+            "chunks_synced": 3,
+            "bytes_synced": 3000,
+            "stall_us": 120.0,
+            "wire_bytes": 900,
+            "raw_bytes": 3000,
+            "phase_us": {"digest": 40.0, "fetch": 60.0},
+            "paging": {"faults": 7, "evictions": 2},
+            "transport": {"wire_tx": 900, "transport": "stream"},
+        },
+        r,
+    )
+    c, g = r.counters_snapshot(), r.snapshot()["gauges"]
+    assert c["proxy_syncs_total"] == 1
+    assert c["proxy_chunks_synced"] == 3
+    assert c["proxy_bytes_synced"] == 3000
+    assert g["proxy_wire_bytes"] == 900
+    assert g["uvm_faults"] == 7         # nested paging absorbed
+    assert g["transport_wire_tx"] == 900
+    assert "transport_transport" not in g  # non-numeric dropped
+    assert r.hist_summary("proxy_sync_stall_us")["count"] == 1
+    assert r.hist_summary("proxy_phase_digest_us")["count"] == 1
+
+
+def test_absorb_checkpoint_result():
+    r = m.Registry()
+    res = SimpleNamespace(
+        step=4, error=None, bytes_written=100, chunks_written=2,
+        chunks_reused=8, chunks_synced=2, chunks_clean=8, bytes_skipped=800,
+        blocking_s=0.01, persist_s=0.2, sync_us=50.0, digest_us=None,
+        fetch_us=10.0, stall_us=0.0,
+    )
+    m.absorb_checkpoint_result(res, r)
+    m.absorb_checkpoint_result(res, r)
+    c = r.counters_snapshot()
+    assert c["ckpt_checkpoints_total"] == 2
+    assert "ckpt_errors_total" not in c
+    assert c["ckpt_bytes_written"] == 200
+    assert r.hist_summary("ckpt_persist_s")["count"] == 2
+    m.absorb_checkpoint_result(SimpleNamespace(error="boom"), r)
+    assert r.counters_snapshot()["ckpt_errors_total"] == 1
+
+
+def test_absorb_round():
+    r = m.Registry()
+    m.absorb_round({"status": "committed", "commit_s": 0.01,
+                    "bytes_written": 500}, r)
+    m.absorb_round({"status": "aborted", "reason": "death"}, r)
+    c = r.counters_snapshot()
+    assert c["coord_rounds_total"] == 2
+    assert c["coord_rounds_committed"] == 1
+    assert c["coord_rounds_aborted"] == 1
+    assert c["coord_bytes_written"] == 500
+
+
+def test_dump_if_enabled(tmp_path):
+    r = m.Registry()
+    r.inc("k", 3)
+    assert m.dump_if_enabled("proc", r) is None  # tracing off -> no dump
+    trace.enable(str(tmp_path), "proc", set_env=False)
+    path = m.dump_if_enabled("proc", r)
+    assert path is not None
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema"] == m.METRICS_SCHEMA
+    assert doc["process"] == "proc"
+    assert doc["counters"] == {"k": 3}

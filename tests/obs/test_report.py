@@ -1,0 +1,137 @@
+"""Reporter tests: shard merge, journal track, validation, summary."""
+import json
+import os
+
+from repro.obs import report
+from repro.obs.journal import JournalWriter
+
+
+def _write_shard(run_dir, process, pid, events, torn_tail=False):
+    path = os.path.join(run_dir, f"trace-{process}-{pid}.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({
+            "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+            "ts": 0, "args": {"name": f"{process}:{pid}"},
+        }) + "\n")
+        for ev in events:
+            f.write(json.dumps({"pid": pid, "tid": 1, **ev}) + "\n")
+        if torn_tail:
+            f.write('{"name": "torn", "ph": "i", "ts"')  # SIGKILL mid-write
+    return path
+
+
+def _mk_run(tmp_path):
+    run_dir = str(tmp_path / "obs")
+    os.makedirs(run_dir)
+    _write_shard(run_dir, "app", 100, [
+        {"name": "app.step", "ph": "X", "ts": 1000, "dur": 500,
+         "args": {"step": 1}},
+        {"name": "app.step", "ph": "X", "ts": 2000, "dur": 700,
+         "args": {"step": 2}},
+        {"name": "app.sync_stall", "ph": "X", "ts": 2800, "dur": 300,
+         "args": {"epoch": 1}},
+    ], torn_tail=True)
+    _write_shard(run_dir, "proxy", 200, [
+        {"name": "proxy.step", "ph": "X", "ts": 1100, "dur": 400,
+         "args": {"step": 1, "inc": 0}},
+        {"name": "proxy.respawn", "ph": "B", "ts": 3000, "args": {}},
+        {"name": "proxy.respawn", "ph": "E", "ts": 3900},
+    ])
+    with open(os.path.join(run_dir, "metrics-app-100.json"), "w") as f:
+        json.dump({"process": "app", "counters": {"proxy_restarts": 1},
+                   "gauges": {"uvm_faults": 6}}, f)
+    with open(os.path.join(run_dir, "metrics-proxy-200.json"), "w") as f:
+        json.dump({"process": "proxy", "counters": {"proxy_restarts": 0},
+                   "gauges": {"uvm_faults": 4}}, f)
+    w = JournalWriter(os.path.join(run_dir, "CLUSTER_LOG.jsonl"))
+    w.write("round", step=2, status="committed", bytes_written=99)
+    w.close()
+    return run_dir
+
+
+def test_merge_produces_perfetto_doc(tmp_path):
+    run_dir = _mk_run(tmp_path)
+    out, events, metrics = report.merge(run_dir)
+    with open(out) as f:
+        doc = json.load(f)
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["schema"] == "crum-trace/1"
+    assert len(doc["otherData"]["shards"]) == 2
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert "app.step" in names and "proxy.step" in names
+    # journal became instants on the synthetic track
+    jevs = [e for e in doc["traceEvents"] if e["name"] == "journal.round"]
+    assert jevs and jevs[0]["pid"] == report.JOURNAL_PID
+    assert jevs[0]["args"]["bytes_written"] == 99
+    # no leftover internal keys; events sorted by ts
+    assert all("_shard" not in e for e in doc["traceEvents"])
+    ts = [e["ts"] for e in doc["traceEvents"]]
+    assert ts == sorted(ts)
+    # torn tail skipped, no "torn" event
+    assert "torn" not in names
+
+
+def test_metrics_merged_across_processes(tmp_path):
+    run_dir = _mk_run(tmp_path)
+    m = report.merge_metrics(run_dir)
+    assert m["counters"]["proxy_restarts"] == 1
+    assert m["gauges"]["uvm_faults"] == 10  # summed per process
+    assert sorted(m["processes"]) == ["app", "proxy"]
+
+
+def test_validate_catches_orphans_and_malformed():
+    ok = [
+        {"name": "a", "ph": "B", "ts": 1, "pid": 1, "tid": 1},
+        {"name": "a", "ph": "E", "ts": 2, "pid": 1, "tid": 1},
+        {"name": "x", "ph": "X", "ts": 1, "dur": 5, "pid": 1, "tid": 1},
+    ]
+    assert report.validate_events(ok) == []
+
+    orphan_e = [{"name": "a", "ph": "E", "ts": 2, "pid": 1, "tid": 1}]
+    assert any("orphaned E" in p for p in report.validate_events(orphan_e))
+
+    unclosed_b = [{"name": "a", "ph": "B", "ts": 1, "pid": 1, "tid": 1}]
+    assert any("unclosed B" in p for p in report.validate_events(unclosed_b))
+
+    no_dur = [{"name": "x", "ph": "X", "ts": 1, "pid": 1, "tid": 1}]
+    assert any("without numeric dur" in p
+               for p in report.validate_events(no_dur))
+
+    bad_ph = [{"name": "x", "ph": "Z", "ts": 1, "pid": 1, "tid": 1}]
+    assert any("unknown phase" in p for p in report.validate_events(bad_ph))
+
+    # nesting is PER (pid, tid): interleaved tracks don't false-positive
+    two_tracks = [
+        {"name": "a", "ph": "B", "ts": 1, "pid": 1, "tid": 1},
+        {"name": "b", "ph": "B", "ts": 2, "pid": 2, "tid": 1},
+        {"name": "a", "ph": "E", "ts": 3, "pid": 1, "tid": 1},
+        {"name": "b", "ph": "E", "ts": 4, "pid": 2, "tid": 1},
+    ]
+    assert report.validate_events(two_tracks) == []
+
+
+def test_summary_derives_ratios(tmp_path):
+    run_dir = _mk_run(tmp_path)
+    _, events, metrics = report.merge(run_dir)
+    text = report.summarize(events, metrics)
+    assert "app.step" in text and "p99_us" in text
+    # stall ratio = 300 / (500 + 700)
+    assert "stall_ratio" in text and "0.25" in text
+    assert "uvm_faults_per_step" in text
+    assert "proxy_restarts" in text
+
+
+def test_cli_check_mode(tmp_path, capsys):
+    run_dir = _mk_run(tmp_path)
+    assert report.main([run_dir, "--check"]) == 0
+    out = capsys.readouterr().out
+    assert "trace validation OK" in out
+    assert os.path.exists(os.path.join(run_dir, "merged.trace.json"))
+
+    # an invalid shard (unclosed B) must fail --check
+    _write_shard(run_dir, "bad", 300, [
+        {"name": "never.closed", "ph": "B", "ts": 1, "args": {}},
+    ])
+    assert report.main([run_dir, "--check"]) == 1
+
+    assert report.main([str(tmp_path / "nope"), "--check"]) == 2

@@ -1,0 +1,114 @@
+"""Tracer unit tests: shard shape, enable semantics, fork safety."""
+import json
+import os
+import time
+
+import pytest
+
+from repro.obs import trace
+
+
+def _read_shard(path):
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def test_disabled_by_default():
+    assert trace.get() is None
+    # module-level conveniences are no-ops, not crashes
+    trace.instant("nobody.listens")
+    trace.counter("nothing", x=1)
+
+
+def test_shard_events_have_trace_event_shape(tmp_path):
+    tr = trace.enable(str(tmp_path), "testproc", run_id="r1")
+    tr.instant("ev.instant", step=3)
+    t0 = time.perf_counter()
+    time.sleep(0.01)
+    tr.complete("ev.complete", t0, step=3, epoch=1)
+    tr.begin("ev.span", step=3)
+    tr.end("ev.span")
+    tr.counter("ev.counter", faults=7)
+    with tr.span("ev.ctx"):
+        pass
+
+    events = _read_shard(tr.path)
+    # metadata line first: names the process track for Perfetto
+    assert events[0]["ph"] == "M"
+    assert events[0]["args"]["name"] == f"testproc:{os.getpid()}"
+    assert events[0]["args"]["run"] == "r1"
+
+    by_name = {}
+    for ev in events[1:]:
+        by_name.setdefault(ev["name"], []).append(ev)
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(ev)
+        assert ev["pid"] == os.getpid()
+
+    assert by_name["ev.instant"][0]["ph"] == "i"
+    assert by_name["ev.instant"][0]["args"]["step"] == 3
+    x = by_name["ev.complete"][0]
+    assert x["ph"] == "X" and x["dur"] >= 10_000  # slept 10ms
+    # back-dated: ts + dur lands ~now on the wall clock
+    assert abs((x["ts"] + x["dur"]) - time.time_ns() // 1000) < 5_000_000
+    assert [e["ph"] for e in by_name["ev.span"]] == ["B", "E"]
+    assert [e["ph"] for e in by_name["ev.ctx"]] == ["B", "E"]
+    assert by_name["ev.counter"][0]["ph"] == "C"
+
+
+def test_enable_is_idempotent_first_wins(tmp_path):
+    tr1 = trace.enable(str(tmp_path / "a"), "p1")
+    tr2 = trace.enable(str(tmp_path / "b"), "p2")
+    assert tr2 is tr1
+    assert not os.path.exists(tmp_path / "b")
+
+
+def test_enable_exports_env_and_children_pick_it_up(tmp_path, monkeypatch):
+    tr = trace.enable(str(tmp_path), "launcher", run_id="runX")
+    assert os.environ[trace.ENV_DIR] == tr.obs_dir
+    assert os.environ[trace.ENV_RUN] == "runX"
+    # simulate the child: fresh module state, same environment
+    trace.TRACER = None
+    child = trace.enable_from_env("worker0")
+    assert child is not None
+    assert child.obs_dir == tr.obs_dir
+    assert child.run_id == "runX"
+    assert "trace-worker0-" in os.path.basename(child.path)
+
+
+def test_enable_from_env_without_env_is_noop():
+    os.environ.pop(trace.ENV_DIR, None)
+    assert trace.enable_from_env("worker") is None
+    assert trace.get() is None
+
+
+def test_disable_closes_and_clears(tmp_path):
+    trace.enable(str(tmp_path), "p")
+    trace.disable()
+    assert trace.get() is None
+    assert trace.ENV_DIR not in os.environ
+    # re-enable works after disable
+    tr = trace.enable(str(tmp_path), "p2", set_env=False)
+    assert tr is trace.get()
+
+
+@pytest.mark.skipif(not hasattr(os, "fork"), reason="needs fork")
+def test_fork_child_reopens_own_shard(tmp_path):
+    tr = trace.enable(str(tmp_path), "forky", set_env=False)
+    tr.instant("parent.before")
+    pid = os.fork()
+    if pid == 0:  # child
+        try:
+            tr.instant("child.event")
+            os._exit(0)
+        except BaseException:
+            os._exit(1)
+    _, status = os.waitpid(pid, 0)
+    assert os.waitstatus_to_exitcode(status) == 0
+    child_shard = tmp_path / f"trace-forky-{pid}.jsonl"
+    assert child_shard.exists()
+    child_events = _read_shard(str(child_shard))
+    assert [e["name"] for e in child_events] == ["process_name", "child.event"]
+    assert all(e["pid"] == pid for e in child_events)
+    # parent shard untouched by the child's writes
+    names = [e["name"] for e in _read_shard(tr.path)]
+    assert "child.event" not in names

@@ -1,0 +1,87 @@
+"""Trace correctness under failure (``integration``-marked).
+
+The kill -> replay drill with tracing ON: after SIGKILLing the proxy
+mid-training, the merged trace must tell the story — the app-side
+proxy-death instant, the respawn span, replayed steps tagged with the
+*new* incarnation — and every shard must still be structurally valid
+(balanced B/E nesting, parseable lines) despite the SIGKILL tearing the
+dead proxy's shard mid-write.
+"""
+import json
+import os
+
+import pytest
+
+from repro.obs import report, trace
+from repro.proxy import ProxyRunner
+
+pytestmark = pytest.mark.integration
+
+SPEC = {"name": "numpy_sgd", "rows": 8, "width": 32, "seed": 0}
+
+
+def test_kill_replay_drill_leaves_a_valid_correlated_trace(tmp_path):
+    obs_dir = str(tmp_path / "obs")
+    trace.enable(obs_dir, "app", run_id="drill")
+
+    r = ProxyRunner(SPEC, chunk_bytes=1 << 10, max_restarts=2)
+    r.start()
+    try:
+        for s in range(1, 5):
+            r.step(s)
+        _, info = r.sync_state()
+        assert info["step"] == 4
+        killed_pid = r.kill()
+        for s in range(5, 9):
+            r.step(s)  # death detected here -> respawn + replay
+        _, info = r.sync_state()
+        assert r.restarts == 1 and info["step"] == 8
+    finally:
+        r.close()
+    from repro.obs.metrics import dump_if_enabled
+
+    dump_if_enabled("app")
+
+    # two proxy shards: the killed incarnation's and the respawn's
+    shard_events, shards = report.load_shards(obs_dir)
+    proxy_shards = [s for s in shards if "trace-proxy-" in s]
+    assert len(proxy_shards) == 2
+    assert any(f"-{killed_pid}.jsonl" in s for s in proxy_shards)
+
+    by_name = {}
+    for ev in shard_events:
+        by_name.setdefault(ev.get("name"), []).append(ev)
+
+    # 1. the app saw the death
+    died = by_name["proxy.died"]
+    assert died and died[0]["ph"] == "i"
+
+    # 2. ... and spent a respawn span recovering from the synced step
+    respawn = by_name["proxy.respawn"]
+    assert [e["ph"] for e in respawn] == ["B", "E"]
+    assert respawn[0]["args"]["resumed_from"] == 4
+    replayed = by_name["proxy.replayed"][0]
+    assert replayed["args"]["inc"] == 1
+
+    # 3. replayed steps carry the new incarnation tag; pre-kill steps
+    #    carry the old one
+    incs = {ev["args"]["inc"] for ev in by_name["proxy.step"]}
+    assert incs == {0, 1}
+    inc1_steps = {ev["args"]["step"] for ev in by_name["proxy.step"]
+                  if ev["args"]["inc"] == 1}
+    assert {5, 6, 7, 8} <= inc1_steps
+
+    # 4. every shard is structurally valid despite the SIGKILL
+    assert report.validate_events(shard_events) == []
+
+    # 5. the merged artifact is Perfetto-loadable and carries the
+    #    proxy_restarts counter from the app's metrics snapshot
+    out, events, metrics = report.merge(obs_dir)
+    with open(out) as f:
+        doc = json.load(f)
+    assert doc["traceEvents"]
+    assert metrics["counters"].get("proxy_restarts") == 1
+    # correlation: every shard's metadata names the one run
+    runs = {ev["args"].get("run") for ev in events
+            if ev.get("ph") == "M" and "_shard" in ev}
+    assert runs == {"drill"}

@@ -1,20 +1,19 @@
 """Resource hygiene on the reconnect path (``remote`` marker): every
 ProxyDiedError branch closes its socket, so >= 20 kill/respawn cycles
-leak no file descriptors in the application process."""
+leak no file descriptors or /dev/shm segments in the application
+process. Audited through ``repro.obs.leakcheck`` so a failure names the
+leaked fds (symlink targets), not just a count."""
 import os
 
 import pytest
 
+from repro.obs.leakcheck import LeakCheck
 from repro.proxy import ProxyRunner
 
 pytestmark = pytest.mark.remote
 
 SPEC = {"name": "numpy_sgd", "rows": 4, "width": 16, "seed": 0}
 CYCLES = 22
-
-
-def _open_fds() -> int:
-    return len(os.listdir("/proc/self/fd"))
 
 
 @pytest.mark.skipif(not os.path.isdir("/proc/self/fd"),
@@ -32,19 +31,16 @@ def test_no_fd_leak_across_kill_respawn_cycles(transport):
             step += 1
             r.step(step)
         r.sync_state()
-        before = _open_fds()
+        # a couple of fds of jitter are tolerated (GC timing); a leak of
+        # one fd per cycle would show up as >= CYCLES
+        lc = LeakCheck(tolerance=4, shm_tolerance=0).start()
         for _ in range(CYCLES):
             r.kill()
             step += 1
             r.step(step)      # detects death -> respawn + replay
             r.sync_state()
-        after = _open_fds()
         assert r.restarts == CYCLES
-        # a couple of fds of jitter are tolerated (GC timing); a leak of
-        # one fd per cycle would show up as >= CYCLES
-        assert after - before <= 4, (
-            f"fd leak across {CYCLES} cycles: {before} -> {after}"
-        )
+        lc.assert_no_growth(f"{CYCLES} kill/respawn cycles ({transport})")
     finally:
         r.close()
 
