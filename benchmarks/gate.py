@@ -15,6 +15,10 @@ overhead envelope or the pipeline refactor's wins regress:
 
     PYTHONPATH=src python -m benchmarks.gate --json BENCH_results.json
     PYTHONPATH=src python -m benchmarks.gate            # run + gate
+
+``--baseline FILE`` additionally diffs the rows against a committed
+baseline dump (``repro.obs.baseline``); its findings are gate
+violations too — one gate for the envelope AND the trajectory.
 """
 from __future__ import annotations
 
@@ -113,8 +117,21 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="multiplier on the paper's 6%% envelope "
                          "(default 2.0 -> 12%%, the paper's worst case)")
+    ap.add_argument("--baseline", metavar="FILE", default=None,
+                    help="ALSO diff the rows against this committed "
+                         "baseline dump (repro.obs.baseline findings "
+                         "become gate violations)")
     args = ap.parse_args(argv)
-    violations = check(_load_rows(args.json), tolerance=args.tolerance)
+    rows = _load_rows(args.json)
+    violations = check(rows, tolerance=args.tolerance)
+    if args.baseline:
+        from repro.obs import baseline
+
+        _, base_rows = baseline.load_rows(args.baseline)
+        violations += [
+            f"baseline: {f['message']}"
+            for f in baseline.compare(rows, base_rows, check_missing=False)
+        ]
     for v in violations:
         print(f"[gate] FAIL: {v}", file=sys.stderr)
     if not violations:

@@ -59,3 +59,25 @@ def run() -> None:
         os.close(tr._fd)
     row("obs_enabled_span", t_emit * 1e6,
         events=m, bytes_per_event=round(shard_bytes / (3 * m + m)))
+
+    # -- heartbeat piggyback: the per-beat delta collect -------------------
+    # This runs once per heartbeat interval on every worker, against a
+    # realistically-populated registry. It must stay far below the beat
+    # period (hundreds of ms) — microseconds, in practice.
+    from repro.obs import metrics as obs_metrics
+    from repro.obs.live import HeartbeatPiggyback
+
+    reg = obs_metrics.Registry()
+    for i in range(40):
+        reg.inc(f"counter_{i}", i + 1)
+        reg.set(f"gauge_{i}", float(i))
+    pig = HeartbeatPiggyback(reg)
+    k = 20_000
+
+    def collect_loop():
+        for j in range(k):
+            reg.inc("proxy_syncs_total")  # keep a delta flowing every beat
+            pig.collect()
+    t_collect = timeit(collect_loop, warmup=1, iters=3) / k
+    row("obs_piggyback_collect", t_collect * 1e6,
+        registry_keys=80, beats=k)

@@ -9,12 +9,18 @@ benchmarks/common.py); ``--json`` additionally writes the same rows as a
 JSON array (one object per row, derived pairs as real fields) so perf
 trajectories can be tracked by machines, not just eyeballs — CI uploads
 it as the ``BENCH_results.json`` artifact.
+
+``--compare [BASELINE]`` diffs this run against the committed baseline
+(``repro.obs.baseline``: hard correctness flips + us_per_call growth
+beyond a jitter-tolerant ratio) and exits non-zero on regressions;
+``--history FILE`` appends one trajectory line per comparison.
 """
 from __future__ import annotations
 
 import argparse
 import datetime
 import json
+import os
 import platform
 import subprocess
 import sys
@@ -59,6 +65,17 @@ def main(argv=None) -> int:
                     help=f"benchmarks to run (default: all of {sorted(ALL)})")
     ap.add_argument("--json", metavar="FILE", default=None,
                     help="also write rows as structured JSON to FILE")
+    ap.add_argument("--compare", metavar="BASELINE", nargs="?",
+                    const="BENCH_results.json", default=None,
+                    help="diff this run's rows against a committed "
+                         "baseline dump (default BENCH_results.json); "
+                         "exit 1 on hard flips or perf regressions")
+    ap.add_argument("--compare-ratio", type=float, default=None,
+                    help="us_per_call growth factor that counts as a "
+                         "regression (default: obs.baseline's 3.0)")
+    ap.add_argument("--history", metavar="FILE", default=None,
+                    help="append one comparison line to this JSONL "
+                         "(the in-repo perf trajectory)")
     args = ap.parse_args(argv)
 
     unknown = [n for n in args.names if n not in ALL]
@@ -78,29 +95,60 @@ def main(argv=None) -> int:
             failures.append(n)
             print(f"[bench] {n} FAILED: {type(e).__name__}: {e}",
                   file=sys.stderr, flush=True)
+    doc = {
+        "schema": "crum-bench-rows/1",
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "git_rev": _git_rev(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+            .isoformat(timespec="seconds"),
+        "benchmarks": names,
+        "failed": failures,
+        "rows": ROWS,
+        "obs": {
+            "enabled": tracer is not None,
+            "obs_dir": tracer.obs_dir if tracer else None,
+            "run_id": tracer.run_id if tracer else None,
+            "counters": obs_metrics.REGISTRY.counters_snapshot(),
+        },
+    }
     if args.json:
-        doc = {
-            "schema": "crum-bench-rows/1",
-            "python": platform.python_version(),
-            "platform": platform.platform(),
-            "git_rev": _git_rev(),
-            "timestamp": datetime.datetime.now(datetime.timezone.utc)
-                .isoformat(timespec="seconds"),
-            "benchmarks": names,
-            "failed": failures,
-            "rows": ROWS,
-            "obs": {
-                "enabled": tracer is not None,
-                "obs_dir": tracer.obs_dir if tracer else None,
-                "run_id": tracer.run_id if tracer else None,
-                "counters": obs_metrics.REGISTRY.counters_snapshot(),
-            },
-        }
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"[bench] wrote {len(ROWS)} rows to {args.json}", flush=True)
     obs_metrics.dump_if_enabled("bench")
-    return 1 if failures else 0
+
+    regressed = False
+    if args.compare:
+        from repro.obs import baseline
+
+        if not os.path.exists(args.compare):
+            print(f"[bench] no baseline at {args.compare}; skipping "
+                  f"comparison", file=sys.stderr)
+        else:
+            base_doc, base_rows = baseline.load_rows(args.compare)
+            kw = {"ratio": args.compare_ratio} \
+                if args.compare_ratio is not None else {}
+            findings = baseline.compare(
+                ROWS, base_rows,
+                # a subset run would read every un-run baseline row as
+                # missing — only require full coverage on full runs
+                check_missing=not args.names,
+                **kw,
+            )
+            for f in findings:
+                print(f"[bench] REGRESSION: {f['message']}",
+                      file=sys.stderr, flush=True)
+            if args.history:
+                baseline.append_history(
+                    args.history, doc, findings,
+                    baseline_rev=base_doc.get("git_rev"),
+                )
+            if not findings:
+                print(f"[bench] baseline comparison vs {args.compare}: "
+                      f"no regressions", flush=True)
+            regressed = bool(findings)
+    return 1 if failures or regressed else 0
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ from repro.coord.protocol import (
     MSG_FINISHED,
     MSG_HEARTBEAT,
     MSG_JOIN,
+    MSG_METRICS,
     MSG_PERSIST_DONE,
     MSG_PERSIST_FAIL,
     MSG_PROXY_ENDPOINT,
@@ -55,6 +56,8 @@ from repro.coord.protocol import (
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.journal import JournalWriter
+from repro.obs.live import LiveAggregator
+from repro.obs.watch import SEV_CRITICAL, Alert, WatchConfig, Watchdog
 
 # NOTE: repro.remote.placement is imported lazily in __init__ — that module
 # (and the rest of repro.remote) builds on the proxy package, whose import
@@ -110,6 +113,10 @@ class Coordinator:
         round_timeout_s: float = 120.0,
         keep_last: int = 0,
         tick_s: float = 0.25,
+        watch_cfg: WatchConfig | None = None,
+        abort_on_critical: bool = False,
+        live_snapshot_every_s: float = 5.0,
+        obs_dir: str | None = None,
     ):
         self.root = root
         os.makedirs(root, exist_ok=True)
@@ -132,6 +139,18 @@ class Coordinator:
         self._journal = JournalWriter(
             os.path.join(root, "CLUSTER_LOG.jsonl")
         )
+        # live telemetry plane: HEARTBEAT-piggybacked registry deltas land
+        # in a bounded time-series store, snapshotted to the obs/run dir
+        # (falling back to the checkpoint root) and served over this same
+        # listener (METRICS frames -> obs.top)
+        self.live = LiveAggregator(
+            snapshot_path=os.path.join(obs_dir or root, "live_metrics.json"),
+            snapshot_every_s=live_snapshot_every_s,
+        )
+        # SLO watchdog: rules over every signal the event loop already
+        # sees; alerts fan out to journal + trace + metrics via _on_alert
+        self.abort_on_critical = bool(abort_on_critical)
+        self.watchdog = Watchdog(watch_cfg, on_alert=self._on_alert)
         # proxy placement (remote device proxies): endpoint registry +
         # worker assignments, mutated only on the event-loop thread
         from repro.remote.placement import PlacementMap
@@ -181,6 +200,7 @@ class Coordinator:
         self._inbox.put(("eof", conn, None))
 
     def close(self) -> None:
+        self.live.write_snapshot()  # final state for post-run obs.top
         if self._listener is not None:
             try:
                 self._listener.close()
@@ -195,6 +215,26 @@ class Coordinator:
     # -- journal ---------------------------------------------------------------
     def _log(self, event: str, **fields) -> None:
         self._journal.write(event, **fields)
+
+    # -- alerts (SLO watchdog fan-out) ----------------------------------------
+    def _on_alert(self, alert: Alert) -> None:
+        """Every alert crosses every observability channel at once: the
+        versioned journal line, a trace instant, the metrics registry —
+        and, under the abort-on-critical policy, the open round."""
+        self._log("alert", **alert.as_dict())
+        obs_trace.instant(f"watch.{alert.kind}", severity=alert.severity,
+                          host=alert.host, step=alert.step)
+        obs_metrics.REGISTRY.inc("watch_alerts_total")
+        obs_metrics.REGISTRY.inc(f"watch_alerts_{alert.severity}")
+        self.live.observe(-1, f"alert_{alert.kind}", 1.0)
+        if self.abort_on_critical and alert.severity == SEV_CRITICAL:
+            self._abort_round(
+                f"critical alert: {alert.kind} ({alert.message})"
+            )
+
+    @property
+    def alerts(self) -> list[Alert]:
+        return list(self.watchdog.alerts)
 
     # -- the event loop --------------------------------------------------------
     def run(self, *, deadline_s: float = 600.0) -> list[RoundRecord]:
@@ -240,10 +280,15 @@ class Coordinator:
             # these connections never JOIN, so handle before the host gate
             self._on_proxy_endpoint(conn, msg)
             return
+        if mtype == MSG_METRICS:
+            # live-telemetry readout (obs.top): any connection, no JOIN
+            self._on_metrics(conn, msg)
+            return
         if self._conn_host.get(conn) != host:
             return  # frame from a connection we already kicked
         self.monitor.beat(host)
         if mtype == MSG_HEARTBEAT:
+            self._on_heartbeat(host, msg)
             return
         if mtype == MSG_READY:
             self._on_ready(host, int(msg["step"]))
@@ -258,8 +303,32 @@ class Coordinator:
             self._log("finished", host=host, step=msg.get("step"),
                       digest=msg.get("digest", ""))
 
+    def _on_heartbeat(self, host: int, msg: dict) -> None:
+        step = int(msg.get("step") or 0)
+        self.watchdog.on_heartbeat(host, step)
+        if self.live.ingest(host, msg.get("metrics")):
+            # feed the spike rules exactly the points that just landed
+            now = time.time()
+            for metric in self.watchdog.cfg.fault_metrics:
+                v = self.live.store.latest(host, metric)
+                if v is not None:
+                    self.watchdog.on_metric_point(host, metric, now, v)
+
+    def _on_metrics(self, conn: Connection, msg: dict) -> None:
+        try:
+            conn.send(
+                MSG_METRICS,
+                snapshot=self.live.snapshot(),
+                alerts=[a.as_dict() for a in self.watchdog.alerts[-100:]],
+                latest_committed=self.latest_committed,
+                n_hosts=self.n_hosts,
+            )
+        except OSError:
+            pass  # readout peer vanished: nothing to unwind
+
     def _on_join(self, conn: Connection, msg: dict) -> None:
         host = int(msg["host"])
+        self.live.reset_host(host)  # fresh incarnation: seq restarts at 1
         old = self._conns.pop(host, None)
         if old is not None and old is not conn:
             # stale connection from a previous incarnation of this host
@@ -308,6 +377,10 @@ class Coordinator:
                 if failed:
                     self.placement.report_dead(failed)
                     self._log("proxy_host_death", name=failed, worker=worker)
+                    # alert *before* the reassignment answer goes out — the
+                    # journal must show the death ahead of any round that
+                    # commits on the rescheduled proxy
+                    self.watchdog.on_proxy_host_death(failed, worker)
                 ep = self.placement.assign(
                     worker, exclude=tuple(msg.get("exclude") or ())
                 )
@@ -366,6 +439,11 @@ class Coordinator:
             return  # late ack for an aborted round
         r.acks[host] = msg
         r.record.acked = sorted(r.acks)
+        # cross-worker divergence rule: every acking host must hold the
+        # same lockstep state at this boundary (digest rides the ack)
+        self.watchdog.on_persist_done(
+            host, r.step, msg.get("state_digest")
+        )
         # straggler accounting uses the duration the *coordinator* observed
         # (DRAIN -> ack), not the worker's self-reported persist time: a
         # host whose storage or network stalls the ack is exactly the host
@@ -425,6 +503,9 @@ class Coordinator:
         self._broadcast(MSG_COMMIT, step=rec.step)
         self._log("round", **asdict(rec))
         obs_metrics.absorb_round(asdict(rec))
+        self.watchdog.on_round(asdict(rec))
+        self.live.observe(-1, "round_s", rec.round_s)
+        self.live.observe(-1, "commit_s", rec.commit_s)
         tr = obs_trace.get()
         if tr is not None:
             tr.instant("coord.commit", step=rec.step,
@@ -444,6 +525,9 @@ class Coordinator:
         self._broadcast(MSG_ABORT, step=rec.step, reason=reason)
         self._log("round", **asdict(rec))
         obs_metrics.absorb_round(asdict(rec))
+        # safe even when an abort_rate alert goes critical here: _round is
+        # already None, so a nested abort-on-critical _abort_round no-ops
+        self.watchdog.on_round(asdict(rec))
         tr = obs_trace.get()
         if tr is not None:
             tr.instant("coord.abort", step=rec.step, reason=reason)
@@ -466,6 +550,8 @@ class Coordinator:
         self._kick(host, "connection lost (worker death)")
 
     def _check_liveness(self) -> None:
+        self.watchdog.tick()          # leak-trend sampling (rate-limited)
+        self.live.maybe_snapshot()    # run-dir live_metrics.json refresh
         for host in set(self.monitor.dead_hosts()) & set(self._conns):
             self._kick(host, "heartbeat timeout (worker stalled)")
         r = self._round
@@ -489,6 +575,7 @@ class Coordinator:
         self._log("death", host=host, reason=reason,
                   latest_committed=self.latest_committed)
         obs_trace.instant("coord.death", host=host, reason=reason)
+        self.watchdog.on_death(host, reason)
         r = self._round
         if r is not None and host in r.record.participants:
             self._abort_round(f"host {host} lost mid-round: {reason}")

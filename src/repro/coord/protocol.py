@@ -9,10 +9,18 @@ storage rather than through the DMTCP coordinator.
 Worker -> coordinator::
 
     JOIN          {host, pid, restored_from}   first frame on a connection
-    HEARTBEAT     {host, step}                 periodic liveness
+    HEARTBEAT     {host, step, metrics?}       periodic liveness; ``metrics``
+                                               optionally piggybacks the
+                                               worker's registry delta
+                                               ({seq, counters, gauges} —
+                                               repro.obs.live) in the SAME
+                                               frame: zero extra syscalls
     READY         {host, step}                 at a checkpoint boundary
     PERSIST_DONE  {host, step, hostmeta, persist_s, blocking_s,
-                   bytes_written, chunks_written, chunks_reused}
+                   bytes_written, chunks_written, chunks_reused,
+                   state_digest?}              state_digest feeds the SLO
+                                               watchdog's cross-worker
+                                               divergence rule
     PERSIST_FAIL  {host, step, error}
     FINISHED      {host, step, digest}         training loop complete
 
@@ -24,6 +32,12 @@ Side channel (proxy placement — any connection, no JOIN required)::
                                                 proxy?"; ``failed`` names
                                                 an endpoint it watched die
     PROXY_ENDPOINT {name, addr, port} | {error} the coordinator's answer
+
+    METRICS        {op: "snapshot"}             live telemetry readout (any
+                                                connection, no JOIN): the
+                                                coordinator answers with
+                                                {snapshot, alerts} — the
+                                                repro.obs.top data source
 
 Coordinator -> worker::
 
@@ -54,6 +68,7 @@ MSG_ABORT = "ABORT"
 MSG_FINISHED = "FINISHED"
 MSG_SHUTDOWN = "SHUTDOWN"
 MSG_PROXY_ENDPOINT = "PROXY_ENDPOINT"
+MSG_METRICS = "METRICS"
 
 _LEN = struct.Struct("<I")
 MAX_FRAME = 16 << 20  # a control frame this large is a protocol bug

@@ -42,6 +42,12 @@ class ClusterReport:
     # for a worker = it was rescheduled onto a survivor)
     proxy_placements: list[tuple[int, str]] = field(default_factory=list)
     killed_proxy_hosts: list[str] = field(default_factory=list)
+    # SLO watchdog output (Alert.as_dict() shapes, in emission order) —
+    # drills assert on the kinds, launch.cluster prints/serializes them
+    alerts: list[dict] = field(default_factory=list)
+
+    def alert_kinds(self) -> set[str]:
+        return {a.get("kind", "") for a in self.alerts}
 
     @property
     def committed(self) -> list[RoundRecord]:
@@ -172,6 +178,8 @@ def run_cluster(
     kill_proxy_after_commits: int = 1,
     sweep: bool = True,
     obs_dir: str | None = None,
+    watch_cfg=None,
+    abort_on_critical: bool = False,
 ) -> ClusterReport:
     """One coordinated run: coordinator + N supervised worker processes.
 
@@ -208,6 +216,9 @@ def run_cluster(
         heartbeat_timeout_s=heartbeat_timeout_s,
         round_timeout_s=round_timeout_s,
         keep_last=keep_last,
+        watch_cfg=watch_cfg,
+        abort_on_critical=abort_on_critical,
+        obs_dir=obs_dir,
     ).start()
     host_addr, port = coord.address
 
@@ -295,4 +306,5 @@ def run_cluster(
         swept_dirs=swept,
         proxy_placements=list(coord.placement.history),
         killed_proxy_hosts=killed_proxy_hosts,
+        alerts=[a.as_dict() for a in coord.alerts],
     )

@@ -37,6 +37,7 @@ from repro.core.restore import RestoreManager
 from repro.core.shadow import HostShardView
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.obs.live import HeartbeatPiggyback
 from repro.coord.protocol import (
     MSG_ABORT,
     MSG_COMMIT,
@@ -186,6 +187,9 @@ class _InlineLoop:
         """Inline state is always current; nothing to pull."""
         return state
 
+    def digest(self, state) -> str:
+        return state_digest(state["device"])
+
     def close(self):
         pass
 
@@ -203,6 +207,7 @@ class _ProxyLoop:
 
         self.cfg = cfg
         self.spec = _program_spec(cfg)
+        self.last_digest: str | None = None
         # segments/API log live under the cluster root, not /dev/shm: a
         # drill that hard-exits this worker (os._exit) skips close(), and
         # files under the root are reclaimed with it — a respawned
@@ -250,8 +255,15 @@ class _ProxyLoop:
         return state
 
     def materialize(self, state):
-        state["device"], _info = self.runner.sync_state()
+        state["device"], info = self.runner.sync_state()
+        # the proxy already digested the state during sync — keep it so
+        # the persist ack's divergence check costs nothing extra here
+        self.last_digest = info.get("digest") if isinstance(info, dict) \
+            else None
         return state
+
+    def digest(self, state) -> str:
+        return self.last_digest or state_digest(state["device"])
 
     def close(self):
         self.runner.close()
@@ -274,13 +286,22 @@ class _Heartbeat(threading.Thread):
         self.step = 0
         self.paused = threading.Event()
         self.stop = threading.Event()
+        # live telemetry: the registry delta since the last beat rides
+        # inside the same framed sendall — zero extra syscalls per beat
+        self.piggyback = HeartbeatPiggyback()
 
     def run(self) -> None:
         while not self.stop.wait(self.cfg.heartbeat_s):
             if self.paused.is_set():
                 continue
+            payload = self.piggyback.collect()
             try:
-                self.conn.send(MSG_HEARTBEAT, host=self.cfg.host, step=self.step)
+                if payload is None:  # nothing new: the beat rides bare
+                    self.conn.send(MSG_HEARTBEAT, host=self.cfg.host,
+                                   step=self.step)
+                else:
+                    self.conn.send(MSG_HEARTBEAT, host=self.cfg.host,
+                                   step=self.step, metrics=payload)
             except OSError:
                 # coordinator kicked us (or died): this incarnation is over
                 os._exit(1)
@@ -371,7 +392,8 @@ def worker_entry(cfg: WorkerConfig) -> int:
                 # proxy runner: pull the device mirror current before the
                 # barrier — the persisted shards must reflect this step
                 state = loop.materialize(state)
-                _checkpoint_round(conn, cfg, ck, state, step, deadline)
+                _checkpoint_round(conn, cfg, ck, state, step, deadline,
+                                  digest=loop.digest(state))
 
         state = loop.materialize(state)
         digest = state_digest(state["device"])
@@ -396,13 +418,14 @@ def _checkpoint_round(
     state,
     step: int,
     deadline: float,
+    digest: str | None = None,
 ) -> None:
     """Barrier at a boundary; persist on DRAIN; retry the round on ABORT."""
     tr = obs_trace.get()
     if tr is not None:
         tr.begin("worker.round", step=step, host=cfg.host)
     try:
-        _checkpoint_round_inner(conn, cfg, ck, state, step, deadline)
+        _checkpoint_round_inner(conn, cfg, ck, state, step, deadline, digest)
     finally:
         if tr is not None:
             tr.end("worker.round")
@@ -415,6 +438,7 @@ def _checkpoint_round_inner(
     state,
     step: int,
     deadline: float,
+    digest: str | None = None,
 ) -> None:
     conn.send(MSG_READY, host=cfg.host, step=step)
     while True:
@@ -423,7 +447,7 @@ def _checkpoint_round_inner(
         if mstep != step and mtype != MSG_SHUTDOWN:
             continue  # stale frame from a previous (aborted) round
         if mtype == MSG_DRAIN:
-            _persist_shards(conn, cfg, ck, state, step)
+            _persist_shards(conn, cfg, ck, state, step, digest)
         elif mtype == MSG_COMMIT:
             ck.commit_confirmed(step)
             return
@@ -435,7 +459,8 @@ def _checkpoint_round_inner(
             raise SystemExit(0)
 
 
-def _persist_shards(conn, cfg: WorkerConfig, ck, state, step: int) -> None:
+def _persist_shards(conn, cfg: WorkerConfig, ck, state, step: int,
+                    digest: str | None = None) -> None:
     shard = shard_tree_for_host(state, cfg.host, cfg.n_hosts)
     try:
         r = ck.save_async(
@@ -481,4 +506,7 @@ def _persist_shards(conn, cfg: WorkerConfig, ck, state, step: int) -> None:
         digest_us=r.digest_us,
         fetch_us=r.fetch_us,
         stall_us=r.stall_us,
+        # lockstep witness for the watchdog's divergence rule: every host
+        # acking this round must hold the same replicated state
+        state_digest=digest,
     )

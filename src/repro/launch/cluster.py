@@ -111,6 +111,13 @@ def main(argv=None) -> int:
                     help="enable observability: per-process trace shards and "
                          "metrics snapshots land here (merge with "
                          "`python -m repro.obs.report DIR`)")
+    # SLO watchdog policy
+    ap.add_argument("--abort-on-critical", action="store_true",
+                    help="a critical watchdog alert aborts the open "
+                         "checkpoint round (the previous image stands)")
+    ap.add_argument("--expect-no-alerts", action="store_true",
+                    help="exit non-zero if the watchdog raised ANY alert — "
+                         "the happy-path CI gate")
     args = ap.parse_args(argv)
 
     root = args.ckpt_dir or tempfile.mkdtemp(prefix="crum-cluster-")
@@ -137,6 +144,7 @@ def main(argv=None) -> int:
         proxy_transport=args.proxy_transport,
         sweep=not args.no_sweep,
         obs_dir=args.obs_dir,
+        abort_on_critical=args.abort_on_critical,
     )
 
     if args.restart_at_step is not None and args.hosts_after_restart is None:
@@ -209,6 +217,26 @@ def main(argv=None) -> int:
             line += f" reason={r.reason!r}"
         print(line, flush=True)
 
+    for a in report.alerts:
+        print(f"[alert] {a.get('severity', '?')}: {a.get('kind', '?')} "
+              f"host={a.get('host')} step={a.get('step')} "
+              f"{a.get('message', '')}", flush=True)
+
+    # every injected failure has an alert signature; a drill whose
+    # signature never fired means the watchdog is blind to that failure
+    expected_kinds: set[str] = set()
+    if args.kill_host is not None and args.kill_at_step is not None:
+        expected_kinds.add("worker_death")
+    if args.die_after_persist_host is not None \
+            and args.die_after_persist_step is not None:
+        expected_kinds.add("worker_death")
+    if args.stall_host is not None and args.stall_s:
+        expected_kinds.add("worker_death")
+    if args.straggle_host is not None and args.straggle_s:
+        expected_kinds.add("straggler")
+    if args.kill_proxy_host is not None:
+        expected_kinds.add("proxy_host_death")
+
     lockstep = report.lockstep()
     summary = {
         "hosts": n_hosts_final,
@@ -219,6 +247,8 @@ def main(argv=None) -> int:
         "lockstep_converged": lockstep,
         "final_digest": next(iter(report.final_digests.values()), None),
         "log": report.log_path,
+        "alerts": report.alerts,
+        "alert_kinds": sorted(report.alert_kinds()),
     }
     if args.proxy_hosts:
         summary["proxy_placements"] = [
@@ -233,6 +263,17 @@ def main(argv=None) -> int:
         return 1
     if report.latest_committed is None and args.steps >= args.ckpt_every > 0:
         print("[cluster] FAIL: no checkpoint round ever committed",
+              file=sys.stderr)
+        return 1
+    if args.expect_no_alerts and report.alerts:
+        print(f"[cluster] FAIL: watchdog raised "
+              f"{sorted(report.alert_kinds())} on a run expected to be "
+              f"alert-free", file=sys.stderr)
+        return 1
+    missing = expected_kinds - report.alert_kinds()
+    if missing:
+        print(f"[cluster] FAIL: drill ran but watchdog never raised "
+              f"{sorted(missing)} (got {sorted(report.alert_kinds())})",
               file=sys.stderr)
         return 1
     return 0

@@ -1,0 +1,198 @@
+"""Perf baselines in-repo: diff fresh bench rows against committed ones.
+
+``BENCH_results.json`` at the repo root is the committed baseline — the
+numbers the current code is *supposed* to produce. This module turns it
+into a regression oracle:
+
+* :func:`compare` diffs a fresh ``benchmarks.run --json`` row set
+  against the baseline row set and returns findings in two classes:
+
+  - **hard** — a correctness boolean the baseline had True came back
+    False (or vanished): ``within_paper_envelope``, ``bit_identical``,
+    ``boundary_scan_gone``, ``boundary_bit_identical``,
+    ``blocking_below_sync``. These are never jitter.
+  - **perf** — ``us_per_call`` grew beyond ``ratio``× the baseline
+    (default 3× — wide enough that a CI runner vs the baseline machine
+    never false-positives, tight enough that a real 4× regression is
+    caught deterministically). Sub-``min_us`` rows are skipped: a 0.2µs
+    hook timing is all noise.
+
+* :func:`append_history` keeps ``BENCH_history.jsonl`` — one line per
+  compared run, so the perf trajectory across commits is a file in the
+  repo, not a dashboard somewhere else.
+
+Wired into ``benchmarks.run --compare`` (fresh run vs baseline, exit 1
+on findings) and ``benchmarks.gate --baseline`` (envelope checks *plus*
+baseline diff in one gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_SCHEMA = "crum-bench-compare/1"
+
+#: booleans where baseline True -> fresh False/missing is a hard failure
+HARD_BOOL_KEYS = (
+    "within_paper_envelope",
+    "bit_identical",
+    "boundary_scan_gone",
+    "boundary_bit_identical",
+    "blocking_below_sync",
+)
+
+DEFAULT_RATIO = 3.0
+DEFAULT_MIN_US = 5.0
+
+__all__ = [
+    "BASELINE_SCHEMA",
+    "HARD_BOOL_KEYS",
+    "DEFAULT_RATIO",
+    "load_rows",
+    "compare",
+    "append_history",
+]
+
+
+def load_rows(path: str) -> tuple[dict, list[dict]]:
+    """A ``crum-bench-rows/1`` dump (or bare row list) -> (doc, rows)."""
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, list):
+        return {"rows": doc}, doc
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: no 'rows' array")
+    return doc, [r for r in rows if isinstance(r, dict) and "name" in r]
+
+
+def _by_name(rows: list[dict]) -> dict[str, dict]:
+    return {str(r["name"]): r for r in rows if "name" in r}
+
+
+def compare(
+    fresh_rows: list[dict],
+    base_rows: list[dict],
+    *,
+    ratio: float = DEFAULT_RATIO,
+    min_us: float = DEFAULT_MIN_US,
+    check_missing: bool = True,
+) -> list[dict]:
+    """Findings (empty = fresh run is no worse than the baseline).
+
+    Each finding: ``{kind, name, message}`` plus kind-specific fields.
+    ``check_missing=False`` skips the missing-row class — for partial
+    runs that only exercised a subset of the benchmarks.
+    """
+    fresh = _by_name(fresh_rows)
+    base = _by_name(base_rows)
+    findings: list[dict] = []
+
+    if check_missing:
+        for name in sorted(set(base) - set(fresh)):
+            findings.append({
+                "kind": "missing_row", "name": name,
+                "message": f"baseline row {name!r} absent from fresh run",
+            })
+
+    for name, b in sorted(base.items()):
+        f = fresh.get(name)
+        if f is None:
+            continue
+        for key in HARD_BOOL_KEYS:
+            if b.get(key) is True and not f.get(key):
+                findings.append({
+                    "kind": "hard_flip", "name": name, "key": key,
+                    "message": f"{name}: {key} flipped True -> "
+                               f"{f.get(key)!r}",
+                })
+        bu, fu = b.get("us_per_call"), f.get("us_per_call")
+        if (
+            isinstance(bu, (int, float)) and isinstance(fu, (int, float))
+            and max(bu, fu) >= min_us and bu > 0 and fu > bu * ratio
+        ):
+            findings.append({
+                "kind": "perf_regression", "name": name,
+                "base_us": bu, "fresh_us": fu,
+                "ratio": round(fu / bu, 2), "limit": ratio,
+                "message": f"{name}: us_per_call {fu} is "
+                           f"{fu / bu:.1f}x the baseline {bu} "
+                           f"(limit {ratio}x)",
+            })
+    return findings
+
+
+def append_history(
+    path: str,
+    fresh_doc: dict,
+    findings: list[dict],
+    *,
+    baseline_rev: str | None = None,
+) -> None:
+    """One JSONL line per compared run — the in-repo perf trajectory."""
+    line = {
+        "schema": BASELINE_SCHEMA,
+        "timestamp": fresh_doc.get("timestamp"),
+        "git_rev": fresh_doc.get("git_rev"),
+        "baseline_rev": baseline_rev,
+        "n_rows": len(fresh_doc.get("rows") or []),
+        "failed_benchmarks": fresh_doc.get("failed") or [],
+        "n_findings": len(findings),
+        "finding_kinds": sorted({f.get("kind", "") for f in findings}),
+        "findings": findings,
+        # the headline numbers worth a trend line at a glance
+        "headline": {
+            r["name"]: r.get("us_per_call")
+            for r in (fresh_doc.get("rows") or [])
+            if isinstance(r, dict) and r.get("name") in (
+                "fig4_proxy_overhead_pipelined_kernelish_2ms_step",
+                "fig4_runtime_overhead",
+                "obs_noop_hook",
+            )
+        },
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(line, default=str) + "\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("fresh", help="fresh benchmarks.run --json dump")
+    ap.add_argument("--baseline", default="BENCH_results.json",
+                    help="committed baseline dump (default: "
+                         "BENCH_results.json)")
+    ap.add_argument("--ratio", type=float, default=DEFAULT_RATIO)
+    ap.add_argument("--history", metavar="FILE", default=None,
+                    help="append one trajectory line to this JSONL")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="partial run: skip the missing-row findings")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"[baseline] no baseline at {args.baseline}; nothing to "
+              f"compare", file=sys.stderr)
+        return 0
+    fresh_doc, fresh_rows = load_rows(args.fresh)
+    base_doc, base_rows = load_rows(args.baseline)
+    findings = compare(
+        fresh_rows, base_rows, ratio=args.ratio,
+        check_missing=not args.allow_missing,
+    )
+    for f in findings:
+        print(f"[baseline] FAIL: {f['message']}", file=sys.stderr)
+    if args.history:
+        append_history(args.history, fresh_doc, findings,
+                       baseline_rev=base_doc.get("git_rev"))
+    if not findings:
+        print(f"[baseline] {len(fresh_rows)} rows vs "
+              f"{len(base_rows)} baseline rows: no regressions")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,6 +39,8 @@ __all__ = [
     "ProxyEndpointLine",
     "ProxyPlacementLine",
     "ProxyHostDeathLine",
+    "AlertLine",
+    "alerts",
 ]
 
 
@@ -163,6 +165,20 @@ class ProxyHostDeathLine(JournalRecord):
     worker: int = -1
 
 
+@dataclass
+class AlertLine(JournalRecord):
+    """One SLO-watchdog rule violation (``repro.obs.watch.Alert``)."""
+
+    kind: str = ""
+    severity: str = ""
+    host: int | None = None
+    step: int | None = None
+    value: float | None = None
+    limit: float | None = None
+    message: str = ""
+    alert_schema: str = ""
+
+
 RECORD_TYPES: dict[str, type[JournalRecord]] = {
     "round": RoundLine,
     "join": JoinLine,
@@ -172,6 +188,7 @@ RECORD_TYPES: dict[str, type[JournalRecord]] = {
     "proxy_endpoint": ProxyEndpointLine,
     "proxy_placement": ProxyPlacementLine,
     "proxy_host_death": ProxyHostDeathLine,
+    "alert": AlertLine,
 }
 
 
@@ -213,3 +230,7 @@ def read_journal(path: str) -> list[JournalRecord]:
 
 def rounds(path: str) -> list[RoundLine]:
     return [r for r in read_journal(path) if isinstance(r, RoundLine)]
+
+
+def alerts(path: str) -> list[AlertLine]:
+    return [r for r in read_journal(path) if isinstance(r, AlertLine)]

@@ -13,15 +13,83 @@ Snapshots are taken from ``/proc/self/fd`` (symlink targets, so the
 report names *what* leaked, not just how many) and the ``/dev/shm``
 listing. On platforms without ``/proc`` the check degrades to a no-op
 rather than a false failure.
+
+For *live* monitoring the before/after context manager is the wrong
+shape — a watchdog wants a cheap point-in-time count plus a trend over a
+window. :func:`sample` is that light snapshot (counts only, no symlink
+resolution) and :class:`PeriodicAudit` the rate-limited window over it;
+the SLO watchdog's leak-trend rule and long-running drills share them.
 """
 from __future__ import annotations
 
 import os
+import time
+from collections import deque
+from typing import Callable
 
-__all__ = ["ResourceSnapshot", "LeakCheck"]
+__all__ = ["ResourceSnapshot", "LeakCheck", "sample", "PeriodicAudit"]
 
 _FD_DIR = "/proc/self/fd"
 _SHM_DIR = "/dev/shm"
+
+
+def sample() -> dict:
+    """Point-in-time resource counts: ``{supported, fd, shm}``.
+
+    Cheaper than :meth:`ResourceSnapshot.capture` (two listdirs, no
+    readlink per fd) — safe to call on a periodic tick. ``supported`` is
+    False on platforms without ``/proc`` (counts are then 0, and any
+    consumer should treat the audit as a no-op rather than a leak).
+    """
+    try:
+        fd = len(os.listdir(_FD_DIR))
+    except OSError:
+        return {"supported": False, "fd": 0, "shm": 0}
+    try:
+        shm = len(os.listdir(_SHM_DIR))
+    except OSError:
+        shm = 0
+    return {"supported": True, "fd": fd, "shm": shm}
+
+
+class PeriodicAudit:
+    """Rate-limited :func:`sample` window with a growth-trend readout.
+
+    ``maybe_sample()`` takes at most one sample per ``interval_s`` and
+    keeps the last ``window`` of them; ``trend(key)`` reports growth
+    across the full window *only when it is monotonically non-shrinking*
+    — a transient burst that is reclaimed reads as no trend, a steady
+    climb (the actual leak signature) reads as its total growth.
+    """
+
+    def __init__(self, interval_s: float = 2.0, window: int = 5,
+                 sampler: Callable[[], dict] | None = None):
+        self.interval_s = float(interval_s)
+        self.window = int(window)
+        self.sampler = sampler or sample
+        self.samples: deque = deque(maxlen=self.window)
+        self._last_t: float | None = None
+
+    def maybe_sample(self, now: float | None = None) -> dict | None:
+        """One sample if the interval elapsed, else None."""
+        now = time.monotonic() if now is None else now
+        if self._last_t is not None and now - self._last_t < self.interval_s:
+            return None
+        self._last_t = now
+        s = self.sampler()
+        if s.get("supported"):
+            self.samples.append(s)
+        return s
+
+    def trend(self, key: str) -> int | None:
+        """Monotonic growth of ``key`` over the window; None until the
+        window is full, 0 when any sample shrank (not a steady leak)."""
+        if len(self.samples) < self.window:
+            return None
+        vals = [int(s.get(key, 0)) for s in self.samples]
+        if any(b < a for a, b in zip(vals, vals[1:])):
+            return 0
+        return vals[-1] - vals[0]
 
 
 class ResourceSnapshot:

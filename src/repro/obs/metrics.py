@@ -165,6 +165,10 @@ class Registry:
         with self._lock:
             return dict(self.counters)
 
+    def gauges_snapshot(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self.gauges)
+
     def hist_summary(self, name: str) -> dict[str, float]:
         with self._lock:
             vals = sorted(self._hists.get(name, []))

@@ -20,6 +20,12 @@ fault/eviction rates, wire vs dirty bytes.
 trace_event schema (required keys per phase, balanced ``B``/``E``
 nesting per (pid, tid) in every shard) and exits non-zero on violation —
 the CI teeth for satellite "trace correctness".
+
+Kill drills SIGKILL processes mid-run, so the reporter tolerates the
+gaps they leave — a traced process with no metrics dump, a dump torn
+mid-replace — and *names* them (``missing_metrics``/``corrupt_metrics``
+in the summary) instead of failing. ``--summary-json FILE`` writes the
+whole summary as machine-readable JSON (the CI artifact).
 """
 from __future__ import annotations
 
@@ -100,16 +106,38 @@ def journal_events(journal_path: str) -> list[dict]:
     return out
 
 
+def _shard_id(path: str, prefix: str, suffix: str) -> str | None:
+    """``<prefix><process>-<pid><suffix>`` -> ``<process>-<pid>``."""
+    name = os.path.basename(path)
+    if not (name.startswith(prefix) and name.endswith(suffix)):
+        return None
+    return name[len(prefix):len(name) - len(suffix)]
+
+
 def merge_metrics(run_dir: str) -> dict:
-    """Sum per-process registry snapshots into one run-level view."""
+    """Sum per-process registry snapshots into one run-level view.
+
+    Kill drills leave gaps: a SIGKILLed process traced events but never
+    reached its atexit metrics dump, and a dump torn mid-replace is
+    unparseable. Both are *expected* in failure drills, so the merge
+    proceeds over what exists — but the gaps are named in the result
+    (``missing_metrics`` / ``corrupt_metrics``) so a report over a run
+    that should have been clean can be gated on them.
+    """
     counters: dict[str, float] = {}
     gauges: dict[str, float] = {}
     processes: list[str] = []
+    corrupt: list[str] = []
+    seen: set[str] = set()
     for path in sorted(glob.glob(os.path.join(run_dir, "metrics-*.json"))):
+        sid = _shard_id(path, "metrics-", ".json")
+        if sid is not None:
+            seen.add(sid)
         try:
             with open(path) as f:
                 doc = json.load(f)
         except (OSError, ValueError):
+            corrupt.append(os.path.basename(path))
             continue
         processes.append(str(doc.get("process") or
                              os.path.basename(path)))
@@ -121,7 +149,18 @@ def merge_metrics(run_dir: str) -> dict:
                 # gauges are per-process cumulative values: sum across
                 # processes gives the run total (e.g. uvm_faults per space)
                 gauges[k] = gauges.get(k, 0) + v
-    return {"counters": counters, "gauges": gauges, "processes": processes}
+    # a trace shard with no metrics twin = that process died before its
+    # final dump (SIGKILL drill, crash) — a gap, not a reporter error
+    missing = sorted(
+        sid
+        for path in glob.glob(os.path.join(run_dir, "trace-*.jsonl"))
+        if (sid := _shard_id(path, "trace-", ".jsonl")) is not None
+        and sid not in seen
+    )
+    return {
+        "counters": counters, "gauges": gauges, "processes": processes,
+        "missing_metrics": missing, "corrupt_metrics": corrupt,
+    }
 
 
 # -- validation -------------------------------------------------------------
@@ -194,56 +233,112 @@ def span_durations(events: list[dict]) -> dict[str, list[float]]:
     return durs
 
 
-def summarize(events: list[dict], metrics: dict) -> str:
+def summary_dict(events: list[dict], metrics: dict) -> dict:
+    """The run summary as data — one source for text AND --summary-json."""
     durs = span_durations(events)
-    lines: list[str] = []
-    lines.append(f"{'span':<28}{'count':>8}{'p50_us':>12}{'p99_us':>12}"
-                 f"{'total_ms':>12}")
+    spans = {}
     for name in sorted(durs):
         vals = sorted(durs[name])
-        lines.append(
-            f"{name:<28}{len(vals):>8}{_pct(vals, 0.5):>12.0f}"
-            f"{_pct(vals, 0.99):>12.0f}{sum(vals) / 1e3:>12.1f}"
-        )
+        spans[name] = {
+            "count": len(vals),
+            "p50_us": round(_pct(vals, 0.5), 1),
+            "p99_us": round(_pct(vals, 0.99), 1),
+            "total_ms": round(sum(vals) / 1e3, 3),
+        }
 
     c = metrics.get("counters", {})
     g = metrics.get("gauges", {})
+    derived: dict = {}
     step_total = sum(durs.get("app.step", [])) or sum(
         durs.get("proxy.step", [])
     )
     stall_total = sum(durs.get("app.sync_stall", []))
-    lines.append("")
-    lines.append("derived:")
     if step_total:
-        lines.append(
-            f"  stall_ratio            {stall_total / step_total:.4f}  "
-            f"(sync stall / step time)"
-        )
+        derived["stall_ratio"] = round(stall_total / step_total, 4)
     steps = len(durs.get("proxy.step", [])) or len(durs.get("app.step", []))
-    faults = g.get("uvm_faults", 0)
-    evictions = g.get("uvm_evictions", 0)
     if steps:
-        lines.append(f"  uvm_faults_per_step    {faults / steps:.2f}")
-        lines.append(f"  uvm_evictions_per_step {evictions / steps:.2f}")
+        derived["uvm_faults_per_step"] = round(
+            g.get("uvm_faults", 0) / steps, 2)
+        derived["uvm_evictions_per_step"] = round(
+            g.get("uvm_evictions", 0) / steps, 2)
     wire = g.get("transport_wire_tx", 0) + g.get("transport_wire_rx", 0)
     dirty = c.get("proxy_bytes_synced", 0) or c.get("ckpt_bytes_written", 0)
     if wire or dirty:
-        ratio = f"  ({wire / dirty:.3f}x)" if dirty else ""
+        derived["wire_bytes"] = int(wire)
+        derived["dirty_bytes"] = int(dirty)
+        if dirty:
+            derived["wire_vs_dirty_x"] = round(wire / dirty, 3)
+    if c.get("proxy_restarts", 0):
+        derived["proxy_restarts"] = int(c["proxy_restarts"])
+    if c.get("coord_rounds_total", 0):
+        derived["coord_rounds"] = int(c["coord_rounds_total"])
+        derived["coord_rounds_committed"] = int(
+            c.get("coord_rounds_committed", 0))
+    if c.get("watch_alerts_total", 0):
+        derived["watch_alerts"] = int(c["watch_alerts_total"])
+    return {
+        "schema": "crum-obs-summary/1",
+        "spans": spans,
+        "derived": derived,
+        "counters": c,
+        "gauges": g,
+        "processes": metrics.get("processes", []),
+        "missing_metrics": metrics.get("missing_metrics", []),
+        "corrupt_metrics": metrics.get("corrupt_metrics", []),
+    }
+
+
+def summarize(events: list[dict], metrics: dict) -> str:
+    doc = summary_dict(events, metrics)
+    lines: list[str] = []
+    lines.append(f"{'span':<28}{'count':>8}{'p50_us':>12}{'p99_us':>12}"
+                 f"{'total_ms':>12}")
+    for name, s in doc["spans"].items():
         lines.append(
-            f"  wire_bytes vs dirty    {int(wire)} / {int(dirty)}{ratio}"
+            f"{name:<28}{s['count']:>8}{s['p50_us']:>12.0f}"
+            f"{s['p99_us']:>12.0f}{s['total_ms']:>12.1f}"
         )
-    restarts = c.get("proxy_restarts", 0)
-    if restarts:
-        lines.append(f"  proxy_restarts         {int(restarts)}")
-    rounds = c.get("coord_rounds_total", 0)
-    if rounds:
+    d = doc["derived"]
+    lines.append("")
+    lines.append("derived:")
+    if "stall_ratio" in d:
         lines.append(
-            f"  coord_rounds           {int(rounds)} "
-            f"({int(c.get('coord_rounds_committed', 0))} committed)"
+            f"  stall_ratio            {d['stall_ratio']:.4f}  "
+            f"(sync stall / step time)"
         )
-    if metrics.get("processes"):
+    if "uvm_faults_per_step" in d:
+        lines.append(f"  uvm_faults_per_step    "
+                     f"{d['uvm_faults_per_step']:.2f}")
+        lines.append(f"  uvm_evictions_per_step "
+                     f"{d['uvm_evictions_per_step']:.2f}")
+    if "wire_bytes" in d:
+        ratio = (f"  ({d['wire_vs_dirty_x']:.3f}x)"
+                 if "wire_vs_dirty_x" in d else "")
         lines.append(
-            f"  metric sources         {', '.join(metrics['processes'])}"
+            f"  wire_bytes vs dirty    {d['wire_bytes']} / "
+            f"{d.get('dirty_bytes', 0)}{ratio}"
+        )
+    if "proxy_restarts" in d:
+        lines.append(f"  proxy_restarts         {d['proxy_restarts']}")
+    if "coord_rounds" in d:
+        lines.append(
+            f"  coord_rounds           {d['coord_rounds']} "
+            f"({d['coord_rounds_committed']} committed)"
+        )
+    if "watch_alerts" in d:
+        lines.append(f"  watch_alerts           {d['watch_alerts']}")
+    if doc["processes"]:
+        lines.append(
+            f"  metric sources         {', '.join(doc['processes'])}"
+        )
+    if doc["missing_metrics"]:
+        lines.append(
+            f"  MISSING metric shards  {', '.join(doc['missing_metrics'])} "
+            f"(process died before its final dump)"
+        )
+    if doc["corrupt_metrics"]:
+        lines.append(
+            f"  CORRUPT metric shards  {', '.join(doc['corrupt_metrics'])}"
         )
     return "\n".join(lines)
 
@@ -290,6 +385,9 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="validate trace_event schema + span nesting; "
                          "exit non-zero on violation")
+    ap.add_argument("--summary-json", metavar="FILE", default=None,
+                    help="also write the summary (spans + derived + "
+                         "merged metrics + shard gaps) as JSON")
     args = ap.parse_args(argv)
 
     if not os.path.isdir(args.run_dir):
@@ -299,6 +397,11 @@ def main(argv=None) -> int:
     n_shard_events = sum(1 for e in events if "_shard" in e)
     print(f"[obs] merged {n_shard_events} events -> {out}")
     print(summarize(events, metrics))
+    if args.summary_json:
+        with open(args.summary_json, "w") as f:
+            json.dump(summary_dict(events, metrics), f, indent=2,
+                      default=str)
+        print(f"[obs] wrote summary to {args.summary_json}")
     if args.check:
         problems = validate_events(events)
         if problems:

@@ -34,6 +34,8 @@ def test_happy_path_two_hosts(tmp_path):
     assert lc.diff()["fd_growth"] <= 4
     assert [r.step for r in report.committed] == [2, 4]
     assert report.aborted == []
+    # the watchdog ran the whole time and the happy path is alert-free
+    assert report.alerts == []
     assert report.latest_committed == 4
     assert report.lockstep()
     assert committed_steps(root) == [2, 4]
@@ -70,6 +72,16 @@ def test_kill_and_respawn_converges(tmp_path):
     assert joins and joins[-1]["restored_from"] == 3
     # no partial/corrupt commits anywhere
     assert committed_steps(root) == [3, 6, 9]
+    # the watchdog saw the death: a worker_death alert was journaled
+    # BEFORE the retried round at the kill boundary committed
+    assert "worker_death" in report.alert_kinds()
+    log = _read_log(report.log_path)
+    alert_i = next(i for i, e in enumerate(log)
+                   if e["event"] == "alert" and e["kind"] == "worker_death")
+    commit6_i = next(i for i, e in enumerate(log)
+                     if e["event"] == "round" and e["step"] == 6
+                     and e["status"] == "committed")
+    assert alert_i < commit6_i
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
@@ -144,6 +156,10 @@ def test_straggler_flagged_but_never_blocks_commit(tmp_path):
     # the slow host inflates round time, not the commit critical section
     assert all(r.round_s >= 0.6 for r in report.committed)
     assert all(r.commit_s < 0.6 for r in report.committed)
+    # the watchdog names the slow host, and only as a warning
+    straggler_alerts = [a for a in report.alerts if a["kind"] == "straggler"]
+    assert straggler_alerts and all(a["host"] == 2 for a in straggler_alerts)
+    assert all(a["severity"] == "warning" for a in report.alerts)
 
 
 def test_sweep_removes_aborted_partials(tmp_path):

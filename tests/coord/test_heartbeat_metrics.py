@@ -1,0 +1,158 @@
+"""HEARTBEAT metrics piggyback vs a live Coordinator: torn frames,
+oversized frames, idempotent redelivery, end-to-end ingestion."""
+import queue
+import socket
+import struct
+import threading
+import time
+
+import pytest
+
+from repro.coord import protocol
+from repro.coord.coordinator import Coordinator
+
+
+@pytest.fixture
+def coord(tmp_path):
+    c = Coordinator(str(tmp_path / "root"), n_hosts=1).start()
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            try:
+                kind, conn, frame = c._inbox.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if kind == "eof":
+                c._on_eof(conn)
+            else:
+                c._dispatch(conn, frame)
+
+    t = threading.Thread(target=pump, daemon=True)
+    t.start()
+    try:
+        yield c
+    finally:
+        stop.set()
+        t.join(timeout=5)
+        c.close()
+
+
+def _join(coord, host=0):
+    conn = protocol.connect(coord.address, timeout=5)
+    conn.settimeout(5)
+    conn.send(protocol.MSG_JOIN, host=host, pid=1234, restored_from=None)
+    welcome = conn.recv()
+    assert welcome["type"] == protocol.MSG_WELCOME
+    return conn
+
+
+def _wait(cond, timeout=5.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if cond():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def _beat(conn, host, step, payload):
+    conn.send(protocol.MSG_HEARTBEAT, host=host, step=step,
+              metrics=payload)
+
+
+def test_piggyback_lands_in_store_end_to_end(coord):
+    conn = _join(coord)
+    _beat(conn, 0, 1, {"seq": 1, "counters": {"proxy_syncs_total": 2},
+                       "gauges": {"uvm_faults": 7}})
+    assert _wait(lambda: coord.live.store.latest(0, "proxy_syncs_total")
+                 == 2.0)
+    assert coord.live.store.latest(0, "uvm_faults") == 7.0
+    # second delta accumulates into the running total
+    _beat(conn, 0, 2, {"seq": 2, "counters": {"proxy_syncs_total": 3},
+                       "gauges": {}})
+    assert _wait(lambda: coord.live.store.latest(0, "proxy_syncs_total")
+                 == 5.0)
+    conn.close()
+
+
+def test_redelivered_delta_is_idempotent(coord):
+    """The retry path: one delta delivered twice must count once."""
+    conn = _join(coord)
+    payload = {"seq": 1, "counters": {"x": 5}, "gauges": {}}
+    _beat(conn, 0, 1, payload)
+    _beat(conn, 0, 1, payload)  # redelivery (same seq, same content)
+    assert _wait(lambda: coord.live.store.latest(0, "x") == 5.0)
+    time.sleep(0.1)  # let the duplicate drain through the pump
+    assert coord.live.store.latest(0, "x") == 5.0
+    assert len(coord.live.store.series(0, "x")) == 1
+    assert coord.live.dropped >= 1
+    conn.close()
+
+
+def test_rejoin_resets_seq_tracking(coord):
+    conn = _join(coord)
+    _beat(conn, 0, 1, {"seq": 7, "counters": {"x": 5}, "gauges": {}})
+    assert _wait(lambda: coord.live.store.latest(0, "x") == 5.0)
+    conn.close()
+    # a respawned incarnation starts its piggyback back at seq 1
+    conn2 = _join(coord)
+    _beat(conn2, 0, 1, {"seq": 1, "counters": {"x": 2}, "gauges": {}})
+    assert _wait(lambda: coord.live.store.latest(0, "x") == 2.0)
+    conn2.close()
+
+
+def test_torn_frame_is_eof_not_poison(coord):
+    """A worker SIGKILLed mid-send leaves a partial frame; the
+    length-prefixed reader turns it into EOF, never a parsed frame."""
+    good = _join(coord)
+    _beat(good, 0, 1, {"seq": 1, "counters": {"a": 1}, "gauges": {}})
+    assert _wait(lambda: coord.live.store.latest(0, "a") == 1.0)
+
+    raw = socket.create_connection(coord.address, timeout=5)
+    raw.sendall(struct.pack("<I", 100) + b"\x93\x01")  # 100 promised, 2 sent
+    raw.close()
+
+    # the coordinator shrugged: the good connection still ingests
+    _beat(good, 0, 2, {"seq": 2, "counters": {"a": 1}, "gauges": {}})
+    assert _wait(lambda: coord.live.store.latest(0, "a") == 2.0)
+    assert coord.live.ingested == 2
+    good.close()
+
+
+def test_oversized_frame_is_rejected_not_buffered(coord):
+    """A corrupt/hostile length header must not make the coordinator
+    allocate or stall — the reader raises and the connection dies."""
+    good = _join(coord)
+    raw = socket.create_connection(coord.address, timeout=5)
+    raw.sendall(struct.pack("<I", protocol.MAX_FRAME + 1) + b"x" * 64)
+    # reader thread hits ValueError -> eof; peer sees the close
+    raw.settimeout(5)
+    assert raw.recv(1) == b""  # coordinator closed it
+    raw.close()
+
+    _beat(good, 0, 1, {"seq": 1, "counters": {"b": 3}, "gauges": {}})
+    assert _wait(lambda: coord.live.store.latest(0, "b") == 3.0)
+    good.close()
+
+
+def test_garbage_metrics_payload_never_kills_dispatch(coord):
+    conn = _join(coord)
+    for step, payload in enumerate(
+        ("nonsense", {"seq": "x"}, {"seq": -1}, [1, 2], 9.5), start=1
+    ):
+        _beat(conn, 0, step, payload)
+    _beat(conn, 0, 9, {"seq": 1, "counters": {"ok": 1}, "gauges": {}})
+    assert _wait(lambda: coord.live.store.latest(0, "ok") == 1.0)
+    assert coord.live.dropped >= 4
+    conn.close()
+
+
+def test_heartbeat_without_metrics_still_beats(coord):
+    """Bare heartbeats (nothing new to report) stay valid liveness."""
+    conn = _join(coord)
+    conn.send(protocol.MSG_HEARTBEAT, host=0, step=3)
+    _beat(conn, 0, 4, {"seq": 1, "counters": {}, "gauges": {}})
+    assert _wait(lambda: coord.live.ingested == 1)
+    assert 0 not in coord.monitor.dead_hosts()
+    conn.close()

@@ -1,0 +1,126 @@
+"""Baseline compare: identical passes, injected regression flags, history."""
+import copy
+import json
+import os
+
+from repro.obs import baseline
+
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..")
+)
+
+BASE_ROWS = [
+    {"name": "fig4_proxy_overhead_pipelined_kernelish_2ms_step",
+     "us_per_call": 2100.0, "overhead_pct": 4.2,
+     "within_paper_envelope": True},
+    {"name": "proxy_kill_replay_recovery", "us_per_call": 900.0,
+     "bit_identical": True},
+    {"name": "fused_digest_boundary_fused", "us_per_call": 150.0,
+     "boundary_scan_gone": True},
+    {"name": "obs_noop_hook", "us_per_call": 0.02},
+]
+
+
+def test_identical_rows_pass():
+    assert baseline.compare(copy.deepcopy(BASE_ROWS), BASE_ROWS) == []
+
+
+def test_committed_baseline_vs_itself_passes():
+    """The acceptance criterion: --compare on the committed baseline is
+    deterministic-green (same file on both sides)."""
+    _, rows = baseline.load_rows(
+        os.path.join(REPO_ROOT, "BENCH_results.json")
+    )
+    assert rows, "committed BENCH_results.json must have rows"
+    assert baseline.compare(rows, rows) == []
+
+
+def test_injected_perf_regression_flags():
+    fresh = copy.deepcopy(BASE_ROWS)
+    fresh[1]["us_per_call"] = 900.0 * 4  # inject a 4x slowdown
+    findings = baseline.compare(fresh, BASE_ROWS, ratio=3.0)
+    [f] = findings
+    assert f["kind"] == "perf_regression"
+    assert f["name"] == "proxy_kill_replay_recovery"
+    assert f["ratio"] == 4.0
+
+
+def test_jitter_below_ratio_passes():
+    fresh = copy.deepcopy(BASE_ROWS)
+    fresh[0]["us_per_call"] *= 2.5  # big jitter, still under the 3x fence
+    assert baseline.compare(fresh, BASE_ROWS, ratio=3.0) == []
+
+
+def test_tiny_rows_skip_perf_rule():
+    """A 0.02us hook timing is pure noise — never a perf finding."""
+    fresh = copy.deepcopy(BASE_ROWS)
+    fresh[3]["us_per_call"] = 0.4  # 20x, but sub-min_us
+    assert baseline.compare(fresh, BASE_ROWS) == []
+
+
+def test_hard_boolean_flip_flags():
+    fresh = copy.deepcopy(BASE_ROWS)
+    fresh[1]["bit_identical"] = False
+    fresh[2].pop("boundary_scan_gone")  # vanished counts as flipped
+    kinds = {(f["kind"], f.get("key")) for f in
+             baseline.compare(fresh, BASE_ROWS)}
+    assert ("hard_flip", "bit_identical") in kinds
+    assert ("hard_flip", "boundary_scan_gone") in kinds
+
+
+def test_missing_row_detection_and_optout():
+    fresh = [r for r in copy.deepcopy(BASE_ROWS)
+             if r["name"] != "obs_noop_hook"]
+    findings = baseline.compare(fresh, BASE_ROWS)
+    assert [f["kind"] for f in findings] == ["missing_row"]
+    assert baseline.compare(fresh, BASE_ROWS, check_missing=False) == []
+
+
+def test_new_rows_never_flag():
+    """Growth is not a regression: fresh-only rows are ignored."""
+    fresh = copy.deepcopy(BASE_ROWS) + [
+        {"name": "brand_new_bench", "us_per_call": 1e9}
+    ]
+    assert baseline.compare(fresh, BASE_ROWS) == []
+
+
+def test_history_append(tmp_path):
+    path = str(tmp_path / "BENCH_history.jsonl")
+    doc = {"timestamp": "2026-08-07T00:00:00+00:00", "git_rev": "abc",
+           "failed": [], "rows": BASE_ROWS}
+    baseline.append_history(path, doc, [], baseline_rev="base123")
+    baseline.append_history(
+        path, doc,
+        [{"kind": "perf_regression", "name": "x", "message": "m"}],
+    )
+    lines = [json.loads(x) for x in open(path)]
+    assert len(lines) == 2
+    assert lines[0]["schema"] == baseline.BASELINE_SCHEMA
+    assert lines[0]["n_findings"] == 0
+    assert lines[0]["baseline_rev"] == "base123"
+    assert lines[1]["finding_kinds"] == ["perf_regression"]
+    assert "obs_noop_hook" in lines[0]["headline"]
+
+
+def test_cli_exit_codes(tmp_path):
+    fresh_ok = str(tmp_path / "fresh.json")
+    with open(fresh_ok, "w") as f:
+        json.dump({"rows": copy.deepcopy(BASE_ROWS)}, f)
+    base = str(tmp_path / "base.json")
+    with open(base, "w") as f:
+        json.dump({"rows": BASE_ROWS, "git_rev": "b"}, f)
+    hist = str(tmp_path / "hist.jsonl")
+    assert baseline.main([fresh_ok, "--baseline", base,
+                          "--history", hist]) == 0
+
+    bad_rows = copy.deepcopy(BASE_ROWS)
+    bad_rows[1]["us_per_call"] *= 10
+    fresh_bad = str(tmp_path / "bad.json")
+    with open(fresh_bad, "w") as f:
+        json.dump({"rows": bad_rows}, f)
+    assert baseline.main([fresh_bad, "--baseline", base,
+                          "--history", hist]) == 1
+    assert len(open(hist).readlines()) == 2
+    # no baseline file: informational skip, not a failure
+    assert baseline.main([fresh_ok, "--baseline",
+                          str(tmp_path / "nope.json")]) == 0

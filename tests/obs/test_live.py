@@ -1,0 +1,212 @@
+"""Live telemetry plane: piggyback deltas, bounded store, defensive ingest."""
+import json
+import os
+
+from repro.obs import metrics as obs_metrics
+from repro.obs.live import (
+    DEFAULT_RING,
+    MAX_METRICS_PER_HOST,
+    HeartbeatPiggyback,
+    LiveAggregator,
+    SeriesStore,
+    read_snapshot,
+)
+
+
+# -- SeriesStore -------------------------------------------------------------
+
+def test_ring_buffer_is_bounded():
+    st = SeriesStore(ring=4)
+    for i in range(100):
+        st.append(0, "m", float(i), float(i))
+    pts = st.series(0, "m")
+    assert len(pts) == 4
+    assert [v for _, v in pts] == [96.0, 97.0, 98.0, 99.0]
+    assert st.latest(0, "m") == 99.0
+
+
+def test_per_host_metric_budget():
+    st = SeriesStore(ring=4)
+    for i in range(MAX_METRICS_PER_HOST):
+        assert st.append(0, f"m{i}", 0.0, 1.0)
+    assert not st.append(0, "one_too_many", 0.0, 1.0)
+    # other hosts have their own budget
+    assert st.append(1, "m0", 0.0, 1.0)
+    st.drop_host(0)
+    assert st.append(0, "fresh_after_drop", 0.0, 1.0)
+
+
+def test_snapshot_shape_is_json_ready():
+    st = SeriesStore()
+    st.append(0, "a", 1.5, 2.0)
+    st.append(3, "b", 2.5, 4.0)
+    snap = st.snapshot()
+    json.dumps(snap)  # must not raise
+    assert snap["0"]["a"] == [[1.5, 2.0]]
+    assert st.hosts() == [0, 3]
+    assert st.metrics(0) == ["a"]
+
+
+# -- HeartbeatPiggyback ------------------------------------------------------
+
+def test_piggyback_delta_and_seq():
+    reg = obs_metrics.Registry()
+    pb = HeartbeatPiggyback(reg)
+    reg.inc("x", 5)
+    p1 = pb.collect()
+    assert p1["seq"] == 1 and p1["counters"] == {"x": 5}
+    reg.inc("x", 2)
+    p2 = pb.collect()
+    assert p2["seq"] == 2 and p2["counters"] == {"x": 2}
+    # nothing new -> the heartbeat rides bare
+    assert pb.collect() is None
+    reg.set("g", 7.0)
+    p3 = pb.collect()
+    assert p3["seq"] == 3 and p3["gauges"] == {"g": 7.0}
+
+
+def test_piggyback_first_collect_never_none():
+    """An idle worker's first beat still announces itself (seq 1)."""
+    pb = HeartbeatPiggyback(obs_metrics.Registry())
+    p = pb.collect()
+    assert p is not None and p["seq"] == 1
+
+
+def test_piggyback_overflow_defers_not_drops():
+    reg = obs_metrics.Registry()
+    pb = HeartbeatPiggyback(reg, max_keys=3)
+    for i in range(5):
+        reg.inc(f"k{i}", i + 1)
+    p1 = pb.collect()
+    assert len(p1["counters"]) == 3
+    p2 = pb.collect()
+    # the two deferred keys ride the next beat with their FULL value
+    assert set(p1["counters"]) | set(p2["counters"]) == {
+        f"k{i}" for i in range(5)
+    }
+    merged = dict(p1["counters"])
+    merged.update(p2["counters"])
+    assert merged == {f"k{i}": i + 1 for i in range(5)}
+
+
+def test_piggyback_rides_in_one_frame():
+    """The ISSUE's syscall budget: metrics ride INSIDE the heartbeat's
+    framed sendall — one send_frame call, not a second message."""
+    import socket
+
+    from repro.coord.protocol import Connection, recv_frame
+
+    class CountingSock:
+        def __init__(self, sock):
+            self._sock = sock
+            self.sends = []
+
+        def sendall(self, data):
+            self.sends.append(bytes(data))
+            return self._sock.sendall(data)
+
+        def __getattr__(self, name):
+            return getattr(self._sock, name)
+
+    a, b = socket.socketpair()
+    reg = obs_metrics.Registry()
+    reg.inc("x", 3)
+    payload = HeartbeatPiggyback(reg).collect()
+
+    wrapped = CountingSock(a)
+    conn = Connection(wrapped)
+    conn.send("HEARTBEAT", host=0, step=1, metrics=payload)
+    assert len(wrapped.sends) == 1  # header + msgpack body in ONE syscall
+
+    got = recv_frame(b)
+    assert got["metrics"]["counters"] == {"x": 3}
+    a.close(), b.close()
+
+
+# -- LiveAggregator ----------------------------------------------------------
+
+def test_ingest_accumulates_counter_totals():
+    agg = LiveAggregator()
+    assert agg.ingest(0, {"seq": 1, "counters": {"x": 5}, "gauges": {}}, t=1.0)
+    assert agg.ingest(0, {"seq": 2, "counters": {"x": 2}, "gauges": {}}, t=2.0)
+    assert agg.store.latest(0, "x") == 7.0  # running total, not the delta
+    assert agg.ingested == 2
+
+
+def test_ingest_is_idempotent_on_redelivery():
+    """The heartbeat-retry path: the same delta applied twice must count
+    once — seq dedup, not value heuristics."""
+    agg = LiveAggregator()
+    payload = {"seq": 1, "counters": {"x": 5}, "gauges": {"g": 1.0}}
+    assert agg.ingest(0, payload, t=1.0)
+    assert not agg.ingest(0, payload, t=1.1)  # redelivered: dropped
+    assert not agg.ingest(0, dict(payload), t=1.2)  # copy too
+    assert agg.store.latest(0, "x") == 5.0
+    assert len(agg.store.series(0, "x")) == 1
+    assert agg.dropped == 2
+
+
+def test_ingest_reset_host_restarts_seq():
+    agg = LiveAggregator()
+    agg.ingest(0, {"seq": 5, "counters": {"x": 5}, "gauges": {}}, t=1.0)
+    assert not agg.ingest(0, {"seq": 1, "counters": {"x": 1}, "gauges": {}},
+                          t=2.0)
+    agg.reset_host(0)  # re-JOIN: fresh incarnation restarts at seq 1
+    assert agg.ingest(0, {"seq": 1, "counters": {"x": 1}, "gauges": {}},
+                      t=3.0)
+    # totals restart with the process: 1, not 6
+    assert agg.store.latest(0, "x") == 1.0
+
+
+def test_ingest_survives_garbage():
+    agg = LiveAggregator()
+    for garbage in (
+        None,
+        "nope",
+        42,
+        [],
+        {},                                   # no seq
+        {"seq": "one"},                       # wrong type
+        {"seq": 0},                           # out of range
+        {"seq": 1, "counters": "xx", "gauges": 3},
+        {"seq": 2, "counters": {1: 2, "ok": "bad", "b": True}},
+    ):
+        agg.ingest(0, garbage, t=1.0)
+    # seq 1 and 2 were consumed by the shape-valid frames; their junk
+    # keys were all skipped
+    assert agg.store.metrics(0) == []
+    assert agg.ingested == 2  # the two with a valid seq applied (empty)
+    assert agg.dropped == 6   # None is "no payload", not a drop
+
+
+def test_snapshot_roundtrip(tmp_path):
+    path = str(tmp_path / "live_metrics.json")
+    agg = LiveAggregator(snapshot_path=path, snapshot_every_s=0.0)
+    agg.ingest(0, {"seq": 1, "counters": {"x": 5}, "gauges": {}}, t=1.0)
+    agg.observe(-1, "round_s", 0.5, t=2.0)
+    assert agg.write_snapshot() == path
+    doc = read_snapshot(path)
+    assert doc["schema"] == "crum-live-metrics/1"
+    assert doc["series"]["0"]["x"] == [[1.0, 5.0]]
+    assert doc["series"]["-1"]["round_s"] == [[2.0, 0.5]]
+    assert doc["hosts"] == [-1, 0]
+
+    # torn/corrupt snapshot reads as None, not an exception
+    with open(path, "w") as f:
+        f.write('{"schema": "crum-li')
+    assert read_snapshot(path) is None
+    assert read_snapshot(str(tmp_path / "absent.json")) is None
+
+
+def test_maybe_snapshot_rate_limited(tmp_path):
+    path = str(tmp_path / "live.json")
+    agg = LiveAggregator(snapshot_path=path, snapshot_every_s=3600.0)
+    assert agg.maybe_snapshot(now=100.0) == path
+    os.remove(path)
+    assert agg.maybe_snapshot(now=101.0) is None  # inside the interval
+    assert not os.path.exists(path)
+    assert agg.maybe_snapshot(now=4000.0) == path
+
+
+def test_default_ring_is_sane():
+    assert DEFAULT_RING >= 60  # a few minutes at heartbeat cadence

@@ -121,6 +121,48 @@ def test_summary_derives_ratios(tmp_path):
     assert "proxy_restarts" in text
 
 
+def test_missing_and_corrupt_metric_shards_named(tmp_path, capsys):
+    """A SIGKILLed process leaves a trace shard but no metrics dump (or a
+    torn one); the reporter proceeds and NAMES the gap instead of dying."""
+    run_dir = _mk_run(tmp_path)
+    # killed-worker signature: traced, but no metrics twin
+    _write_shard(run_dir, "worker3", 333, [
+        {"name": "app.step", "ph": "X", "ts": 100, "dur": 5, "args": {}},
+    ])
+    # torn metrics dump (SIGKILL mid-replace)
+    with open(os.path.join(run_dir, "metrics-worker4-444.json"), "w") as f:
+        f.write('{"process": "worker4", "counters": {"x"')
+    m = report.merge_metrics(run_dir)
+    assert m["missing_metrics"] == ["worker3-333"]
+    assert m["corrupt_metrics"] == ["metrics-worker4-444.json"]
+    # surviving shards still merged
+    assert m["counters"]["proxy_restarts"] == 1
+    # gaps surface in the text summary and --check still passes
+    _, events, metrics = report.merge(run_dir)
+    text = report.summarize(events, metrics)
+    assert "MISSING metric shards" in text and "worker3-333" in text
+    assert "CORRUPT metric shards" in text
+    assert report.main([run_dir, "--check"]) == 0
+
+
+def test_summary_json_artifact(tmp_path):
+    run_dir = _mk_run(tmp_path)
+    out = os.path.join(run_dir, "summary.json")
+    assert report.main([run_dir, "--summary-json", out]) == 0
+    with open(out) as f:
+        doc = json.load(f)
+    assert doc["schema"] == "crum-obs-summary/1"
+    assert doc["spans"]["app.step"]["count"] == 2
+    assert doc["derived"]["stall_ratio"] == 0.25
+    # proxy.step wins the step count (1 event); faults sum to 10
+    assert doc["derived"]["uvm_faults_per_step"] == 10.0
+    assert doc["counters"]["proxy_restarts"] == 1
+    assert doc["missing_metrics"] == [] and doc["corrupt_metrics"] == []
+    # the dict and the text come from one source
+    text = report.summarize(*report.merge(run_dir)[1:])
+    assert "stall_ratio" in text
+
+
 def test_cli_check_mode(tmp_path, capsys):
     run_dir = _mk_run(tmp_path)
     assert report.main([run_dir, "--check"]) == 0

@@ -1,0 +1,192 @@
+"""SLO watchdog: every rule, severities, journal round-trip, abort hook."""
+import os
+
+import pytest
+
+from repro.obs import journal
+from repro.obs.watch import (
+    ALERT_SCHEMA,
+    SEV_CRITICAL,
+    SEV_WARNING,
+    Alert,
+    WatchConfig,
+    Watchdog,
+)
+
+
+def _round(step, status="committed", **kw):
+    rec = {"step": step, "status": status, "round_s": 1.0, "stall_us": 0.0,
+           "stragglers": [], "reason": ""}
+    rec.update(kw)
+    return rec
+
+
+# -- rule by rule ------------------------------------------------------------
+
+def test_happy_path_is_alert_free():
+    wd = Watchdog(sampler=lambda: {"supported": True, "fd": 10, "shm": 2})
+    for step in (3, 6, 9):
+        for h in (0, 1):
+            wd.on_heartbeat(h, step)
+            wd.on_persist_done(h, step, "digest-same")
+        wd.on_round(_round(step))
+    for t in range(20):
+        wd.tick(now=float(t * 10))
+    assert wd.alerts == []
+    assert wd.kinds() == set()
+
+
+def test_stall_ratio_rule():
+    wd = Watchdog(WatchConfig(stall_ratio_max=0.5))
+    wd.on_round(_round(3, round_s=1.0, stall_us=600_000.0))
+    [a] = wd.alerts
+    assert a.kind == "stall_ratio" and a.severity == SEV_WARNING
+    assert a.value == pytest.approx(0.6)
+    assert a.limit == 0.5
+
+
+def test_round_abort_then_abort_rate_critical():
+    wd = Watchdog(WatchConfig(abort_rate_window=3))
+    for i in range(3):
+        wd.on_round(_round(3, status="aborted", reason=f"boom {i}"))
+    kinds = [a.kind for a in wd.alerts]
+    assert kinds.count("round_abort") == 3
+    assert kinds.count("abort_rate") == 1
+    assert wd.critical[0].kind == "abort_rate"
+    # a commit resets the streak AND re-arms the critical
+    wd.on_round(_round(6))
+    wd.on_round(_round(9, status="aborted"))
+    assert [a.kind for a in wd.alerts].count("abort_rate") == 1
+    for _ in range(2):
+        wd.on_round(_round(9, status="aborted"))
+    assert [a.kind for a in wd.alerts].count("abort_rate") == 2
+
+
+def test_straggler_rule():
+    wd = Watchdog()
+    wd.on_round(_round(3, stragglers=[2]))
+    [a] = wd.alerts
+    assert a.kind == "straggler" and a.host == 2 and a.step == 3
+
+
+def test_heartbeat_skew_disabled_by_default():
+    wd = Watchdog()
+    wd.on_heartbeat(0, 100)
+    wd.on_heartbeat(1, 1)
+    assert wd.alerts == []
+
+
+def test_heartbeat_skew_rule_with_rearm():
+    wd = Watchdog(WatchConfig(max_step_skew=2))
+    wd.on_heartbeat(0, 10)
+    wd.on_heartbeat(1, 3)
+    [a] = wd.alerts
+    assert a.kind == "heartbeat_skew" and a.host == 1 and a.value == 7.0
+    wd.on_heartbeat(1, 4)          # still lagging: no duplicate alert
+    assert len(wd.alerts) == 1
+    wd.on_heartbeat(1, 10)         # caught up: re-armed
+    wd.on_heartbeat(0, 20)
+    wd.on_heartbeat(1, 10)
+    assert len(wd.alerts) == 2
+
+
+def test_fault_rate_rule():
+    wd = Watchdog(WatchConfig(fault_rate_max=100.0))
+    wd.on_metric_point(0, "uvm_faults", 1.0, 0.0)
+    wd.on_metric_point(0, "uvm_faults", 2.0, 50.0)    # 50/s: fine
+    assert wd.alerts == []
+    wd.on_metric_point(0, "uvm_faults", 3.0, 1000.0)  # 950/s: spike
+    [a] = wd.alerts
+    assert a.kind == "fault_rate" and a.host == 0
+    # metrics outside the configured set never fire
+    wd.on_metric_point(0, "proxy_syncs_total", 4.0, 1e9)
+    assert len(wd.alerts) == 1
+
+
+def test_leak_trend_rule_monotonic_only():
+    feed = []
+    wd = Watchdog(
+        WatchConfig(leak_sample_every_s=0.0, leak_window=3,
+                    fd_leak_allowance=2, shm_leak_allowance=1),
+        sampler=lambda: feed.pop(0),
+    )
+    # transient burst that is reclaimed: NOT a leak
+    for s in ({"supported": True, "fd": 10, "shm": 0},
+              {"supported": True, "fd": 50, "shm": 0},
+              {"supported": True, "fd": 10, "shm": 0}):
+        feed.append(s)
+        wd.tick(now=None)
+    assert wd.alerts == []
+    # steady climb past the allowance: the leak signature
+    for i, s in enumerate(({"supported": True, "fd": 10, "shm": 0},
+                           {"supported": True, "fd": 14, "shm": 0},
+                           {"supported": True, "fd": 20, "shm": 0})):
+        feed.append(s)
+        wd.tick(now=None)
+    assert "fd_leak_trend" in wd.kinds()
+
+
+def test_digest_divergence_rule():
+    wd = Watchdog()
+    wd.on_persist_done(0, 3, "aaaa")
+    assert wd.alerts == []            # one host can't diverge
+    wd.on_persist_done(1, 3, "bbbb")
+    [a] = wd.alerts
+    assert a.kind == "digest_divergence" and a.severity == SEV_CRITICAL
+    assert a.step == 3
+    wd.on_persist_done(2, 3, "cccc")  # same step: alerted once
+    assert len(wd.alerts) == 1
+    # a missing digest (old worker, inline loop without one) is ignored
+    wd.on_persist_done(0, 6, None)
+    wd.on_persist_done(1, 6, "")
+    assert len(wd.alerts) == 1
+
+
+def test_digest_state_cleared_at_commit():
+    wd = Watchdog()
+    wd.on_persist_done(0, 3, "aaaa")
+    wd.on_round(_round(3))            # commit settles the round
+    wd.on_persist_done(1, 3, "bbbb")  # late/stale ack: fresh bookkeeping
+    assert wd.alerts == []
+
+
+def test_death_rules():
+    wd = Watchdog()
+    wd.on_heartbeat(0, 5)
+    wd.on_death(0, "connection lost (worker death)")
+    wd.on_proxy_host_death("ph0", worker=1)
+    assert [a.kind for a in wd.alerts] == ["worker_death",
+                                           "proxy_host_death"]
+    assert all(a.severity == SEV_WARNING for a in wd.alerts)
+
+
+# -- plumbing ----------------------------------------------------------------
+
+def test_on_alert_callback_and_as_dict():
+    got = []
+    wd = Watchdog(on_alert=got.append)
+    wd.on_death(2, "boom")
+    assert got == wd.alerts
+    d = got[0].as_dict()
+    assert d["kind"] == "worker_death" and d["alert_schema"] == ALERT_SCHEMA
+    assert "step" not in d  # Nones dropped from the wire/journal shape
+
+
+def test_alert_journal_roundtrip(tmp_path):
+    path = os.path.join(str(tmp_path), "CLUSTER_LOG.jsonl")
+    w = journal.JournalWriter(path)
+    alert = Alert("stall_ratio", SEV_WARNING, step=3, value=0.7, limit=0.5,
+                  message="sync stall 0.7s vs round 1.0s")
+    w.write("alert", **alert.as_dict())
+    w.close()
+    [line] = journal.alerts(path)
+    assert isinstance(line, journal.AlertLine)
+    assert line.kind == "stall_ratio" and line.severity == SEV_WARNING
+    assert line.step == 3 and line.value == 0.7 and line.limit == 0.5
+    assert line.alert_schema == ALERT_SCHEMA
+    # typed reader filters alert lines out of a mixed journal
+    w2 = journal.JournalWriter(path)
+    w2.write("round", step=3, status="committed")
+    w2.close()
+    assert len(journal.alerts(path)) == 1
+    assert len(journal.read_journal(path)) == 2

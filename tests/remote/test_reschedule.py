@@ -1,6 +1,7 @@
 """Cross-endpoint drills (``remote`` marker; dedicated CI job): SIGKILL a
 proxy-host daemon mid-run -> reschedule onto a survivor + API-log replay;
 the coordinator-placed cluster variant; elastic N->M cluster restarts."""
+import json
 import shutil
 import tempfile
 
@@ -80,6 +81,16 @@ def test_cluster_proxy_host_kill_drill(tmp_path):
         by_worker.setdefault(w, []).append(name)
     moved = [w for w, names in by_worker.items() if len(set(names)) > 1]
     assert moved, f"no reschedule in {report.proxy_placements}"
+    # the watchdog journaled the proxy-host death BEFORE any round that
+    # committed on the rescheduled endpoint
+    assert "proxy_host_death" in report.alert_kinds()
+    with open(report.log_path) as f:
+        log = [json.loads(line) for line in f]
+    alert_i = next(i for i, e in enumerate(log) if e["event"] == "alert"
+                   and e["kind"] == "proxy_host_death")
+    commits_after = [e for e in log[alert_i:] if e["event"] == "round"
+                     and e["status"] == "committed"]
+    assert commits_after, "no committed round after the proxy-death alert"
 
     # bit-identical to an unkilled (local-proxy) run of the same config
     ref = run_cluster(
