@@ -106,6 +106,13 @@ def check(rows: list[dict], *, tolerance: float = 2.0) -> list[str]:
             f"disabled-path obs hook costs {r['us_per_call']}us/call — "
             f"over {OBS_NOOP_MAX_US}us; the no-op guard is no longer free"
         )
+    r = named.get("obs_ctx_propagation")
+    if r is not None and float(r.get("ctx_off_us", 0.0)) > OBS_NOOP_MAX_US:
+        bad.append(
+            f"untraced frame-send path costs {r['ctx_off_us']}us/frame — "
+            f"over {OBS_NOOP_MAX_US}us; causal-context propagation is no "
+            f"longer free when off"
+        )
     return bad
 
 

@@ -60,6 +60,33 @@ def run() -> None:
     row("obs_enabled_span", t_emit * 1e6,
         events=m, bytes_per_event=round(shard_bytes / (3 * m + m)))
 
+    # -- causal-context propagation: per-frame child mint + attach ---------
+    # Traced path: every outbound frame mints a fresh child span id and
+    # attaches it to the frame dict. Untraced path: the exact hot-site
+    # guard (`if self.trace_ctx is None`) — one attribute load + identity
+    # test, which must stay inside the same no-op envelope as the tracer
+    # guard (gate: ctx_off_us <= OBS_NOOP_MAX_US).
+    p = 100_000
+    root = trace.span_context(trace.round_trace_id(3))
+
+    def ctx_on_loop():
+        for _ in range(p):
+            frame = {"step": 1}
+            frame["ctx"] = trace.child_span(root)
+    t_on = timeit(ctx_on_loop, warmup=1, iters=3) / p
+
+    class _Site:
+        trace_ctx = None
+    site = _Site()
+
+    def ctx_off_loop():
+        for _ in range(p):
+            if site.trace_ctx is None:
+                frame = {"step": 1}  # noqa: F841 — the untraced frame
+    t_off = timeit(ctx_off_loop, warmup=1, iters=3) / p
+    row("obs_ctx_propagation", t_on * 1e6,
+        ctx_off_us=round(t_off * 1e6, 4), frames=p)
+
     # -- heartbeat piggyback: the per-beat delta collect -------------------
     # This runs once per heartbeat interval on every worker, against a
     # realistically-populated registry. It must stay far below the beat

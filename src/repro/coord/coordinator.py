@@ -99,6 +99,9 @@ class _Round:
     drained_at: float | None = None
     acks: dict[int, dict] = field(default_factory=dict)
     record: RoundRecord | None = None
+    # causal root context for the round's trace (None when tracing is off);
+    # DRAIN/COMMIT/ABORT broadcasts carry it so receivers parent to the root
+    ctx: dict | None = None
 
 
 class Coordinator:
@@ -413,7 +416,14 @@ class Coordinator:
             self.rounds.append(r.record)
             tr = obs_trace.get()
             if tr is not None:
-                tr.begin("coord.round", step=step)
+                # the round root span: its id is derived from the trace id
+                # alone (root_span_id), so workers that reached the boundary
+                # before this READY arrived already parented to it
+                trace_id = obs_trace.round_trace_id(step)
+                r.ctx = obs_trace.span_context(
+                    trace_id, span=obs_trace.root_span_id(trace_id)
+                )
+                tr.begin("coord.round", step=step, **obs_trace.ctx_args(r.ctx))
         if step != r.step:
             # a worker at a different boundary than the open round means the
             # cluster lost lockstep — abort, then re-open at the incoming
@@ -431,7 +441,9 @@ class Coordinator:
             and r.drained_at is None
         ):
             r.drained_at = time.monotonic()
-            self._broadcast(MSG_DRAIN, step=step)
+            # ctx rides only when tracing: the off-path frame is byte-identical
+            extra = {"ctx": r.ctx} if r.ctx is not None else {}
+            self._broadcast(MSG_DRAIN, step=step, **extra)
 
     def _on_persist_done(self, host: int, msg: dict) -> None:
         r = self._round
@@ -440,10 +452,22 @@ class Coordinator:
         r.acks[host] = msg
         r.record.acked = sorted(r.acks)
         # cross-worker divergence rule: every acking host must hold the
-        # same lockstep state at this boundary (digest rides the ack)
+        # same lockstep state at this boundary (digest rides the ack);
+        # per-chunk digests, when they flowed, let a divergence alert name
+        # the exact chunk and the host whose copy forked
         self.watchdog.on_persist_done(
-            host, r.step, msg.get("state_digest")
+            host, r.step, msg.get("state_digest"),
+            chunk_digests=msg.get("chunk_digests"),
         )
+        tr = obs_trace.get()
+        if tr is not None:
+            # quorum instant: child of the worker's round span (the ack
+            # frame echoes the worker's ctx), so commit-quorum spread is
+            # attributable per host in the causal tree
+            tr.instant(
+                "coord.ack", host=host, step=r.step,
+                **obs_trace.ctx_args(obs_trace.child_span(msg.get("ctx"))),
+            )
         # straggler accounting uses the duration the *coordinator* observed
         # (DRAIN -> ack), not the worker's self-reported persist time: a
         # host whose storage or network stalls the ack is exactly the host
@@ -499,18 +523,27 @@ class Coordinator:
         rec.stragglers = self.stragglers.stragglers()
         rec.status = "committed"
         self.latest_committed = r.step
+        rctx = r.ctx
         self._round = None
-        self._broadcast(MSG_COMMIT, step=rec.step)
+        tr = obs_trace.get()
+        if tr is not None:
+            # the decision phase as a real span (merge + fsync + marker),
+            # child of the round root — critpath's commit bucket. The
+            # round root closes HERE, at the decision, so its extent
+            # matches the journaled round_s (first READY -> decision) and
+            # critpath --check can hold the two within tolerance; the
+            # broadcast/journal/watchdog work below is post-round.
+            tr.complete("coord.commit", t0, step=rec.step,
+                        bytes_written=rec.bytes_written,
+                        **obs_trace.ctx_args(obs_trace.child_span(rctx)))
+            tr.end("coord.round")
+        extra = {"ctx": rctx} if rctx is not None else {}
+        self._broadcast(MSG_COMMIT, step=rec.step, **extra)
         self._log("round", **asdict(rec))
         obs_metrics.absorb_round(asdict(rec))
         self.watchdog.on_round(asdict(rec))
         self.live.observe(-1, "round_s", rec.round_s)
         self.live.observe(-1, "commit_s", rec.commit_s)
-        tr = obs_trace.get()
-        if tr is not None:
-            tr.instant("coord.commit", step=rec.step,
-                       bytes_written=rec.bytes_written)
-            tr.end("coord.round")
         self._gc()
 
     def _abort_round(self, reason: str) -> None:
@@ -521,17 +554,19 @@ class Coordinator:
         rec.status = "aborted"
         rec.reason = reason
         rec.round_s = time.monotonic() - r.opened_at
+        rctx = r.ctx
         self._round = None
-        self._broadcast(MSG_ABORT, step=rec.step, reason=reason)
+        tr = obs_trace.get()
+        if tr is not None:
+            tr.instant("coord.abort", step=rec.step, reason=reason)
+            tr.end("coord.round")
+        extra = {"ctx": rctx} if rctx is not None else {}
+        self._broadcast(MSG_ABORT, step=rec.step, reason=reason, **extra)
         self._log("round", **asdict(rec))
         obs_metrics.absorb_round(asdict(rec))
         # safe even when an abort_rate alert goes critical here: _round is
         # already None, so a nested abort-on-critical _abort_round no-ops
         self.watchdog.on_round(asdict(rec))
-        tr = obs_trace.get()
-        if tr is not None:
-            tr.instant("coord.abort", step=rec.step, reason=reason)
-            tr.end("coord.round")
         # Partial files (data-h*/hostmeta-h*) stay in the uncommitted step
         # dir — invisible to restore, truncated/overwritten by the retry.
         # Deleting here would race a straggler still writing into the dir.

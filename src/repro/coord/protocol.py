@@ -6,6 +6,16 @@ message vocabulary. Payloads are primitive-only msgpack maps — bulk data
 shared checkpoint root exactly as CRUM routes image data through stable
 storage rather than through the DMTCP coordinator.
 
+When tracing is enabled every frame below may additionally carry a
+``ctx`` field — ``{"trace", "span", "parent"}``, the causal trace
+context (repro.obs.trace) naming the span the receiver emits, which
+links per-round spans across processes into one causal tree
+(repro.obs.critpath). The field is *absent* when tracing is off: the
+untraced wire format is byte-identical. PERSIST_DONE may also carry
+``chunk_digests`` ({path: [int, ...]}, the fused per-chunk digest
+table) so the watchdog's divergence alert can name the first forked
+chunk.
+
 Worker -> coordinator::
 
     JOIN          {host, pid, restored_from}   first frame on a connection

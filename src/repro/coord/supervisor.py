@@ -106,6 +106,7 @@ class ClusterSupervisor:
             kill_at_step=None,
             die_after_persist_step=None,
             stall_at_step=None,
+            corrupt_at_step=None,
         )
 
     def watch(self, done: threading.Event, *, deadline_s: float = 600.0) -> None:
@@ -172,6 +173,8 @@ def run_cluster(
     stall_host: int | None = None,
     stall_s: float = 0.0,
     stall_at_step: int | None = None,
+    corrupt_host: int | None = None,
+    corrupt_at_step: int | None = None,
     proxy_hosts: int = 0,
     proxy_transport: str = "stream",
     kill_proxy_host: int | None = None,
@@ -251,6 +254,8 @@ def run_cluster(
             kw["straggle_s"] = straggle_s
         if h == stall_host and stall_s:
             kw.update(stall_s=stall_s, stall_at_step=stall_at_step)
+        if h == corrupt_host and corrupt_at_step is not None:
+            kw["corrupt_at_step"] = corrupt_at_step
         return WorkerConfig(**kw)
 
     sup = ClusterSupervisor(

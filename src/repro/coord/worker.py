@@ -19,6 +19,10 @@ Failure injection (for drills, tests and benchmarks):
                           PERSIST_DONE never sent
   straggle_s[/at_step]    sleep before acking (slow storage)
   stall_at_step/stall_s   stop heartbeating and freeze (hung host)
+  corrupt_at_step         divergence drill: flip one byte of the device
+                          state after that step, so the watchdog's
+                          digest_divergence rule fires at the next
+                          boundary and its alert names the forked chunk
 """
 from __future__ import annotations
 
@@ -94,6 +98,12 @@ class WorkerConfig:
     straggle_at_step: int | None = None
     stall_at_step: int | None = None
     stall_s: float = 0.0
+    corrupt_at_step: int | None = None  # divergence drill (inline loop)
+    # attach per-chunk digests of the full replicated state to PERSIST_DONE
+    # so a digest_divergence alert can name the first forked chunk. Free in
+    # proxy mode (the fused table rides SYNC info); the inline loop scans
+    # the state, so disable for perf-sensitive inline runs.
+    chunk_provenance: bool = True
 
 
 # -- shard ownership -----------------------------------------------------------
@@ -137,6 +147,23 @@ def shard_tree_for_host(state, host: int, n_hosts: int):
 def state_digest(state) -> str:
     """Order-stable content hash for lockstep-convergence assertions."""
     return tree_digest(state)
+
+
+def _corrupt_state(state) -> None:
+    """Divergence drill: flip one byte of the first device leaf, in place.
+
+    A silent-corruption stand-in (bad DIMM, miscompiled kernel): the host
+    keeps training on the perturbed weights, so every later digest forks
+    too — the watchdog must name *this* chunk at the first boundary, not
+    just "hosts disagree". Inline (numpy) state only: the leaves are the
+    live arrays, so the flip lands in the math.
+    """
+    flat, _ = flatten_with_paths(state["device"])
+    for path in sorted(flat):
+        arr = np.asarray(flat[path])
+        if arr.nbytes and arr.flags.c_contiguous and arr.flags.writeable:
+            arr.reshape(-1).view(np.uint8)[0] ^= 0xFF
+            return
 
 
 # -- training loops ------------------------------------------------------------
@@ -190,6 +217,17 @@ class _InlineLoop:
     def digest(self, state) -> str:
         return state_digest(state["device"])
 
+    def set_ctx(self, ctx: dict | None) -> None:
+        self.ctx = ctx  # inline steps emit no spans; kept for symmetry
+
+    def chunk_digests(self, state) -> dict[str, list[int]] | None:
+        """Full-state per-chunk digests for divergence provenance."""
+        if not self.cfg.chunk_provenance:
+            return None
+        from repro.kernels.ops import tree_chunk_digests
+
+        return tree_chunk_digests(state["device"], self.cfg.chunk_bytes)
+
     def close(self):
         pass
 
@@ -208,6 +246,7 @@ class _ProxyLoop:
         self.cfg = cfg
         self.spec = _program_spec(cfg)
         self.last_digest: str | None = None
+        self.last_chunk_digests: dict[str, list[int]] | None = None
         # segments/API log live under the cluster root, not /dev/shm: a
         # drill that hard-exits this worker (os._exit) skips close(), and
         # files under the root are reclaimed with it — a respawned
@@ -260,10 +299,24 @@ class _ProxyLoop:
         # the persist ack's divergence check costs nothing extra here
         self.last_digest = info.get("digest") if isinstance(info, dict) \
             else None
+        self.last_chunk_digests = (
+            info.get("chunk_digests") if isinstance(info, dict) else None
+        )
         return state
 
     def digest(self, state) -> str:
         return self.last_digest or state_digest(state["device"])
+
+    def set_ctx(self, ctx: dict | None) -> None:
+        # the runner mints a child context per STEP/SYNC/UPLOAD frame under
+        # whatever is installed here (None = frames ride bare)
+        self.runner.trace_ctx = ctx
+
+    def chunk_digests(self, state) -> dict[str, list[int]] | None:
+        """Per-chunk digests the proxy's SYNC already produced (free)."""
+        if not self.cfg.chunk_provenance:
+            return None
+        return self.last_chunk_digests
 
     def close(self):
         self.runner.close()
@@ -286,6 +339,9 @@ class _Heartbeat(threading.Thread):
         self.step = 0
         self.paused = threading.Event()
         self.stop = threading.Event()
+        # causal context of the checkpoint window in flight (main thread
+        # writes, this thread reads — a torn read just rides the next beat)
+        self.ctx: dict | None = None
         # live telemetry: the registry delta since the last beat rides
         # inside the same framed sendall — zero extra syscalls per beat
         self.piggyback = HeartbeatPiggyback()
@@ -295,13 +351,14 @@ class _Heartbeat(threading.Thread):
             if self.paused.is_set():
                 continue
             payload = self.piggyback.collect()
+            extra = {}
+            if payload is not None:
+                extra["metrics"] = payload
+            if self.ctx is not None:
+                extra["ctx"] = self.ctx
             try:
-                if payload is None:  # nothing new: the beat rides bare
-                    self.conn.send(MSG_HEARTBEAT, host=self.cfg.host,
-                                   step=self.step)
-                else:
-                    self.conn.send(MSG_HEARTBEAT, host=self.cfg.host,
-                                   step=self.step, metrics=payload)
+                self.conn.send(MSG_HEARTBEAT, host=self.cfg.host,
+                               step=self.step, **extra)
             except OSError:
                 # coordinator kicked us (or died): this incarnation is over
                 os._exit(1)
@@ -370,12 +427,31 @@ def worker_entry(cfg: WorkerConfig) -> int:
     hb.step = start
 
     step = start
+    tr = obs_trace.get()
+    window_ctx: dict | None = None
     try:
         while step < cfg.total_steps:
             step += 1
+            if tr is not None and cfg.ckpt_every > 0:
+                # the boundary this step marches toward names the round
+                # trace; install its window context *before* the step so
+                # proxy STEP frames issued mid-window join the round tree.
+                # The parent is the deterministic round root — the
+                # coordinator has not opened the round yet, but it will
+                # derive the same root id from the same trace id.
+                b = -(-step // cfg.ckpt_every) * cfg.ckpt_every
+                trace_id = obs_trace.round_trace_id(b)
+                if window_ctx is None or window_ctx["trace"] != trace_id:
+                    window_ctx = obs_trace.span_context(
+                        trace_id, parent=obs_trace.root_span_id(trace_id)
+                    )
+                    loop.set_ctx(window_ctx)
+                    hb.ctx = window_ctx
             state = loop.step(state, step)
             state["host"]["step"] = np.int64(step)
             hb.step = step
+            if cfg.corrupt_at_step == step and not cfg.restored:
+                _corrupt_state(state)
             boundary = cfg.ckpt_every > 0 and step % cfg.ckpt_every == 0
 
             if cfg.stall_at_step == step and not cfg.restored:
@@ -393,8 +469,12 @@ def worker_entry(cfg: WorkerConfig) -> int:
                 # barrier — the persisted shards must reflect this step
                 state = loop.materialize(state)
                 _checkpoint_round(conn, cfg, ck, state, step, deadline,
-                                  digest=loop.digest(state))
+                                  digest=loop.digest(state),
+                                  chunk_digests=loop.chunk_digests(state),
+                                  ctx=window_ctx)
 
+        loop.set_ctx(None)  # the final sync belongs to no round
+        hb.ctx = None
         state = loop.materialize(state)
         digest = state_digest(state["device"])
         conn.send(MSG_FINISHED, host=cfg.host, step=step, digest=digest)
@@ -419,13 +499,20 @@ def _checkpoint_round(
     step: int,
     deadline: float,
     digest: str | None = None,
+    chunk_digests: dict | None = None,
+    ctx: dict | None = None,
 ) -> None:
     """Barrier at a boundary; persist on DRAIN; retry the round on ABORT."""
     tr = obs_trace.get()
     if tr is not None:
-        tr.begin("worker.round", step=step, host=cfg.host)
+        # the span *is* the window context: mid-window proxy frames already
+        # parented to ctx["span"], and this B/E (covering every retry of
+        # the round) resolves them to the deterministic round root
+        tr.begin("worker.round", step=step, host=cfg.host,
+                 **obs_trace.ctx_args(ctx))
     try:
-        _checkpoint_round_inner(conn, cfg, ck, state, step, deadline, digest)
+        _checkpoint_round_inner(conn, cfg, ck, state, step, deadline,
+                                digest, chunk_digests, ctx)
     finally:
         if tr is not None:
             tr.end("worker.round")
@@ -439,6 +526,8 @@ def _checkpoint_round_inner(
     step: int,
     deadline: float,
     digest: str | None = None,
+    chunk_digests: dict | None = None,
+    ctx: dict | None = None,
 ) -> None:
     conn.send(MSG_READY, host=cfg.host, step=step)
     while True:
@@ -447,7 +536,8 @@ def _checkpoint_round_inner(
         if mstep != step and mtype != MSG_SHUTDOWN:
             continue  # stale frame from a previous (aborted) round
         if mtype == MSG_DRAIN:
-            _persist_shards(conn, cfg, ck, state, step, digest)
+            _persist_shards(conn, cfg, ck, state, step, digest,
+                            chunk_digests, ctx)
         elif mtype == MSG_COMMIT:
             ck.commit_confirmed(step)
             return
@@ -460,11 +550,14 @@ def _checkpoint_round_inner(
 
 
 def _persist_shards(conn, cfg: WorkerConfig, ck, state, step: int,
-                    digest: str | None = None) -> None:
+                    digest: str | None = None,
+                    chunk_digests: dict | None = None,
+                    ctx: dict | None = None) -> None:
     shard = shard_tree_for_host(state, cfg.host, cfg.n_hosts)
     try:
         r = ck.save_async(
-            step, shard, meta={"host": cfg.host, "n_hosts": cfg.n_hosts}
+            step, shard, meta={"host": cfg.host, "n_hosts": cfg.n_hosts},
+            trace_ctx=ctx,
         )
         try:
             r.wait(cfg.persist_timeout_s)
@@ -482,10 +575,21 @@ def _persist_shards(conn, cfg: WorkerConfig, ck, state, step: int,
         os._exit(EXIT_MID_COMMIT)  # hostmeta is durable, ack never sent
     if cfg.straggle_s and cfg.straggle_at_step in (None, step):
         time.sleep(cfg.straggle_s)  # heartbeats continue: slow, not dead
+    extra = {}
+    if ctx is not None:
+        # echo the round context so the coordinator's quorum instant
+        # (coord.ack) parents under this worker's round span
+        extra["ctx"] = ctx
+    if chunk_digests and sum(map(len, chunk_digests.values())) <= 65536:
+        # divergence provenance: per-chunk digests of the full replicated
+        # state (size-capped — a pathological chunk count must not blow
+        # the 16 MiB control-frame limit)
+        extra["chunk_digests"] = chunk_digests
     conn.send(
         MSG_PERSIST_DONE,
         host=cfg.host,
         step=step,
+        **extra,
         hostmeta=f"hostmeta-h{cfg.host:04d}.msgpack",
         persist_s=r.persist_s,
         blocking_s=r.blocking_s,

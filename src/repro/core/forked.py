@@ -114,6 +114,11 @@ class PersistJob:
     prev: Manifest | None
     meta: dict
     shadow_gen: int = 0        # buffer generation the snapshot belongs to
+    # causal context the ckpt.persist span is emitted with (child of the
+    # phase-1 span); the fork child echoes it on the result pipe's final
+    # record, so even a persist whose parent worker was SIGKILL'd leaves
+    # an attributable span in the round tree
+    trace_ctx: dict | None = None
 
 
 def _persist_image(
@@ -300,7 +305,8 @@ class ThreadPersistBackend(PersistBackend):
             if tr is not None:
                 tr.complete("ckpt.persist", t0, step=result.step,
                             backend="thread",
-                            bytes_written=result.bytes_written)
+                            bytes_written=result.bytes_written,
+                            **obs_trace.ctx_args(job.trace_ctx))
             ck._finish_job(job)
 
     def close(self) -> None:
@@ -442,7 +448,8 @@ class ForkPersistBackend(PersistBackend):
             # shows the COW persist running beside the training steps
             tr.complete("ckpt.persist", t0, step=counters.step,
                         backend="fork", error=err,
-                        bytes_written=counters.bytes_written)
+                        bytes_written=counters.bytes_written,
+                        **obs_trace.ctx_args(job.trace_ctx))
         obs_metrics.REGISTRY.inc("ckpt_fork_persists_total")
         obs_metrics.REGISTRY.inc("ckpt_fork_bytes_written",
                                  counters.bytes_written)
@@ -458,6 +465,11 @@ class ForkPersistBackend(PersistBackend):
             "registry_delta": obs_metrics.counter_delta(
                 reg_base, obs_metrics.REGISTRY.counters_snapshot()
             ),
+            # causal context of the persist span, echoed back over the
+            # result pipe: the supervising parent (or a post-mortem reader
+            # of a torn pipe) can attribute this child's work even though
+            # the span itself lives in the child's own shard
+            "ctx": job.trace_ctx,
         }
         if err is None:
             final["manifest"] = manifest.to_bytes()
@@ -648,6 +660,7 @@ class ForkedCheckpointer:
         *,
         meta: dict | None = None,
         device_digests: dict[str, list[int]] | None = None,
+        trace_ctx: dict | None = None,
     ) -> CheckpointResult:
         """Phase 1 inline (blocking, fast); phase 2 on the persist backend.
 
@@ -655,7 +668,12 @@ class ForkedCheckpointer:
         as a fused final pass (``kernels.ops.tree_chunk_digests``): the
         boundary sync compares them instead of re-scanning the state, so
         ``digest_us`` drops to zero for covered leaves. Composes with
-        ``dirty_source`` page marks (the intersection is fetched)."""
+        ``dirty_source`` page marks (the intersection is fetched).
+
+        ``trace_ctx`` is an optional causal context from the caller's round
+        span: phase 1 records a child span of it, and the persist job (even
+        across a fork) records a grandchild, so checkpoint latency shows up
+        on the round's causal tree."""
         result = CheckpointResult(step=step, blocking_s=0.0)
         with self.timings.measure("ckpt/blocking") as _:
             t0 = time.perf_counter()
@@ -694,11 +712,13 @@ class ForkedCheckpointer:
             result.chunks_clean = stats.chunks_total - stats.chunks_fetched
             result.bytes_skipped = stats.bytes_total - stats.bytes_fetched
             result.blocking_s = time.perf_counter() - t0
+            pctx = obs_trace.child_span(trace_ctx)
             tr = obs_trace.get()
             if tr is not None:
                 tr.complete("ckpt.phase1", t0, step=step,
                             chunks_synced=result.chunks_synced,
-                            bytes_snapshot=result.bytes_snapshot)
+                            bytes_snapshot=result.bytes_snapshot,
+                            **obs_trace.ctx_args(pctx))
 
         job = PersistJob(
             result=result,
@@ -710,6 +730,7 @@ class ForkedCheckpointer:
             prev=self._prev_manifest if self.incremental else None,
             meta=meta or {},
             shadow_gen=shadow.generation,
+            trace_ctx=obs_trace.child_span(pctx),
         )
         # phase 2 (possibly a fork child) reads this buffer generation: a
         # re-registration must retire, not release, it until the job is done

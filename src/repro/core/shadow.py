@@ -744,6 +744,23 @@ class ShadowStateManager:
     def chunk_states(self) -> dict[tuple[str, int], list[ChunkState]]:
         return {k: list(s.states) for k, s in self._streams.items()}
 
+    def digest_table(self) -> dict[str, list[int]] | None:
+        """Full-state per-chunk digest view: {path: [u64 digests]}.
+
+        Only meaningful when every stream is a whole leaf (ordinal 0 —
+        the proxy-service registration shape) and every digest is known:
+        returns None if any stream is a shard slice or still holds a
+        negative sentinel, so callers never ship a partial table. Used
+        for divergence provenance — these digests are comparable across
+        hosts (same replicated state, same chunking).
+        """
+        out: dict[str, list[int]] = {}
+        for (path, ordinal), s in self._streams.items():
+            if ordinal != 0 or any(d < 0 for d in s.digests):
+                return None
+            out[path] = [int(d) for d in s.digests]
+        return out or None
+
     def set_digests(
         self,
         key: tuple[str, int],

@@ -19,6 +19,12 @@ merged image. Failure injections exercise the recovery paths end to end:
     PYTHONPATH=src python -m repro.launch.cluster \\
         --hosts 4 --straggle-host 3 --straggle-s 1.0
 
+    # divergence-provenance drill: one byte of host 1's state is flipped
+    # after step 4 — the watchdog's digest_divergence alert must name the
+    # first divergent chunk and the culprit host
+    PYTHONPATH=src python -m repro.launch.cluster \\
+        --hosts 2 --steps 6 --corrupt-host 1 --corrupt-at-step 4
+
     # REMOTE proxies: every worker's device proxy is placed on one of 2
     # proxy-host daemons (streamed chunk transport); daemon 0 is
     # SIGKILLed after the first commit — affected workers are rescheduled
@@ -84,6 +90,11 @@ def main(argv=None) -> int:
     ap.add_argument("--stall-host", type=int, default=None)
     ap.add_argument("--stall-s", type=float, default=0.0)
     ap.add_argument("--stall-at-step", type=int, default=None)
+    ap.add_argument("--corrupt-host", type=int, default=None,
+                    help="flip one byte of this host's state after the "
+                         "given step (divergence-provenance drill: the "
+                         "watchdog must name the first forked chunk)")
+    ap.add_argument("--corrupt-at-step", type=int, default=None)
     # remote proxies
     ap.add_argument("--proxy-hosts", type=int, default=0,
                     help="place worker proxies on this many proxy-host "
@@ -157,7 +168,7 @@ def main(argv=None) -> int:
         drills = [
             args.kill_host, args.kill_at_step, args.die_after_persist_host,
             args.die_after_persist_step, args.straggle_host, args.stall_host,
-            args.kill_proxy_host,
+            args.kill_proxy_host, args.corrupt_host,
         ]
         if any(d is not None for d in drills) or args.straggle_s or args.stall_s:
             # refusing beats silently running both phases without the
@@ -197,6 +208,8 @@ def main(argv=None) -> int:
             stall_host=args.stall_host,
             stall_s=args.stall_s,
             stall_at_step=args.stall_at_step,
+            corrupt_host=args.corrupt_host,
+            corrupt_at_step=args.corrupt_at_step,
             kill_proxy_host=args.kill_proxy_host,
             kill_proxy_after_commits=args.kill_proxy_after_commits,
             **common,
@@ -236,6 +249,10 @@ def main(argv=None) -> int:
         expected_kinds.add("straggler")
     if args.kill_proxy_host is not None:
         expected_kinds.add("proxy_host_death")
+    corrupt_drill = (args.corrupt_host is not None
+                     and args.corrupt_at_step is not None)
+    if corrupt_drill:
+        expected_kinds.add("digest_divergence")
 
     lockstep = report.lockstep()
     summary = {
@@ -257,7 +274,26 @@ def main(argv=None) -> int:
         summary["killed_proxy_hosts"] = report.killed_proxy_hosts
     print(json.dumps(summary, indent=2))
 
-    if not lockstep:
+    if corrupt_drill:
+        # the injection *makes* the hosts diverge — converging would mean
+        # it never took; what must hold instead is that the watchdog's
+        # divergence alert carries provenance: the first forked chunk
+        if lockstep:
+            print("[cluster] FAIL: corrupt drill ran but hosts still "
+                  "converged (injection never took)", file=sys.stderr)
+            return 1
+        named = [a for a in report.alerts
+                 if a.get("kind") == "digest_divergence"
+                 and a.get("chunk") is not None]
+        if not named:
+            print("[cluster] FAIL: divergence alert fired but named no "
+                  "chunk (provenance lost)", file=sys.stderr)
+            return 1
+        a = named[0]
+        print(f"[cluster] divergence provenance OK: chunk={a['chunk']!r} "
+              f"index={a.get('chunk_index')} host={a.get('host')}",
+              flush=True)
+    elif not lockstep:
         print("[cluster] FAIL: hosts finished with diverged state",
               file=sys.stderr)
         return 1

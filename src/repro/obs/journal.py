@@ -176,6 +176,8 @@ class AlertLine(JournalRecord):
     value: float | None = None
     limit: float | None = None
     message: str = ""
+    chunk: str | None = None
+    chunk_index: int | None = None
     alert_schema: str = ""
 
 

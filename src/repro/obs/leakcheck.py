@@ -27,29 +27,69 @@ import time
 from collections import deque
 from typing import Callable
 
-__all__ = ["ResourceSnapshot", "LeakCheck", "sample", "PeriodicAudit"]
+__all__ = ["ResourceSnapshot", "LeakCheck", "sample", "watchdog_sample",
+           "PeriodicAudit"]
 
 _FD_DIR = "/proc/self/fd"
 _SHM_DIR = "/dev/shm"
 
+# fd targets the observability stack itself owns (trace shards, metric
+# snapshots, the cluster journal, live-metrics stream, merged report):
+# the watchdog's leak-trend rule must not count these, or enabling obs
+# on a long run trips the very alert it is there to power
+_OBS_FD_BASENAMES = ("CLUSTER_LOG.jsonl", "merged.trace.json")
+_OBS_FD_PREFIXES = ("trace-", "metrics-", "live_metrics.json")
 
-def sample() -> dict:
+
+def _is_obs_fd(target: str) -> bool:
+    base = os.path.basename(target.split(" ", 1)[0])
+    if base in _OBS_FD_BASENAMES:
+        return True
+    return any(base.startswith(p) for p in _OBS_FD_PREFIXES)
+
+
+def sample(*, exclude_obs: bool = False) -> dict:
     """Point-in-time resource counts: ``{supported, fd, shm}``.
 
     Cheaper than :meth:`ResourceSnapshot.capture` (two listdirs, no
     readlink per fd) — safe to call on a periodic tick. ``supported`` is
     False on platforms without ``/proc`` (counts are then 0, and any
     consumer should treat the audit as a no-op rather than a leak).
+
+    ``exclude_obs=True`` resolves each fd's symlink and drops the ones
+    the observability plane itself holds open (trace shards, the
+    journal, live-metrics files), reporting them separately as
+    ``fd_obs``; the watchdog's fd-leak trend uses this so tracing a run
+    does not read as a leak.
     """
     try:
-        fd = len(os.listdir(_FD_DIR))
+        entries = os.listdir(_FD_DIR)
     except OSError:
         return {"supported": False, "fd": 0, "shm": 0}
+    fd = len(entries)
+    fd_obs = 0
+    if exclude_obs:
+        for entry in entries:
+            try:
+                target = os.readlink(f"{_FD_DIR}/{entry}")
+            except OSError:
+                continue  # the listdir fd itself / raced closes
+            if _is_obs_fd(target):
+                fd_obs += 1
+        fd -= fd_obs
     try:
         shm = len(os.listdir(_SHM_DIR))
     except OSError:
         shm = 0
-    return {"supported": True, "fd": fd, "shm": shm}
+    out = {"supported": True, "fd": fd, "shm": shm}
+    if exclude_obs:
+        out["fd_obs"] = fd_obs
+    return out
+
+
+def watchdog_sample() -> dict:
+    """The SLO watchdog's default sampler: obs-owned fds excluded."""
+    return sample(exclude_obs=True)
 
 
 class PeriodicAudit:

@@ -41,7 +41,7 @@ from repro.obs.journal import read_journal
 JOURNAL_PID = 99999999
 
 _REQUIRED = ("name", "ph", "ts")
-_PHASES = {"B", "E", "X", "i", "I", "C", "M"}
+_PHASES = {"B", "E", "X", "i", "I", "C", "M", "s", "t", "f"}
 
 
 def load_shards(run_dir: str) -> tuple[list[dict], list[str]]:
@@ -349,6 +349,14 @@ def summarize(events: list[dict], metrics: dict) -> str:
 def merge(run_dir: str, journal: str | None = None,
           out: str | None = None) -> tuple[str, list[dict], dict]:
     events, shards = load_shards(run_dir)
+    try:
+        # causal-context spans become Perfetto flow arrows; lazy import —
+        # critpath imports this module for shard loading
+        from repro.obs.critpath import flow_events
+
+        events.extend(flow_events(events))
+    except Exception:
+        pass  # a malformed ctx must not take the whole report down
     jpath = find_journal(run_dir, journal)
     if jpath:
         events.extend(journal_events(jpath))

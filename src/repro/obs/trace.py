@@ -30,11 +30,30 @@ Correlation IDs ride as event ``args``: ``step`` (training step),
 ``epoch`` (SYNC epoch), ``inc`` (proxy incarnation = restarts spent),
 ``run`` (run id). They are threaded through the existing control frames
 (REGISTER ``obs`` field), never through new side channels.
+
+**Causal contexts.** On top of the correlation args sits a causal trace
+context — a small dict ``{"trace": str, "span": int, "parent": int}``
+(``parent`` omitted at the root) that rides the existing msgpack frames
+as an optional ``ctx`` field and lands in span ``args`` via
+:func:`ctx_args`. ``trace`` names the causal tree (one per checkpoint
+round: ``round:<step>``, see :func:`round_trace_id`); ``span`` is a
+64-bit id minted with :func:`new_span_id`; ``parent`` points at the
+emitting site's causal parent, which may live in *another process's*
+shard. The convention for frames: the **sender** mints a fresh child id
+per frame (:func:`child_span`) and the **receiver** emits its span with
+exactly that context — one frame, one receiver span, and a SIGKILL'd
+sender simply leaves its receivers' subtree orphaned (the reporter marks
+it, never drops it). :func:`root_span_id` derives the round root's span
+id deterministically from the trace id so every process agrees on the
+root without any exchange. ``repro.obs.critpath`` rebuilds the per-round
+trees from the merged shards.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import random
 import threading
 import time
 
@@ -47,9 +66,71 @@ __all__ = [
     "enable_from_env",
     "disable",
     "get",
+    "new_span_id",
+    "round_trace_id",
+    "root_span_id",
+    "span_context",
+    "child_span",
+    "ctx_args",
     "ENV_DIR",
     "ENV_RUN",
 ]
+
+
+# -- causal trace contexts -------------------------------------------------
+
+
+def new_span_id() -> int:
+    """A fresh 63-bit span id (non-zero, msgpack/JSON-safe positive int)."""
+    return random.getrandbits(63) | 1
+
+
+def round_trace_id(step: int) -> str:
+    """The trace id naming checkpoint round ``step``'s causal tree."""
+    return f"round:{int(step)}"
+
+
+def root_span_id(trace_id: str) -> int:
+    """Deterministic root span id for a trace.
+
+    Workers reach a round boundary (and their proxies STEP toward it)
+    *before* the coordinator opens the round, so the root id cannot be
+    handed out over the wire — instead every process derives the same
+    63-bit id from the trace id alone and parents its top-level spans to
+    it with zero coordination.
+    """
+    h = hashlib.blake2s(trace_id.encode("utf-8"), digest_size=8).digest()
+    return (int.from_bytes(h, "big") & ((1 << 63) - 1)) | 1
+
+
+def span_context(
+    trace_id: str, *, parent: int | None = None, span: int | None = None
+) -> dict:
+    """Build a context naming span ``span`` (fresh id if None) in a trace."""
+    ctx: dict = {
+        "trace": trace_id,
+        "span": int(span) if span is not None else new_span_id(),
+    }
+    if parent is not None:
+        ctx["parent"] = int(parent)
+    return ctx
+
+
+def child_span(ctx: dict | None) -> dict | None:
+    """A fresh child context under ``ctx`` (None stays None — no-op path)."""
+    if not ctx:
+        return None
+    return {"trace": ctx["trace"], "span": new_span_id(), "parent": ctx["span"]}
+
+
+def ctx_args(ctx: dict | None) -> dict:
+    """Flatten a context into span ``args`` keys ({} when no context)."""
+    if not ctx or "span" not in ctx:
+        return {}
+    out = {"trace": ctx.get("trace"), "span": ctx["span"]}
+    if ctx.get("parent") is not None:
+        out["parent"] = ctx["parent"]
+    return out
 
 
 class _Span:
@@ -172,16 +253,17 @@ class Tracer:
             }
         )
 
-    def end(self, name: str) -> None:
-        self._emit(
-            {
-                "name": name,
-                "ph": "E",
-                "pid": os.getpid(),
-                "tid": threading.get_native_id(),
-                "ts": time.time_ns() // 1000,
-            }
-        )
+    def end(self, name: str, **args) -> None:
+        ev = {
+            "name": name,
+            "ph": "E",
+            "pid": os.getpid(),
+            "tid": threading.get_native_id(),
+            "ts": time.time_ns() // 1000,
+        }
+        if args:
+            ev["args"] = args
+        self._emit(ev)
 
     def span(self, name: str, **args) -> _Span:
         return _Span(self, name, args)

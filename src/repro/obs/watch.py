@@ -29,7 +29,10 @@ round records, deaths, persist acks) plus a periodic
                                         the sampled window
     shm_leak_trend          warning     /dev/shm entries grew over window
     digest_divergence       critical    two hosts acked the same round
-                                        with different state digests
+                                        with different state digests;
+                                        when per-chunk digests flowed,
+                                        the alert names the first chunk
+                                        that forked and the culprit host
     ======================  ==========  ==================================
 
 Alerts flow through every observability channel at once: the journal
@@ -75,6 +78,10 @@ class Alert:
     value: float | None = None
     limit: float | None = None
     message: str = ""
+    # divergence provenance: the first chunk (tree path + chunk index)
+    # whose per-host digests forked — only digest_divergence sets these
+    chunk: str | None = None
+    chunk_index: int | None = None
     alert_schema: str = ALERT_SCHEMA
 
     def as_dict(self) -> dict:
@@ -120,7 +127,9 @@ class Watchdog:
     ):
         self.cfg = cfg or WatchConfig()
         self.on_alert = on_alert
-        self._sampler = sampler or leakcheck.sample
+        # default sampler excludes obs-owned fds (trace shards, journal):
+        # a traced run must not trip the fd-leak rule just by tracing
+        self._sampler = sampler or leakcheck.watchdog_sample
         self.alerts: list[Alert] = []
         self._steps: dict[int, int] = {}         # host -> last heartbeat step
         self._skew_alerted: set[int] = set()
@@ -135,6 +144,14 @@ class Watchdog:
         self._leak_alerted: set[str] = set()
         self._digests: dict[int, dict[int, str]] = {}  # step -> host -> digest
         self._diverged_steps: set[int] = set()
+        # divergences detected but held back for a determinable culprit
+        self._pending_divergence: set[int] = set()
+        # per-chunk provenance: step -> host -> {path: [chunk digests]}
+        self._chunks: dict[int, dict[int, dict[str, list[int]]]] = {}
+        # last unanimously-agreed digest per (path, chunk index), recorded
+        # at committed rounds — lets the divergence alert name the culprit
+        # host exactly instead of guessing by minority vote
+        self._chunk_baseline: dict[tuple[str, int], int] = {}
 
     # -- emission ----------------------------------------------------------
 
@@ -220,29 +237,108 @@ class Watchdog:
     # -- round-path rules --------------------------------------------------
 
     def on_persist_done(self, host: int, step: int,
-                        state_digest: str | None) -> None:
+                        state_digest: str | None,
+                        chunk_digests: dict[str, list[int]] | None = None,
+                        ) -> None:
         """Cross-worker divergence: every host acking the same round must
-        hold the same (replicated, lockstep) state."""
+        hold the same (replicated, lockstep) state.
+
+        When the ack also carries per-chunk ``chunk_digests`` (full-state
+        fused digests, comparable across hosts), a divergence alert names
+        the first chunk that forked and the culprit host instead of just
+        reporting that the whole-state digests differ."""
         if not state_digest:
             return
-        per_round = self._digests.setdefault(int(step), {})
+        step = int(step)
+        if chunk_digests:
+            self._chunks.setdefault(step, {})[int(host)] = chunk_digests
+        per_round = self._digests.setdefault(step, {})
         per_round[int(host)] = state_digest
         if (
             len(per_round) >= self.cfg.divergence_min_hosts
             and len(set(per_round.values())) > 1
             and step not in self._diverged_steps
         ):
-            self._diverged_steps.add(int(step))
-            self._emit(Alert(
-                "digest_divergence", SEV_CRITICAL, step=int(step),
-                value=float(len(set(per_round.values()))),
-                message=f"hosts disagree on state at step {step}: "
-                        f"{sorted(set(per_round.values()))}",
-            ))
+            chunk, index, culprit = self._first_divergent_chunk(step)
+            if (chunk is not None and culprit is None
+                    and step not in self._pending_divergence):
+                # provenance is flowing but the culprit is still ambiguous
+                # (e.g. a 1-vs-1 split with more acks on the way): hold the
+                # alert until a later ack breaks the tie or the round
+                # settles — divergence itself is already certain, only the
+                # attribution improves by waiting
+                self._pending_divergence.add(step)
+                return
+            self._pending_divergence.discard(step)
+            self._emit_divergence(step)
+
+    def _emit_divergence(self, step: int) -> None:
+        per_round = self._digests.get(step) or {}
+        self._diverged_steps.add(step)
+        chunk, index, culprit = self._first_divergent_chunk(step)
+        msg = (f"hosts disagree on state at step {step}: "
+               f"{sorted(set(per_round.values()))}")
+        if chunk is not None:
+            who = (f"host {culprit}" if culprit is not None
+                   else "an unidentified host")
+            msg = (f"hosts disagree on state at step {step}: first "
+                   f"divergent chunk {chunk}[{index}] forked at step "
+                   f"{step} on {who}")
+        self._emit(Alert(
+            "digest_divergence", SEV_CRITICAL, step=step,
+            host=culprit,
+            value=float(len(set(per_round.values()))),
+            chunk=chunk, chunk_index=index,
+            message=msg,
+        ))
+
+    def _first_divergent_chunk(
+        self, step: int,
+    ) -> tuple[str | None, int | None, int | None]:
+        """First (sorted path, lowest index) chunk whose digests differ
+        across the hosts that reported tables for ``step``, plus the
+        culprit host: the one off the committed baseline when one exists,
+        else the minority digest's host (None on an unbreakable tie)."""
+        tables = self._chunks.get(step) or {}
+        if len(tables) < 2:
+            return None, None, None
+        paths = sorted(set().union(*(t.keys() for t in tables.values())))
+        for path in paths:
+            per_host = {h: t[path] for h, t in tables.items() if path in t}
+            if len(per_host) < 2:
+                continue
+            n = min(len(v) for v in per_host.values())
+            for i in range(n):
+                vals = {h: v[i] for h, v in per_host.items()}
+                if len(set(vals.values())) <= 1:
+                    continue
+                base = self._chunk_baseline.get((path, i))
+                if base is not None:
+                    # trust the baseline only when exactly one host left
+                    # it: training legitimately moves every live chunk
+                    # off the last committed digest, so "off baseline"
+                    # alone cannot separate culprit from victim
+                    off = sorted(h for h, d in vals.items() if d != base)
+                    if len(off) == 1:
+                        return path, i, off[0]
+                # blame the minority digest, if there is one
+                counts: dict[int, list[int]] = {}
+                for h, d in vals.items():
+                    counts.setdefault(d, []).append(h)
+                minority = sorted(counts.values(), key=len)
+                if len(minority) > 1 and len(minority[0]) < len(minority[1]):
+                    return path, i, sorted(minority[0])[0]
+                return path, i, None
+        return None, None, None
 
     def on_round(self, rec: dict) -> None:
         """One round record (RoundRecord.as_dict() shape), at decision."""
         step = rec.get("step")
+        if step is not None and int(step) in self._pending_divergence:
+            # the round settled with the culprit still ambiguous: emit the
+            # held divergence now, with whatever provenance arrived
+            self._pending_divergence.discard(int(step))
+            self._emit_divergence(int(step))
         if rec.get("status") == "aborted":
             self._consecutive_aborts += 1
             self._emit(Alert(
@@ -266,6 +362,15 @@ class Watchdog:
         self._abort_rate_alerted = False
         if step is not None:  # committed: the round's digest set is settled
             self._digests.pop(int(step), None)
+            tables = self._chunks.pop(int(step), None)
+            if tables and int(step) not in self._diverged_steps:
+                # all hosts agreed this round: their chunk digests become
+                # the baseline future divergences are judged against
+                for path in set().union(*(t.keys() for t in tables.values())):
+                    cols = [t[path] for t in tables.values() if path in t]
+                    for i, d in enumerate(cols[0]):
+                        if all(len(c) > i and c[i] == d for c in cols):
+                            self._chunk_baseline[(path, i)] = d
         round_s = float(rec.get("round_s") or 0.0)
         stall_s = float(rec.get("stall_us") or 0.0) / 1e6
         if round_s > 0 and stall_s / round_s > self.cfg.stall_ratio_max:

@@ -247,22 +247,35 @@ class DeviceProxy:
         paths: list[str] | None = None,
         chunks: dict[str, list[int]] | None = None,
         payload_frames: list[dict] | None = None,
+        ctx: dict | None = None,
     ) -> dict:
         """Full upload (``paths``/None) or chunk-delta (``chunks``: only
         those chunk ranges are ingested). ``payload_frames`` (streamed
         transport) are sent immediately after the UPLOAD frame."""
         n_frames = len(payload_frames) if payload_frames is not None else 0
-        self._send(
-            MSG_UPLOAD, step=step, paths=paths, chunks=chunks, n_frames=n_frames
-        )
+        if ctx is None:  # untraced frames stay byte-identical
+            self._send(
+                MSG_UPLOAD, step=step, paths=paths, chunks=chunks,
+                n_frames=n_frames,
+            )
+        else:
+            self._send(
+                MSG_UPLOAD, step=step, paths=paths, chunks=chunks,
+                n_frames=n_frames, ctx=ctx,
+            )
         for frame in payload_frames or ():
             self._send(MSG_CHUNKS, **frame)
         return self._recv_reply(MSG_OK)
 
-    def step(self, step: int) -> None:
+    def step(self, step: int, *, ctx: dict | None = None) -> None:
         """Pipelined: returns as soon as the frame is written. Auto-flushes
-        at the watermark so the app never runs unboundedly ahead."""
-        self._send(MSG_STEP, step=int(step))
+        at the watermark so the app never runs unboundedly ahead. ``ctx``
+        (optional causal context) names the span the service's handler
+        will emit for this frame."""
+        if ctx is None:  # untraced frames stay byte-identical
+            self._send(MSG_STEP, step=int(step))
+        else:
+            self._send(MSG_STEP, step=int(step), ctx=ctx)
         self.inflight += 1
         if self.inflight >= self.max_pipeline:
             self.flush()
@@ -285,12 +298,15 @@ class DeviceProxy:
         return msg
 
     # -- pipelined epoch sync -----------------------------------------------------
-    def sync_begin(self, epoch: int) -> None:
+    def sync_begin(self, epoch: int, *, ctx: dict | None = None) -> None:
         """Issue SYNC{epoch} fire-and-forget: the proxy executes it in
         pipeline order (after everything sent so far), and the matching
         SYNCED{epoch} is collected later — the app keeps stepping instead
         of stalling on the boundary."""
-        self._send(MSG_SYNC, epoch=int(epoch))
+        if ctx is None:  # untraced frames stay byte-identical
+            self._send(MSG_SYNC, epoch=int(epoch))
+        else:
+            self._send(MSG_SYNC, epoch=int(epoch), ctx=ctx)
         self._sync_marks[int(epoch)] = self.inflight
 
     def poll_synced(self, epoch: int) -> dict | None:

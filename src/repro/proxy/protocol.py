@@ -8,6 +8,14 @@ re-exported from there) — while the data plane is file-backed MAP_SHARED
 mmap segments (``repro.proxy.segments``): step inputs/outputs never pickle
 through the pipe, only tiny control frames do.
 
+When tracing is enabled, REGISTER/STEP/SYNC/UPLOAD (and streamed CHUNKS)
+frames may carry an optional ``ctx`` field — ``{"trace", "span",
+"parent"}``, the causal trace context (repro.obs.trace) under which the
+proxy-side service emits its execution span, so a merged trace links the
+app's round tree to the proxy work it caused (repro.obs.critpath). The
+field is absent when tracing is off; the untraced frames are
+byte-identical.
+
 Application -> proxy::
 
     PROGRAM   {spec}                 construct the step program (replayable)

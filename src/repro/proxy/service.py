@@ -171,8 +171,11 @@ class ProxyService:
         self._win_steps += 1
         tr = obs_trace.get()
         if tr is not None:
+            # the frame's ctx names THIS span (sender minted the child id):
+            # the step lands in the round tree under the app's window span
             tr.complete("proxy.step", t0, step=self.last_step,
-                        inc=self._obs_inc)
+                        inc=self._obs_inc,
+                        **obs_trace.ctx_args(msg.get("ctx")))
 
     # -- state-creating calls (the replayed ones) ------------------------------
     def _on_program(self, msg: dict) -> None:
@@ -192,6 +195,11 @@ class ProxyService:
             # was not spawned by — the REGISTER frame carries the obs dir
             obs_trace.enable(obs["dir"], "proxy", run_id=obs.get("run"),
                              set_env=False)
+        if obs.get("ctx"):
+            # re-attach marker: a respawned incarnation registering under
+            # an open round shows up *inside* that round's causal tree
+            obs_trace.instant("proxy.register", inc=self._obs_inc,
+                              **obs_trace.ctx_args(obs["ctx"]))
         self.transport = msg.get("transport", "segment")
         self.table = make_proxy_table(msg)
         self.fused_digests = bool(msg.get("fused_digests"))
@@ -253,7 +261,8 @@ class ProxyService:
             tr = obs_trace.get()
             if tr is not None:
                 tr.complete("proxy.upload", t0, step=self.last_step,
-                            inc=self._obs_inc, delta=True)
+                            inc=self._obs_inc, delta=True,
+                            **obs_trace.ctx_args(msg.get("ctx")))
             return
         state = self._device_view()
         if chunks is not None:
@@ -285,7 +294,8 @@ class ProxyService:
         if tr is not None:
             tr.complete("proxy.upload", t0, step=self.last_step,
                         inc=self._obs_inc,
-                        bytes_uploaded=stats.bytes_uploaded)
+                        bytes_uploaded=stats.bytes_uploaded,
+                        **obs_trace.ctx_args(msg.get("ctx")))
 
     def _delta_upload_into_space(self, msg: dict, chunks: dict) -> None:
         """Chunk-delta upload into a paged device: splice ONLY the uploaded
@@ -327,6 +337,7 @@ class ProxyService:
         from repro.utils.tree import tree_digest
 
         t0 = time.perf_counter()
+        ctx = (msg or {}).get("ctx")
         epoch = (msg or {}).get("epoch")
         # fused digests describe the state after the last executed step —
         # exactly the boundary this (pipeline-ordered) SYNC captures
@@ -360,16 +371,38 @@ class ProxyService:
                 for (path, ordinal), idxs in stats.changed.items()
                 if ordinal == 0 and idxs
             }
+            t_wire = time.perf_counter()
+            wctx = obs_trace.child_span(ctx)
             frames, raw, wire = encode_chunk_frames(
                 self.table, changed, self.shadow.chunk_bytes,
-                dict_bytes=self._zdict,
+                dict_bytes=self._zdict, ctx=wctx,
             )
             for frame in frames:
                 self.conn.send(MSG_CHUNKS, **frame)
+            tr = obs_trace.get()
+            if tr is not None:
+                # the wire/codec phase as its own span under this sync:
+                # chunk gather + (zstd) encode + framed sends
+                tr.complete("proxy.wire", t_wire, frames=len(frames),
+                            wire_bytes=wire, raw_bytes=raw,
+                            **obs_trace.ctx_args(wctx))
             fields["wire_bytes"] = wire
             fields["raw_bytes"] = raw
         if epoch is not None:
             fields["epoch"] = int(epoch)
+        # divergence provenance: the per-chunk digest table of the synced
+        # state (fused digests when the step emitted them, else the shadow
+        # scan's) rides the ack — size-capped so a pathological chunk
+        # count cannot blow the control-frame limit
+        digest_table = (
+            self._last_digests
+            if self.fused_digests and self._last_digests is not None
+            else self.shadow.digest_table()
+        )
+        if digest_table and sum(map(len, digest_table.values())) <= 65536:
+            fields["chunk_digests"] = {
+                p: [int(d) for d in v] for p, v in digest_table.items()
+            }
         fields["phase_us"] = {
             "step": round(self._win_step_us, 1),
             "steps": self._win_steps,
@@ -397,6 +430,7 @@ class ProxyService:
                 epoch=fields.get("epoch"),
                 chunks_synced=stats.chunks_fetched,
                 bytes_synced=stats.bytes_fetched,
+                **obs_trace.ctx_args(ctx),
             )
             paging = fields.get("paging")
             if paging:

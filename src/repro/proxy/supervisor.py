@@ -139,6 +139,19 @@ class ProxyRunner:
         # under-upload — push() falls back to a full upload then
         self._steps_since_sync = 0
         self.recoveries: list[dict[str, Any]] = []
+        # causal trace context installed by the trainer for the current
+        # checkpoint window (worker._ProxyLoop.set_ctx). While set, every
+        # outgoing STEP/SYNC/UPLOAD/REGISTER frame carries a fresh child
+        # context so the proxy's spans join the round's causal tree; None
+        # (tracing off, or no round in flight) keeps frames byte-identical
+        # to the pre-ctx wire format.
+        self.trace_ctx: dict | None = None
+
+    def _frame_ctx(self) -> dict | None:
+        """A child context for one outgoing frame (None when untraced)."""
+        if self.trace_ctx is None:
+            return None
+        return obs_trace.child_span(self.trace_ctx)
 
     # -- lifecycle ---------------------------------------------------------------
     def start(self, device_state: Any = None, *, base_step: int = 0) -> Any:
@@ -222,6 +235,7 @@ class ProxyRunner:
                 step=self.last_synced_step,
                 chunks=chunks,
                 payload_frames=self.transport.payload_frames(chunks),
+                ctx=self._frame_ctx(),
             )
         except ProxyDiedError:
             # recovery rewrites the data plane from the (already updated)
@@ -283,7 +297,7 @@ class ProxyRunner:
         self._steps_since_sync += 1
         self._last_issued_step = int(step)
         try:
-            self.proxy.step(int(step))
+            self.proxy.step(int(step), ctx=self._frame_ctx())
         except ProxyDiedError:
             self._recover()  # the log already holds this step: replay runs it
 
@@ -325,7 +339,7 @@ class ProxyRunner:
             self._last_issued_step, self._steps_since_sync,
         )
         try:
-            self.proxy.sync_begin(epoch)
+            self.proxy.sync_begin(epoch, ctx=self._frame_ctx())
         except ProxyDiedError:
             self._recover()  # replay re-issues this SYNC at its boundary
         return epoch
@@ -397,7 +411,9 @@ class ProxyRunner:
             "restarts": self.budget.count,
             "transport": self.transport.stats(),
         }
-        for key in ("wire_bytes", "raw_bytes", "paging", "phase_us"):
+        for key in (
+            "wire_bytes", "raw_bytes", "paging", "phase_us", "chunk_digests",
+        ):
             if key in msg:
                 info[key] = msg[key]
         # one registry absorbs the whole SYNCED summary — paging counters,
@@ -411,6 +427,7 @@ class ProxyRunner:
                 time.perf_counter() - stall_us / 1e6,
                 epoch=epoch,
                 step=self.last_synced_step,
+                **obs_trace.ctx_args(self._frame_ctx()),
             )
         return self._last_state, info
 
@@ -468,11 +485,17 @@ class ProxyRunner:
                 "inc": self.budget.count,
                 "run": tr.run_id if tr is not None else None,
                 "dir": tr.obs_dir if tr is not None else None,
+                # re-attach marker: a respawned incarnation registers under
+                # the *current* round's context, so its spans (including
+                # the replayed frames below) join the retried round's tree
+                # instead of floating free
+                "ctx": self._frame_ctx(),
             },
         )
         self.proxy.upload(
             step=self.last_synced_step,
             payload_frames=self.transport.payload_frames(None),
+            ctx=self._frame_ctx(),
         )
         if upload_only:
             return []
@@ -480,11 +503,11 @@ class ProxyRunner:
         steps = []
         for a in actions:
             if a[0] == "step":
-                self.proxy.step(a[1])
+                self.proxy.step(a[1], ctx=self._frame_ctx())
                 steps.append(a[1])
             else:  # ("sync", epoch, step): unacked epoch sync — re-issue at
                 # the same boundary so its SYNCED{epoch} is still collectable
-                self.proxy.sync_begin(a[1])
+                self.proxy.sync_begin(a[1], ctx=self._frame_ctx())
         return steps
 
     def _recover(self) -> None:

@@ -92,6 +92,7 @@ def encode_chunk_frames(
     *,
     compress: bool | None = None,
     dict_bytes: bytes | None = None,
+    ctx: dict | None = None,
 ) -> tuple[list[dict], int, int]:
     """Pack the given chunks' current table bytes into CHUNKS frame dicts.
 
@@ -104,6 +105,9 @@ def encode_chunk_frames(
     field, so both ends must have it (they share this codebase's
     environment). ``dict_bytes`` (a trained dictionary both ends hold, see
     :func:`train_chunk_dict`) switches the codec to ``zstd-dict``.
+    ``ctx`` (optional causal context, ``obs.trace``) is stamped on every
+    frame so a data-plane stream is attributable to the SYNC/UPLOAD span
+    that produced it; None (tracing off) keeps frames byte-identical.
     """
     zstd = _zstd() if compress in (None, True) else None
     if compress is True and zstd is None:
@@ -135,7 +139,10 @@ def encode_chunk_frames(
             packed = cctx.compress(data)
             if len(packed) < len(data):
                 data, codec = packed, codec_name
-        frames.append({"codec": codec, "items": items, "data": data})
+        frame = {"codec": codec, "items": items, "data": data}
+        if ctx is not None:
+            frame["ctx"] = ctx
+        frames.append(frame)
         wire_total += len(data)
         items, parts, pending = [], [], 0
 

@@ -1,0 +1,330 @@
+"""Critical-path attribution: causal trees, phase sweep, orphans, drills.
+
+Unit tests drive :mod:`repro.obs.critpath` over synthetic shards (events
+written by hand, journal lines with pinned timestamps); the
+``integration``-marked tests run a real 2-host cluster with tracing on
+and assert the acceptance criteria — every committed round rooted, the
+phase decomposition summing to the round span, ``--check`` green — plus
+the divergence-provenance and kill→replay drills.
+"""
+import json
+import os
+
+import pytest
+
+from repro.obs import critpath, report, trace
+from repro.obs.trace import root_span_id
+
+T0 = 100_000_000.0  # µs wall; the journal line below says t=100.0009 s
+ROOT = root_span_id("round:3")
+TRACE = "round:3"
+
+
+def _ev(name, ph, ts, pid=1, tid=1, **kw):
+    ev = {"name": name, "ph": ph, "ts": ts, "pid": pid, "tid": tid}
+    ev.update(kw)
+    return ev
+
+
+def _round_events():
+    """One committed round: coord root, one worker subtree, commit."""
+    a = dict  # arg-dict shorthand
+    return [
+        _ev("coord.round", "B", T0, pid=1,
+            args=a(step=3, trace=TRACE, span=ROOT)),
+        _ev("worker.round", "X", T0 - 20, dur=1010, pid=2,
+            args=a(step=3, host=0, trace=TRACE, span=10, parent=ROOT)),
+        _ev("proxy.step", "X", T0 + 10, dur=200, pid=3,
+            args=a(step=3, trace=TRACE, span=11, parent=10)),
+        _ev("app.sync_stall", "X", T0 + 220, dur=80, pid=2,
+            args=a(trace=TRACE, span=12, parent=10)),
+        _ev("ckpt.phase1", "X", T0 + 300, dur=100, pid=2,
+            args=a(step=3, trace=TRACE, span=13, parent=10)),
+        _ev("ckpt.persist", "X", T0 + 400, dur=400, pid=2,
+            args=a(step=3, trace=TRACE, span=14, parent=13)),
+        _ev("coord.commit", "X", T0 + 850, dur=100, pid=1,
+            args=a(step=3, trace=TRACE, span=90, parent=ROOT)),
+        _ev("coord.round", "E", T0 + 1000, pid=1),
+    ]
+
+
+def _write_run(tmp_path, events, journal_lines):
+    run = str(tmp_path / "obs")
+    os.makedirs(run, exist_ok=True)
+    with open(os.path.join(run, "trace-app-1.jsonl"), "w") as f:
+        for ev in events:
+            f.write(json.dumps(ev) + "\n")
+    with open(os.path.join(run, "CLUSTER_LOG.jsonl"), "w") as f:
+        for line in journal_lines:
+            f.write(json.dumps(line) + "\n")
+    return run
+
+
+def _journal_round(step=3, status="committed", t=100.0009, round_s=0.001):
+    return {"schema": "crum-cluster-log/1", "event": "round", "t": t,
+            "step": step, "status": status, "round_s": round_s}
+
+
+# -- span reconstruction -----------------------------------------------------
+
+def test_build_spans_closes_be_pairs_and_marks_unclosed():
+    events = [
+        _ev("worker.round", "B", 10.0, args={"span": 1, "trace": "t"}),
+        _ev("worker.round", "E", 30.0),
+        _ev("coord.round", "B", 5.0, pid=2,
+            args={"span": 2, "trace": "t"}),  # SIGKILL: never closed
+        _ev("ckpt.persist", "X", 12.0, dur=6.0,
+            args={"span": 3, "parent": 1, "trace": "t"}),
+        _ev("coord.ack", "i", 20.0, pid=2,
+            args={"span": 4, "parent": 1, "trace": "t"}),
+        _ev("untagged", "i", 21.0, args={}),  # no ctx: not a tree node
+    ]
+    spans = critpath.build_spans(events)
+    by = {s["span"]: s for s in spans if s["span"] is not None}
+    assert by[1]["end"] == 30.0 and not by[1]["incomplete"]
+    assert by[2]["end"] is None and by[2]["incomplete"]
+    assert by[3]["end"] == 18.0
+    assert by[4]["ts"] == by[4]["end"] == 20.0  # instants are zero-dur
+    assert len(spans) == 4  # the ctx-less instant never becomes a span
+
+
+# -- the report over a synthetic committed round -----------------------------
+
+def test_committed_round_is_rooted_and_phases_sum_to_span(tmp_path):
+    run = _write_run(tmp_path, _round_events(), [_journal_round()])
+    doc = critpath.analyze(run)
+    assert doc["schema"] == critpath.CRITPATH_SCHEMA
+    [r] = doc["rounds"]
+    assert r["status"] == "committed" and r["rooted"]
+    assert r["orphan_spans"] == 0 and r["n_spans"] == 7
+    assert r["span_s"] == pytest.approx(0.001)
+    ph = r["phases_us"]
+    assert ph["step_compute"] == pytest.approx(200)
+    assert ph["sync_stall"] == pytest.approx(80)
+    assert ph["phase1"] == pytest.approx(100)
+    assert ph["persist"] == pytest.approx(400)
+    assert ph["commit"] == pytest.approx(100)
+    assert ph["wait"] == pytest.approx(120)
+    # the acceptance criterion: buckets sum to the round span exactly
+    assert sum(ph.values()) == pytest.approx(r["span_s"] * 1e6)
+    assert r["per_host_us"]["0"]["persist"] == pytest.approx(400)
+    assert critpath.check(doc) == []
+
+
+def test_critical_path_descends_into_latest_finisher(tmp_path):
+    run = _write_run(tmp_path, _round_events(), [_journal_round()])
+    [r] = critpath.analyze(run)["rounds"]
+    names = [p["name"] for p in r["critical_path"]]
+    # the persist chain held the round open, not the commit fsync
+    assert names == ["coord.round", "worker.round", "ckpt.phase1",
+                     "ckpt.persist"]
+    assert r["critical_host"] == "0"
+
+
+def test_orphans_fail_check_only_without_journaled_deaths(tmp_path):
+    stray = _ev("proxy.step", "X", T0 + 30, dur=10, pid=4,
+                args={"trace": TRACE, "span": 20, "parent": 999})
+    run = _write_run(tmp_path, _round_events() + [stray],
+                     [_journal_round()])
+    doc = critpath.analyze(run)
+    [r] = doc["rounds"]
+    assert r["orphan_spans"] == 1
+    assert any("orphan" in p for p in critpath.check(doc))
+    # the same orphan is the *expected* residue once a death is journaled
+    run2 = _write_run(
+        tmp_path / "killed", _round_events() + [stray],
+        [_journal_round(),
+         {"event": "death", "t": 100.0002, "host": 1, "reason": "kill"}],
+    )
+    doc2 = critpath.analyze(run2)
+    assert doc2["deaths"] == 1
+    assert critpath.check(doc2) == []
+
+
+def test_span_vs_journal_disagreement_fails_check(tmp_path):
+    # stretch the root to 0.5 s while the journal claims 1.0 s
+    events = _round_events()
+    events[-1]["ts"] = T0 + 500_000
+    run = _write_run(tmp_path, events,
+                     [_journal_round(t=100.4, round_s=1.0)])
+    doc = critpath.analyze(run)
+    assert any("apart" in p for p in critpath.check(doc))
+
+
+def test_retried_round_selects_attempt_containing_commit_time(tmp_path):
+    # two attempts share the deterministic root id; the journal's commit
+    # timestamp falls inside the second
+    retry = [
+        _ev("coord.round", "B", T0 + 5000, pid=1,
+            args={"step": 3, "trace": TRACE, "span": ROOT}),
+        _ev("coord.round", "E", T0 + 6000, pid=1),
+    ]
+    run = _write_run(
+        tmp_path, _round_events() + retry,
+        [_journal_round(status="aborted", t=100.0008),
+         _journal_round(t=100.0055)],
+    )
+    doc = critpath.analyze(run)
+    committed = [r for r in doc["rounds"] if r["status"] == "committed"]
+    [r] = committed
+    assert r["span_s"] == pytest.approx(0.001)  # the 5000..6000 attempt
+
+
+def test_unclaimed_trace_is_reported_as_stray(tmp_path):
+    trailing = [_ev("proxy.step", "X", T0 + 9000, dur=10, pid=3,
+                    args={"trace": "round:6", "span": 30, "parent": 31})]
+    run = _write_run(tmp_path, _round_events() + trailing,
+                     [_journal_round()])
+    doc = critpath.analyze(run)
+    [stray] = doc["orphans"]
+    assert stray["trace"] == "round:6" and stray["orphan_spans"] == 1
+    assert critpath.check(doc) == []  # trailing windows are not fatal
+
+
+def test_cli_check_and_json(tmp_path, capsys):
+    run = _write_run(tmp_path, _round_events(), [_journal_round()])
+    out = os.path.join(run, "critpath.json")
+    assert critpath.main([run, "--check", "--json", out]) == 0
+    with open(out) as f:
+        doc = json.load(f)
+    assert doc["schema"] == critpath.CRITPATH_SCHEMA
+    assert "check OK" in capsys.readouterr().out
+
+
+# -- Perfetto flow stitching -------------------------------------------------
+
+def test_flow_events_pair_resolved_edges():
+    events = _round_events()
+    flows = critpath.flow_events(events)
+    # 6 child spans with a present parent -> 6 s/f pairs
+    assert len(flows) == 12
+    starts = [f for f in flows if f["ph"] == "s"]
+    finishes = [f for f in flows if f["ph"] == "f"]
+    assert len(starts) == len(finishes) == 6
+    assert all(f["bp"] == "e" for f in finishes)
+    assert {f["id"] for f in starts} == {f["id"] for f in finishes}
+    # flow events are schema-valid phases for the merged-trace check
+    assert report.validate_events(flows) == []
+
+
+def test_merge_stitches_flow_arrows(tmp_path):
+    run = _write_run(tmp_path, _round_events(), [_journal_round()])
+    out, events, _ = report.merge(run)
+    with open(out) as f:
+        doc = json.load(f)
+    assert any(ev.get("ph") == "s" for ev in doc["traceEvents"])
+
+
+# -- real-cluster integration ------------------------------------------------
+
+@pytest.mark.integration
+def test_cluster_rounds_all_rooted_and_check_green(tmp_path):
+    from repro.coord.supervisor import run_cluster
+
+    root = str(tmp_path / "ckpt")
+    obs = str(tmp_path / "obs")
+    rep = run_cluster(
+        root=root, n_hosts=2, total_steps=4, ckpt_every=2,
+        backend="thread", loop="numpy", deadline_s=180.0, obs_dir=obs,
+    )
+    assert rep.latest_committed == 4 and rep.alerts == []
+    jpath = os.path.join(root, "CLUSTER_LOG.jsonl")
+    doc = critpath.analyze(obs, journal=jpath)
+    committed = [r for r in doc["rounds"] if r["status"] == "committed"]
+    assert {r["step"] for r in committed} == {2, 4}
+    for r in committed:
+        assert r["rooted"], f"round {r['step']} not rooted: {r}"
+        assert r["orphan_spans"] == 0
+        # decomposition sums to the span by construction, and the span
+        # agrees with the journaled round duration within the tolerance
+        assert sum(r["phases_us"].values()) == pytest.approx(
+            r["span_s"] * 1e6, rel=1e-6)
+        assert abs(r["span_s"] - r["round_s"]) <= max(
+            critpath.CHECK_REL * r["round_s"], critpath.CHECK_ABS_S)
+        assert r["critical_path"] and r["critical_host"] is not None
+    assert critpath.check(doc) == []
+    assert critpath.main([obs, "--journal", jpath, "--check"]) == 0
+
+
+@pytest.mark.integration
+def test_divergence_drill_names_first_forked_chunk(tmp_path):
+    from repro.coord.supervisor import run_cluster
+
+    root = str(tmp_path / "ckpt")
+    rep = run_cluster(
+        root=root, n_hosts=3, total_steps=4, ckpt_every=2,
+        backend="thread", loop="numpy", deadline_s=180.0,
+        corrupt_host=1, corrupt_at_step=3,
+    )
+    assert not rep.lockstep()  # the injection took
+    named = [a for a in rep.alerts if a.get("kind") == "digest_divergence"]
+    assert named, f"no divergence alert: {rep.alerts}"
+    a = named[0]
+    assert a.get("chunk") is not None and a.get("chunk_index") is not None
+    assert a["step"] == 4
+    assert f"first divergent chunk {a['chunk']}[{a['chunk_index']}]" \
+        in a["message"]
+    # hosts 0 and 2 still agree, so the minority vote names the culprit
+    assert a.get("host") == 1
+
+
+@pytest.mark.integration
+def test_kill_replay_drill_orphans_and_reattach(tmp_path):
+    """SIGKILL the proxy mid-window: the respawned incarnation re-attaches
+    to the same round tree; a window that never reaches its boundary
+    (its root span never emitted) is left as an orphan subtree."""
+    from repro.proxy import ProxyRunner
+
+    obs = str(tmp_path / "obs")
+    trace.enable(obs, "app", run_id="drill")
+    spec = {"name": "numpy_sgd", "rows": 8, "width": 32, "seed": 0}
+    r = ProxyRunner(spec, chunk_bytes=1 << 10, max_restarts=2)
+    r.start()
+    try:
+        window = trace.span_context(trace.round_trace_id(4))
+        r.trace_ctx = window
+        for s in range(1, 3):
+            r.step(s)
+        r.sync_state()  # drain the pipelined steps before the SIGKILL
+        r.kill()
+        for s in range(3, 5):
+            r.step(s)  # death detected -> respawn re-attaches, replays
+        r.sync_state()
+        # the boundary: the window root span materializes
+        tr = trace.get()
+        tr.begin("worker.round", step=4, host=0, **trace.ctx_args(window))
+        tr.end("worker.round")
+        # second window: steps traced, but SIGKILL-style no boundary is
+        # ever reached, so its root span never lands in any shard
+        r.trace_ctx = trace.span_context(trace.round_trace_id(8))
+        for s in range(5, 7):
+            r.step(s)
+        r.sync_state()
+    finally:
+        r.close()
+    trace.disable()
+
+    events, _ = report.load_shards(obs)
+    spans = critpath.build_spans(events)
+    per_trace = {}
+    for s in spans:
+        if s["trace"] is not None:
+            per_trace.setdefault(s["trace"], []).append(s)
+
+    done = per_trace["round:4"]
+    ids = {s["span"] for s in done}
+    parent_of = {s["span"]: s.get("parent") for s in done}
+    assert all(critpath._resolves(s, parent_of, ids) for s in done)
+    # the respawned incarnation's replayed + live steps joined the tree
+    incs = {s["args"].get("inc") for s in done if s["name"] == "proxy.step"}
+    assert incs == {0, 1}
+    # ... and announced the re-attach on its REGISTER frame
+    assert any(s["name"] == "proxy.register" for s in done)
+
+    # the boundary-less window is one whole orphan subtree
+    lost = per_trace["round:8"]
+    ids8 = {s["span"] for s in lost}
+    parent8 = {s["span"]: s.get("parent") for s in lost}
+    assert lost and not any(
+        critpath._resolves(s, parent8, ids8) for s in lost
+    )

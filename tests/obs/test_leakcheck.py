@@ -63,3 +63,39 @@ def test_unsupported_platform_degrades_to_noop(monkeypatch):
     assert not snap.supported
     with LeakCheck():
         pass  # no false failure without /proc
+
+
+# -- obs-owned fd exclusion (the watchdog's trend sampler) -------------------
+
+def test_is_obs_fd_patterns():
+    from repro.obs.leakcheck import _is_obs_fd
+
+    assert _is_obs_fd("/run/obs/trace-worker-123.jsonl")
+    assert _is_obs_fd("/run/obs/metrics-app-9.json")
+    assert _is_obs_fd("/run/CLUSTER_LOG.jsonl")
+    assert _is_obs_fd("/run/obs/live_metrics.json.tmp")
+    assert _is_obs_fd("/run/obs/merged.trace.json")
+    assert _is_obs_fd("/run/obs/trace-app-1.jsonl (deleted)")
+    assert not _is_obs_fd("/ckpt/step-3/data-h0000.bin")
+    assert not _is_obs_fd("socket:[123456]")
+    assert not _is_obs_fd("/dev/shm/crum-arena-1")
+
+
+@needs_proc
+def test_sample_exclude_obs_counts_and_excludes(tmp_path):
+    from repro.obs.leakcheck import sample, watchdog_sample
+
+    held = open(tmp_path / "trace-app-4242.jsonl", "w")  # noqa: SIM115
+    data = open(tmp_path / "data-h0000.bin", "w")  # noqa: SIM115
+    try:
+        s = sample(exclude_obs=True)
+        assert s["supported"] and s["fd_obs"] >= 1
+        # the obs fd is excluded from the trend-facing count
+        assert s["fd"] >= 1
+        w = watchdog_sample()
+        assert "fd_obs" in w  # the watchdog default is the excluding one
+    finally:
+        held.close()
+        data.close()
+    # plain sample() keeps the legacy shape: no fd_obs key
+    assert "fd_obs" not in sample()

@@ -1,0 +1,73 @@
+"""Causal-context API: id derivation, child minting, arg stamping."""
+import json
+
+from repro.obs import trace
+
+
+def _shard_events(obs_dir):
+    import glob
+
+    events = []
+    for path in glob.glob(f"{obs_dir}/trace-*.jsonl"):
+        with open(path) as f:
+            events.extend(json.loads(line) for line in f if line.strip())
+    return events
+
+
+def test_root_span_id_is_deterministic_and_63bit():
+    a = trace.root_span_id(trace.round_trace_id(3))
+    assert a == trace.root_span_id("round:3")  # pure function of the id
+    assert a != trace.root_span_id("round:6")
+    assert 0 < a < (1 << 63)
+    assert a & 1  # never zero even under truncation
+
+
+def test_new_span_id_range():
+    ids = {trace.new_span_id() for _ in range(64)}
+    assert len(ids) == 64
+    assert all(0 < i < (1 << 63) and i & 1 for i in ids)
+
+
+def test_span_context_and_child_derivation():
+    root = trace.span_context("round:3", span=trace.root_span_id("round:3"))
+    assert root["trace"] == "round:3"
+    assert "parent" not in root  # the root has no remote parent
+    child = trace.child_span(root)
+    assert child["trace"] == "round:3"
+    assert child["parent"] == root["span"]
+    assert child["span"] != root["span"]
+    # two frames from the same site get distinct receiver span ids
+    assert trace.child_span(root)["span"] != child["span"]
+    # off path: no ctx in, no ctx out
+    assert trace.child_span(None) is None
+    assert trace.child_span({}) is None
+
+
+def test_ctx_args_shapes():
+    assert trace.ctx_args(None) == {}
+    assert trace.ctx_args({}) == {}
+    full = {"trace": "round:3", "span": 5, "parent": 7}
+    assert trace.ctx_args(full) == full
+    assert trace.ctx_args({"trace": "t", "span": 5}) == {
+        "trace": "t", "span": 5,
+    }
+
+
+def test_spans_carry_ctx_and_end_args_in_the_shard(tmp_path):
+    obs = str(tmp_path / "obs")
+    trace.enable(obs, "app", run_id="ctx")
+    tr = trace.get()
+    ctx = trace.span_context(trace.round_trace_id(9))
+    tr.begin("worker.round", step=9, host=0, **trace.ctx_args(ctx))
+    tr.end("worker.round", outcome="committed")
+    tr.instant("coord.ack", **trace.ctx_args(trace.child_span(ctx)))
+    trace.disable()
+
+    events = _shard_events(obs)
+    b = next(e for e in events if e.get("ph") == "B")
+    assert b["args"]["trace"] == "round:9"
+    assert b["args"]["span"] == ctx["span"]
+    e = next(ev for ev in events if ev.get("ph") == "E")
+    assert e["args"]["outcome"] == "committed"  # end() forwards args
+    i = next(ev for ev in events if ev.get("ph") == "i")
+    assert i["args"]["parent"] == ctx["span"]

@@ -190,3 +190,98 @@ def test_alert_journal_roundtrip(tmp_path):
     w2.close()
     assert len(journal.alerts(path)) == 1
     assert len(journal.read_journal(path)) == 2
+
+
+# -- divergence provenance ---------------------------------------------------
+
+def test_divergence_names_first_forked_chunk_via_baseline():
+    wd = Watchdog()
+    good = {"b": [333], "w": [111, 222]}
+    # a clean committed round records the per-chunk baseline
+    wd.on_persist_done(0, 3, "same", chunk_digests=good)
+    wd.on_persist_done(1, 3, "same", chunk_digests=good)
+    wd.on_round(_round(3))
+    assert wd.alerts == []
+    # host 1 forks chunk w[1] at the next round
+    wd.on_persist_done(0, 6, "aaaa", chunk_digests=good)
+    wd.on_persist_done(1, 6, "bbbb",
+                       chunk_digests={"b": [333], "w": [111, 999]})
+    [a] = wd.alerts
+    assert a.kind == "digest_divergence" and a.severity == SEV_CRITICAL
+    assert a.chunk == "w" and a.chunk_index == 1
+    assert a.host == 1  # named exactly: its digest left the baseline
+    assert "first divergent chunk w[1] forked at step 6 on host 1" \
+        in a.message
+
+
+def test_divergence_minority_culprit_without_baseline():
+    wd = Watchdog()
+    wd.on_persist_done(0, 3, "aaaa", chunk_digests={"w": [1, 2]})
+    wd.on_persist_done(1, 3, "aaaa", chunk_digests={"w": [1, 2]})
+    wd.on_persist_done(2, 3, "cccc", chunk_digests={"w": [1, 7]})
+    [a] = wd.alerts
+    assert a.chunk == "w" and a.chunk_index == 1
+    assert a.host == 2  # outvoted 2:1 even with no committed baseline
+
+
+def test_divergence_two_hosts_no_baseline_names_chunk_only():
+    wd = Watchdog()
+    wd.on_persist_done(0, 3, "aaaa", chunk_digests={"w": [1]})
+    wd.on_persist_done(1, 3, "bbbb", chunk_digests={"w": [9]})
+    # a 1-vs-1 split is held back in case a further ack breaks the tie;
+    # the round decision flushes it with the culprit unresolved
+    assert wd.alerts == []
+    wd.on_round(_round(3))
+    [a] = wd.alerts
+    assert a.kind == "digest_divergence"
+    assert a.chunk == "w" and a.chunk_index == 0
+    assert a.host is None  # 1v1 with no baseline: no culprit to name
+    assert "an unidentified host" in a.message
+
+
+def test_deferred_divergence_resolves_on_late_ack():
+    wd = Watchdog()
+    wd.on_persist_done(0, 3, "aaaa", chunk_digests={"w": [1]})
+    wd.on_persist_done(1, 3, "bbbb", chunk_digests={"w": [9]})
+    assert wd.alerts == []  # held: culprit ambiguous at 1v1
+    wd.on_persist_done(2, 3, "aaaa", chunk_digests={"w": [1]})
+    [a] = wd.alerts  # the third ack outvotes host 1
+    assert a.host == 1 and a.chunk == "w"
+
+
+def test_divergence_without_chunk_tables_keeps_legacy_message():
+    wd = Watchdog()
+    wd.on_persist_done(0, 3, "aaaa")
+    wd.on_persist_done(1, 3, "bbbb")
+    [a] = wd.alerts
+    assert a.chunk is None and a.chunk_index is None
+    assert "hosts disagree on state at step 3" in a.message
+    d = a.as_dict()
+    assert "chunk" not in d and "chunk_index" not in d  # Nones dropped
+
+
+def test_chunk_state_popped_at_commit():
+    wd = Watchdog()
+    wd.on_persist_done(0, 3, "same", chunk_digests={"w": [1]})
+    wd.on_persist_done(1, 3, "same", chunk_digests={"w": [1]})
+    wd.on_round(_round(3))
+    assert wd._chunks == {}
+    assert wd._chunk_baseline == {("w", 0): 1}
+
+
+def test_chunk_alert_journal_roundtrip(tmp_path):
+    path = os.path.join(str(tmp_path), "CLUSTER_LOG.jsonl")
+    w = journal.JournalWriter(path)
+    alert = Alert("digest_divergence", SEV_CRITICAL, host=1, step=6,
+                  chunk="w", chunk_index=3, message="forked")
+    w.write("alert", **alert.as_dict())
+    w.close()
+    [line] = journal.alerts(path)
+    assert line.chunk == "w" and line.chunk_index == 3 and line.host == 1
+
+
+def test_default_sampler_excludes_obs_fds():
+    from repro.obs import leakcheck
+
+    wd = Watchdog()
+    assert wd._sampler is leakcheck.watchdog_sample
