@@ -116,6 +116,25 @@ def check(rows: list[dict], *, tolerance: float = 2.0) -> list[str]:
     return bad
 
 
+def soak_clean(doc: dict) -> list[str]:
+    """Gate a ``crum-soak/1`` scorecard (``repro.obs.soak`` output):
+    every hard boolean must hold — an unexplained alert, an unevidenced
+    injection, a non-converged run or a leak trend all fail the gate."""
+    bad: list[str] = []
+    if doc.get("schema") != "crum-soak/1":
+        return [f"not a crum-soak/1 scorecard (schema="
+                f"{doc.get('schema')!r})"]
+    checks = doc.get("checks") or {}
+    if not checks:
+        return ["scorecard has no checks"]
+    for name, ok in checks.items():
+        if not ok:
+            bad.append(f"soak check {name} failed")
+    if not doc.get("n_injections"):
+        bad.append("soak ran zero injections — the drill tested nothing")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="FILE", default=None,
@@ -128,7 +147,19 @@ def main(argv=None) -> int:
                     help="ALSO diff the rows against this committed "
                          "baseline dump (repro.obs.baseline findings "
                          "become gate violations)")
+    ap.add_argument("--soak", metavar="FILE", default=None,
+                    help="gate ONLY a crum-soak/1 scorecard "
+                         "(repro.obs.soak output) — the chaos-soak CI "
+                         "job's teeth")
     args = ap.parse_args(argv)
+    if args.soak:
+        with open(args.soak) as f:
+            violations = soak_clean(json.load(f))
+        for v in violations:
+            print(f"[gate] FAIL: {v}", file=sys.stderr)
+        if not violations:
+            print("[gate] soak scorecard: OK")
+        return 1 if violations else 0
     rows = _load_rows(args.json)
     violations = check(rows, tolerance=args.tolerance)
     if args.baseline:

@@ -1,0 +1,40 @@
+"""Chaos observatory: journaled fault injection for soak runs.
+
+Three layers (ROADMAP item 5's harness):
+
+* :mod:`repro.chaos.faults` — cross-process fault *arming*: sentinel
+  files under ``$CRUM_CHAOS_DIR`` that in-tree shims (store writer
+  quota, heartbeat clock skew) poll. Zero-cost when the env var is
+  unset — production code paths stay exactly as fast.
+* :mod:`repro.chaos.injectors` — the injection engine: every injection
+  is FIRST a versioned journal line (``crum-inject/1`` in
+  INJECT_LOG.jsonl, carrying its expected-evidence spec) plus a trace
+  instant, and only then the fault itself (SIGKILL, SIGSTOP window,
+  torn frame, quota arm, skew arm).
+* :mod:`repro.chaos.schedule` + :mod:`repro.chaos.soak` — a seeded,
+  reproducible, timer-driven schedule and the driver
+  (``python -m repro.chaos.soak``) that runs a cluster under it.
+
+The closed loop is :mod:`repro.obs.soak`: it joins INJECT_LOG.jsonl
+against the cluster journal, alerts, metric series and critpath, and
+fails the run on any unexplained alert or unevidenced injection.
+"""
+from repro.chaos.faults import CHAOS_ENV, active, arm, disarm
+from repro.chaos.injectors import (
+    INJECT_SCHEMA,
+    ClusterHandles,
+    InjectionEngine,
+)
+from repro.chaos.schedule import PlannedInjection, build_schedule
+
+__all__ = [
+    "CHAOS_ENV",
+    "arm",
+    "disarm",
+    "active",
+    "INJECT_SCHEMA",
+    "ClusterHandles",
+    "InjectionEngine",
+    "PlannedInjection",
+    "build_schedule",
+]

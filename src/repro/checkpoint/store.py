@@ -44,6 +44,7 @@ class ChunkStore:
 
         def __init__(self, store: "ChunkStore", step: int, host: int,
                      *, lazy: bool = False):
+            self.host = int(host)
             self.relpath = host_data_file(step, host)
             self._abspath = os.path.join(store.root, self.relpath)
             self._f = None
@@ -60,6 +61,13 @@ class ChunkStore:
             if self._f is None:
                 self._open()
             comp = get_codec(codec_name).compress(raw)
+            if os.environ.get("CRUM_CHAOS_DIR"):
+                # chaos shim (soak drills): an armed disk_full fault turns
+                # this append into ENOSPC mid-persist. One env lookup on
+                # every production run — the import never happens.
+                from repro.chaos.faults import check_disk_quota
+
+                check_disk_quota(self.host, len(comp), self._off)
             rec = ChunkRecord(
                 index=index, raw_len=len(raw), digest=digest,
                 codec=codec_name, file=self.relpath,

@@ -308,7 +308,10 @@ class Coordinator:
 
     def _on_heartbeat(self, host: int, msg: dict) -> None:
         step = int(msg.get("step") or 0)
-        self.watchdog.on_heartbeat(host, step)
+        wt = msg.get("wt")
+        self.watchdog.on_heartbeat(
+            host, step, wt=float(wt) if wt is not None else None
+        )
         if self.live.ingest(host, msg.get("metrics")):
             # feed the spike rules exactly the points that just landed
             now = time.time()
@@ -585,7 +588,14 @@ class Coordinator:
         self._kick(host, "connection lost (worker death)")
 
     def _check_liveness(self) -> None:
-        self.watchdog.tick()          # leak-trend sampling (rate-limited)
+        s = self.watchdog.tick()      # leak-trend sampling (rate-limited)
+        if s and s.get("supported"):
+            # publish the raw counts as coordinator-local series (-1):
+            # the soak verdict's leaks_flat check reads these, so a flat
+            # trend is provable from live_metrics.json, not just from
+            # the absence of a leak alert
+            self.live.observe(-1, "coord_fd", float(s["fd"]))
+            self.live.observe(-1, "coord_shm", float(s["shm"]))
         self.live.maybe_snapshot()    # run-dir live_metrics.json refresh
         for host in set(self.monitor.dead_hosts()) & set(self._conns):
             self._kick(host, "heartbeat timeout (worker stalled)")

@@ -19,7 +19,12 @@ chunk.
 Worker -> coordinator::
 
     JOIN          {host, pid, restored_from}   first frame on a connection
-    HEARTBEAT     {host, step, metrics?}       periodic liveness; ``metrics``
+    HEARTBEAT     {host, step, wt?, metrics?}  periodic liveness; ``wt`` is
+                                               the sender's wall clock —
+                                               the watchdog's clock_skew
+                                               rule compares it against
+                                               the coordinator's (0 =
+                                               rule off); ``metrics``
                                                optionally piggybacks the
                                                worker's registry delta
                                                ({seq, counters, gauges} —

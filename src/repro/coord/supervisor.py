@@ -110,23 +110,22 @@ class ClusterSupervisor:
         )
 
     def watch(self, done: threading.Event, *, deadline_s: float = 600.0) -> None:
-        """Reap deaths and respawn until ``done`` (coordinator finished)."""
+        """Reap deaths and respawn until ``done`` (coordinator finished).
+
+        Every pass reaps ANY dead-and-unprocessed process, however the
+        death was first noticed. Gating the reap on "its sentinel was in
+        this pass's ``sentinel_wait`` result" is a liveness race: a death
+        landing between passes is reaped by the next ``is_alive()`` call
+        (``waitpid``), which then excludes the process from the waited
+        set — it would never be respawned and the cluster would hang at
+        the barrier until the coordinator deadline.
+        """
         deadline = time.monotonic() + deadline_s
         while not done.is_set():
             if time.monotonic() > deadline:
                 raise TimeoutError("supervisor deadline exceeded")
-            live = {h: p for h, p in self.procs.items() if p.is_alive()}
-            if not live:
-                # every worker exited; wait on the coordinator to notice
-                done.wait(timeout=0.25)
-                continue
-            ready = sentinel_wait(
-                [p.sentinel for p in live.values()], timeout=0.25
-            )
-            if not ready:
-                continue
-            for host, p in list(live.items()):
-                if p.is_alive() or p.sentinel not in ready:
+            for host, p in list(self.procs.items()):
+                if host in self.exited_clean or p.is_alive():
                     continue
                 p.join()
                 if p.exitcode == 0:
@@ -136,6 +135,16 @@ class ClusterSupervisor:
                 cfg = self.respawn_cfg(self.cfgs[host])
                 self.cfgs[host] = cfg
                 self._spawn(cfg)
+            live = [
+                p.sentinel for h, p in self.procs.items()
+                if h not in self.exited_clean and p.is_alive()
+            ]
+            if live:
+                # nap until a sentinel fires (portable SIGCHLD) or 0.25s
+                sentinel_wait(live, timeout=0.25)
+            else:
+                # every worker exited; wait on the coordinator to notice
+                done.wait(timeout=0.25)
 
     def terminate(self) -> None:
         for p in self.procs.values():
@@ -183,6 +192,9 @@ def run_cluster(
     obs_dir: str | None = None,
     watch_cfg=None,
     abort_on_critical: bool = False,
+    device_capacity: str | None = None,
+    persist_timeout_s: float | None = None,
+    chaos=None,
 ) -> ClusterReport:
     """One coordinated run: coordinator + N supervised worker processes.
 
@@ -246,6 +258,10 @@ def run_cluster(
             kw.update(proxy_placement="coord", proxy_transport=proxy_transport)
         if codec is not None:
             kw["codec"] = codec
+        if device_capacity is not None:
+            kw["device_capacity"] = device_capacity
+        if persist_timeout_s is not None:
+            kw["persist_timeout_s"] = persist_timeout_s
         if h == kill_host and kill_at_step is not None:
             kw["kill_at_step"] = kill_at_step
         if h == die_after_persist_host and die_after_persist_step is not None:
@@ -289,9 +305,25 @@ def run_cluster(
             target=proxy_killer, name="proxy-killer", daemon=True
         ).start()
     sup.start()
+    chaos_ctl = None
+    if chaos is not None:
+        # chaos hook (repro.chaos.soak): hand the caller live handles to
+        # every process in the cluster so a schedule thread can inject
+        # faults while the run runs; stopped before teardown so a fault
+        # window never outlives the cluster it targeted
+        from repro.chaos.injectors import ClusterHandles
+
+        chaos_ctl = chaos(ClusterHandles(
+            coordinator=coord, supervisor=sup, daemons=daemons, root=root,
+        ))
     try:
         sup.watch(coord.done, deadline_s=deadline_s)
     finally:
+        if chaos_ctl is not None:
+            try:
+                chaos_ctl.stop()
+            except Exception:
+                pass
         sup.terminate()
         for d in daemons:
             d.terminate()

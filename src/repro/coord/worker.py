@@ -86,6 +86,10 @@ class WorkerConfig:
     #                                (pin it for elastic restarts: the state
     #                                shape must not change with host count)
     step_time_s: float = 0.0       # simulated compute per train step
+    # proxy UVM budget: bytes ("1048576") or a percentage of the program
+    # state ("50%" = oversubscription x2); None = unmanaged (soak runs
+    # exercise the paging path by setting this under 100%)
+    device_capacity: str | None = None
     heartbeat_s: float = 0.5
     sock_timeout_s: float = 1.0
     deadline_s: float = 600.0
@@ -184,7 +188,27 @@ def _program_spec(cfg: WorkerConfig) -> dict:
         }
     if cfg.loop == "jax":
         return {"name": "jax_tiny", "width": cfg.width, "seed": cfg.seed}
+    if cfg.loop.startswith("arch:"):
+        # model-zoo worker (soak runs): a real repro.configs architecture
+        # in smoke shape — the same program launch/train.py ships
+        return {
+            "name": "train_arch",
+            "arch": cfg.loop.split(":", 1)[1],
+            "smoke": True,
+            "seed": cfg.seed,
+        }
     raise ValueError(f"unknown worker loop {cfg.loop!r}")
+
+
+def _resolve_capacity(spec: str, spec_dict: dict) -> int:
+    """``"50%"`` of the program's state bytes, or absolute bytes."""
+    s = spec.strip()
+    if s.endswith("%"):
+        from repro.proxy.programs import make_program
+
+        nbytes = make_program(spec_dict).state_nbytes()
+        return max(1, int(nbytes * float(s[:-1]) / 100.0))
+    return int(s)
 
 
 class _InlineLoop:
@@ -269,13 +293,24 @@ class _ProxyLoop:
             raise ValueError(
                 f"unknown proxy_placement {cfg.proxy_placement!r}"
             )
+        extra = {}
+        if cfg.device_capacity is not None:
+            # oversubscribed soak runs: cap the proxy's device budget so
+            # the UVM pager is on the hot path while chaos fires
+            extra["device_capacity_bytes"] = _resolve_capacity(
+                cfg.device_capacity, self.spec
+            )
         self.runner = ProxyRunner(
             self.spec,
             workdir=workdir,
             chunk_bytes=cfg.chunk_bytes,
             sync_timeout_s=cfg.persist_timeout_s,
+            # a partitioned (SIGSTOPped) proxy host must be detected well
+            # inside the round timeout, not after the default 120s
+            op_timeout_s=cfg.persist_timeout_s,
             transport=cfg.proxy_transport,
             endpoint_provider=provider,
+            **extra,
         )
 
     def init(self):
@@ -356,9 +391,18 @@ class _Heartbeat(threading.Thread):
                 extra["metrics"] = payload
             if self.ctx is not None:
                 extra["ctx"] = self.ctx
+            # wall-clock witness for the watchdog's clock_skew rule; the
+            # chaos shim (soak drills) skews it while a sentinel is armed
+            wt = time.time()
+            if os.environ.get("CRUM_CHAOS_DIR"):
+                from repro.chaos.faults import active as _chaos_active
+
+                skew = _chaos_active("clock_skew", host=self.cfg.host)
+                if skew is not None:
+                    wt += float(skew.get("skew_s", 0.0))
             try:
                 self.conn.send(MSG_HEARTBEAT, host=self.cfg.host,
-                               step=self.step, **extra)
+                               step=self.step, wt=wt, **extra)
             except OSError:
                 # coordinator kicked us (or died): this incarnation is over
                 os._exit(1)

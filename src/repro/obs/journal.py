@@ -40,6 +40,7 @@ __all__ = [
     "ProxyPlacementLine",
     "ProxyHostDeathLine",
     "AlertLine",
+    "InjectLine",
     "alerts",
 ]
 
@@ -49,8 +50,9 @@ class JournalWriter:
     O_APPEND), so concurrent writers never interleave and a SIGKILL tears
     at most the final line."""
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, schema: str = JOURNAL_SCHEMA):
         self.path = path
+        self.schema = schema
         self._lock = threading.Lock()
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._fd = os.open(
@@ -59,7 +61,7 @@ class JournalWriter:
 
     def write(self, event: str, **fields) -> None:
         line = {
-            "schema": JOURNAL_SCHEMA,
+            "schema": self.schema,
             "event": event,
             "t": time.time(),
             **fields,
@@ -166,6 +168,25 @@ class ProxyHostDeathLine(JournalRecord):
 
 
 @dataclass
+class InjectLine(JournalRecord):
+    """One planned fault injection (``crum-inject/1``, INJECT_LOG.jsonl).
+
+    Written *before* the fault fires — the injection journal is the
+    ground truth the soak verdict engine joins against the cluster
+    journal: every injection must produce its expected evidence
+    (``expect``), and every alert must be explained by some injection.
+    """
+
+    schema: str = "crum-inject/1"
+    kind: str = ""
+    target: str = ""
+    seq: int = -1
+    until: float | None = None
+    params: dict = field(default_factory=dict)
+    expect: dict = field(default_factory=dict)
+
+
+@dataclass
 class AlertLine(JournalRecord):
     """One SLO-watchdog rule violation (``repro.obs.watch.Alert``)."""
 
@@ -191,6 +212,7 @@ RECORD_TYPES: dict[str, type[JournalRecord]] = {
     "proxy_placement": ProxyPlacementLine,
     "proxy_host_death": ProxyHostDeathLine,
     "alert": AlertLine,
+    "inject": InjectLine,
 }
 
 

@@ -42,6 +42,15 @@ LIVE_SCHEMA = "crum-live-metrics/1"
 MAX_METRICS_PER_HOST = 256
 DEFAULT_RING = 240
 
+#: tiered downsampling: every raw append also folds into one open bucket
+#: per tier (seconds); completed buckets land in their own ring. The raw
+#: ring covers the last ~2 minutes at heartbeat cadence; the 10s tier
+#: covers ~40 minutes and the 60s tier ~4 hours — a soak run's whole
+#: history stays in memory at bounded cost, and trend consumers
+#: (``repro.obs.top``, the soak verdict's leak check) read the rollups
+#: instead of a raw ring that has long since wrapped.
+ROLLUP_TIERS = (10.0, 60.0)
+
 #: piggyback payload budget — a HEARTBEAT frame stays a control frame.
 #: Deltas beyond the key budget are *deferred*, not dropped: an uncounted
 #: key stays out of the baseline snapshot, so its whole value rides the
@@ -69,13 +78,25 @@ class SeriesStore:
     side channel snapshots).
     """
 
-    def __init__(self, ring: int = DEFAULT_RING):
+    def __init__(self, ring: int = DEFAULT_RING,
+                 rollups: tuple = ROLLUP_TIERS,
+                 rollup_ring: int = DEFAULT_RING):
         self.ring = int(ring)
+        self.rollups = tuple(float(r) for r in rollups)
+        self.rollup_ring = int(rollup_ring)
         self._lock = threading.Lock()
         self._series: dict[tuple[int, str], deque] = {}
+        # completed buckets per (host, metric, tier); each point is
+        # [bucket_t, last, min, max, n] — last-value downsampling with a
+        # min/max envelope, so a spike inside a bucket stays visible
+        self._rolled: dict[tuple[int, str, float], deque] = {}
+        # the in-progress bucket per (host, metric, tier):
+        # [bucket_t, last, min, max, n]
+        self._open: dict[tuple[int, str, float], list] = {}
 
     def append(self, host: int, metric: str, t: float, value: float) -> bool:
         key = (int(host), str(metric))
+        t, value = float(t), float(value)
         with self._lock:
             q = self._series.get(key)
             if q is None:
@@ -83,8 +104,43 @@ class SeriesStore:
                         >= MAX_METRICS_PER_HOST:
                     return False  # per-host series budget exhausted
                 q = self._series[key] = deque(maxlen=self.ring)
-            q.append((float(t), float(value)))
+            q.append((t, value))
+            for tier in self.rollups:
+                rkey = (key[0], key[1], tier)
+                bucket = (t // tier) * tier
+                cur = self._open.get(rkey)
+                if cur is None or cur[0] != bucket:
+                    if cur is not None:
+                        rq = self._rolled.get(rkey)
+                        if rq is None:
+                            rq = self._rolled[rkey] = deque(
+                                maxlen=self.rollup_ring
+                            )
+                        rq.append(cur)
+                    self._open[rkey] = [bucket, value, value, value, 1]
+                else:
+                    cur[1] = value
+                    cur[2] = min(cur[2], value)
+                    cur[3] = max(cur[3], value)
+                    cur[4] += 1
         return True
+
+    def rollup(self, host: int, metric: str, tier: float
+               ) -> list[list[float]]:
+        """Completed buckets plus the provisional open one, oldest first.
+
+        Each point is ``[bucket_t, last, min, max, n]``. The open bucket
+        rides along so short runs (shorter than one tier) still expose a
+        point — it is provisional: its values may still move until the
+        bucket closes.
+        """
+        rkey = (int(host), str(metric), float(tier))
+        with self._lock:
+            out = [list(p) for p in self._rolled.get(rkey, ())]
+            cur = self._open.get(rkey)
+            if cur is not None:
+                out.append(list(cur))
+        return out
 
     def series(self, host: int, metric: str) -> list[tuple[float, float]]:
         with self._lock:
@@ -115,10 +171,33 @@ class SeriesStore:
                 ]
         return out
 
+    def rollup_snapshot(self) -> dict:
+        """All rollup tiers as a JSON-ready dict:
+        ``{tier: {host: {metric: [[t, last, min, max, n], ...]}}}``."""
+        with self._lock:
+            out: dict[str, dict[str, dict[str, list]]] = {}
+            for (h, m, tier), q in self._rolled.items():
+                pts = [list(p) for p in q]
+                cur = self._open.get((h, m, tier))
+                if cur is not None:
+                    pts.append(list(cur))
+                out.setdefault(f"{tier:g}", {}) \
+                   .setdefault(str(h), {})[m] = pts
+            for (h, m, tier), cur in self._open.items():
+                tiers = out.setdefault(f"{tier:g}", {})
+                metrics = tiers.setdefault(str(h), {})
+                if m not in metrics:  # open bucket with no completed ones
+                    metrics[m] = [list(cur)]
+        return out
+
     def drop_host(self, host: int) -> None:
         with self._lock:
             for key in [k for k in self._series if k[0] == int(host)]:
                 del self._series[key]
+            for key in [k for k in self._rolled if k[0] == int(host)]:
+                del self._rolled[key]
+            for key in [k for k in self._open if k[0] == int(host)]:
+                del self._open[key]
 
 
 class HeartbeatPiggyback:
@@ -241,6 +320,7 @@ class LiveAggregator:
             "t": time.time(),
             "hosts": self.store.hosts(),
             "series": self.store.snapshot(),
+            "rollups": self.store.rollup_snapshot(),
             "ingested": self.ingested,
             "dropped": self.dropped,
         }

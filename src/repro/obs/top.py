@@ -62,10 +62,27 @@ def _rate(points: list) -> float | None:
     return (v1 - v0) / (t1 - t0)
 
 
+def _explained_by(alert: dict, injections: list) -> int | None:
+    """The seq of the injection whose ``explains`` claims this alert
+    inside its evidence window, or None (same rule as the soak verdict:
+    kind + time, not host-strict)."""
+    t = alert.get("t")
+    if not isinstance(t, (int, float)):
+        return None
+    for inj in injections:
+        expect = inj.expect or {}
+        if alert.get("kind") in (expect.get("explains") or ()):
+            w = float(expect.get("window_s", 120.0))
+            if inj.t <= t <= inj.t + w:
+                return inj.seq
+    return None
+
+
 def render(snapshot: dict | None, alerts: list[dict],
-           *, width: int = 100) -> str:
+           *, injections: list | None = None, width: int = 100) -> str:
     """One frame of the dashboard as a plain string."""
     lines: list[str] = []
+    injections = injections or []
     if not snapshot:
         lines.append("crum top — no live snapshot yet "
                      "(coordinator not started, or telemetry disabled)")
@@ -104,14 +121,32 @@ def render(snapshot: dict | None, alerts: list[dict],
         if n_other:
             lines.append(f"  … plus {n_other} more series "
                          f"(full dump: live_metrics.json)")
+    if injections:
+        now = time.time()
+        active = [i for i in injections
+                  if i.until is not None and i.until > now]
+        lines.append(f"chaos: {len(injections)} injection(s), "
+                     f"{len(active)} active")
+        for i in injections[-8:]:
+            state = "ACTIVE" if (i.until is not None and i.until > now) \
+                else "fired"
+            lines.append(
+                f"  [{state:6s}] #{i.seq} {i.kind} -> {i.target}"[:width]
+            )
     if alerts:
         lines.append(f"alerts ({len(alerts)}):")
         for a in alerts[-10:]:
-            lines.append(
-                f"  [{a.get('severity', '?'):8s}] {a.get('kind', '?')}"
-                f" host={a.get('host', '-')} step={a.get('step', '-')}"
-                f" {a.get('message', '')}"[:width]
-            )
+            note = ""
+            if injections:
+                by = _explained_by(a, injections)
+                note = (f" <- chaos #{by}" if by is not None
+                        else " [UNEXPLAINED]")
+            body = (f"  [{a.get('severity', '?'):8s}] {a.get('kind', '?')}"
+                    f" host={a.get('host', '-')} step={a.get('step', '-')}"
+                    f" {a.get('message', '')}")
+            # the chaos annotation is the point: clip the message, not it
+            lines.append(body[:width - len(note)] + note if note
+                         else body[:width])
     else:
         lines.append("alerts: none")
     return "\n".join(lines)
@@ -140,20 +175,42 @@ def fetch_endpoint(host: str, port: int,
     )
 
 
-def fetch_run_dir(run_dir: str) -> tuple[dict | None, list[dict]]:
-    """Snapshot + journaled alerts from a (possibly finished) run dir."""
+def load_injections(run_dir: str) -> list:
+    """InjectLines from the run dir's (or its parent's) INJECT_LOG.jsonl
+    — present when the run was a chaos soak, empty otherwise."""
+    from repro.obs import journal
+
+    for cand in (
+        os.path.join(run_dir, "INJECT_LOG.jsonl"),
+        os.path.join(os.path.dirname(os.path.abspath(run_dir)),
+                     "INJECT_LOG.jsonl"),
+    ):
+        if os.path.exists(cand):
+            return [r for r in journal.read_journal(cand)
+                    if isinstance(r, journal.InjectLine)]
+    return []
+
+
+def fetch_run_dir(run_dir: str) -> tuple[dict | None, list[dict], list]:
+    """Snapshot + journaled alerts (+ injections) from a run dir."""
     from repro.obs import journal
     from repro.obs.report import find_journal
 
     snap = obs_live.read_snapshot(os.path.join(run_dir, "live_metrics.json"))
+    if snap is None:  # soak layout: the snapshot lives under obs/
+        snap = obs_live.read_snapshot(
+            os.path.join(run_dir, "obs", "live_metrics.json"))
     jpath = find_journal(run_dir)
+    if jpath is None:
+        cand = os.path.join(run_dir, "ckpt", "CLUSTER_LOG.jsonl")
+        jpath = cand if os.path.exists(cand) else None
     alert_lines = journal.alerts(jpath) if jpath else []
     alerts = [
         {"kind": a.kind, "severity": a.severity, "host": a.host,
-         "step": a.step, "message": a.message}
+         "step": a.step, "t": a.t, "message": a.message}
         for a in alert_lines
     ]
-    return snap, alerts
+    return snap, alerts, load_injections(run_dir)
 
 
 def main(argv=None) -> int:
@@ -178,18 +235,19 @@ def main(argv=None) -> int:
             ap.error("--endpoint must be HOST:PORT")
 
         def fetch():
-            return fetch_endpoint(host, int(port))
+            snap, alerts = fetch_endpoint(host, int(port))
+            return snap, alerts, []
     else:
         def fetch():
             return fetch_run_dir(args.run_dir)
 
     while True:
         try:
-            snapshot, alerts = fetch()
+            snapshot, alerts, injections = fetch()
         except (OSError, ValueError) as e:
-            snapshot, alerts = None, []
+            snapshot, alerts, injections = None, [], []
             print(f"[top] fetch failed: {e}", file=sys.stderr)
-        frame = render(snapshot, alerts)
+        frame = render(snapshot, alerts, injections=injections)
         if not args.once:
             print("\x1b[2J\x1b[H", end="")  # clear + home
         print(frame, flush=True)

@@ -15,6 +15,10 @@ round records, deaths, persist acks) plus a periodic
                                         relative to the round duration
     heartbeat_skew          warning     a host's reported step lags the
                                         front-runner by > max_step_skew
+    clock_skew              warning     a host's heartbeat wall clock is
+                                        > max_clock_skew_s off the
+                                        coordinator's (re-arms when the
+                                        clock recovers)
     round_abort             warning     a checkpoint round aborted
     abort_rate              critical    >= abort_rate_window aborts with
                                         no commit in between
@@ -101,6 +105,10 @@ class WatchConfig:
     max_step_skew: int = 0              # 0 = disabled (lockstep barriers
     #                                     make persistent skew visible as
     #                                     stalls; enable for async loops)
+    # wall-clock skew rule: a host's heartbeat ``wt`` vs the coordinator's
+    # own clock at receipt (0 = disabled). Re-arming: recovers when the
+    # host's clock comes back inside the limit.
+    max_clock_skew_s: float = 0.0
     # uvm fault/eviction spike rule (per-second rate over the heartbeat
     # series; 0 disables — oversubscribed runs set their own budget)
     fault_rate_max: float = 0.0
@@ -133,6 +141,7 @@ class Watchdog:
         self.alerts: list[Alert] = []
         self._steps: dict[int, int] = {}         # host -> last heartbeat step
         self._skew_alerted: set[int] = set()
+        self._clock_alerted: set[int] = set()
         self._consecutive_aborts = 0
         self._abort_rate_alerted = False
         self._fault_last: dict[tuple[int, str], tuple[float, float]] = {}
@@ -170,8 +179,24 @@ class Watchdog:
 
     # -- heartbeat-path rules ---------------------------------------------
 
-    def on_heartbeat(self, host: int, step: int) -> None:
+    def on_heartbeat(self, host: int, step: int,
+                     wt: float | None = None) -> None:
         self._steps[int(host)] = int(step)
+        if self.cfg.max_clock_skew_s > 0 and wt is not None:
+            h = int(host)
+            skew = abs(float(wt) - time.time())
+            if skew > self.cfg.max_clock_skew_s:
+                if h not in self._clock_alerted:
+                    self._clock_alerted.add(h)
+                    self._emit(Alert(
+                        "clock_skew", SEV_WARNING, host=h, step=int(step),
+                        value=round(skew, 3),
+                        limit=self.cfg.max_clock_skew_s,
+                        message=f"host {h} heartbeat wall clock is "
+                                f"{skew:.1f}s off the coordinator's",
+                    ))
+            else:
+                self._clock_alerted.discard(h)  # re-arm once back in sync
         if self.cfg.max_step_skew <= 0 or len(self._steps) < 2:
             return
         front = max(self._steps.values())
@@ -211,11 +236,17 @@ class Watchdog:
                 message=f"{metric} rate {rate:.0f}/s on host {host}",
             ))
 
-    def tick(self, now: float | None = None) -> None:
-        """Periodic (coordinator event-loop tick): leak-trend sampling."""
+    def tick(self, now: float | None = None) -> dict | None:
+        """Periodic (coordinator event-loop tick): leak-trend sampling.
+
+        Returns the leakcheck sample taken this tick (None when the
+        interval has not elapsed) so the caller can publish the raw
+        fd//dev/shm counts as live metric series — the soak verdict's
+        leak-trend check reads those series, not just the alerts.
+        """
         s = self._leak.maybe_sample(now)
         if s is None:
-            return
+            return None
         for kind, count_key, allowance in (
             ("fd_leak_trend", "fd", self.cfg.fd_leak_allowance),
             ("shm_leak_trend", "shm", self.cfg.shm_leak_allowance),
@@ -233,6 +264,7 @@ class Watchdog:
                 ))
             elif growth is not None and growth <= allowance:
                 self._leak_alerted.discard(kind)  # re-arm after recovery
+        return s
 
     # -- round-path rules --------------------------------------------------
 

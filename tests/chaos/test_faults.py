@@ -1,0 +1,93 @@
+"""Fault arming: sentinels, expiry, host filtering, the disk-full shim."""
+import errno
+import json
+import os
+import time
+
+import pytest
+
+from repro.chaos import faults
+
+
+def test_disabled_without_env(monkeypatch, tmp_path):
+    monkeypatch.delenv(faults.CHAOS_ENV, raising=False)
+    assert faults.chaos_dir() is None
+    assert faults.active("disk_full") is None
+    with pytest.raises(RuntimeError):
+        faults.arm("disk_full", quota_bytes=1)
+    # the shim is a no-op: no env, no exception, no file access
+    faults.check_disk_quota(0, 10**9, 10**9)
+
+
+def test_arm_active_disarm(tmp_path):
+    d = str(tmp_path)
+    path = faults.arm("clock_skew", directory=d, host=1, skew_s=60.0)
+    assert os.path.exists(path)
+    assert faults.active("clock_skew", directory=d) == \
+        {"host": 1, "skew_s": 60.0}
+    # host filter: a host-targeted sentinel matches only that host
+    assert faults.active("clock_skew", host=1, directory=d) is not None
+    assert faults.active("clock_skew", host=0, directory=d) is None
+    faults.disarm("clock_skew", directory=d)
+    assert faults.active("clock_skew", directory=d) is None
+    faults.disarm("clock_skew", directory=d)  # idempotent
+
+
+def test_self_expiry(tmp_path):
+    d = str(tmp_path)
+    faults.arm("disk_full", directory=d, duration_s=0.05, quota_bytes=1)
+    assert faults.active("disk_full", directory=d) is not None
+    time.sleep(0.08)
+    assert faults.active("disk_full", directory=d) is None
+
+
+def test_torn_sentinel_is_inactive(tmp_path):
+    d = str(tmp_path)
+    with open(os.path.join(d, "disk_full.json"), "w") as f:
+        f.write('{"kind": "disk_full", "par')  # torn mid-write
+    assert faults.active("disk_full", directory=d) is None
+
+
+def test_disk_quota_shim(monkeypatch, tmp_path):
+    d = str(tmp_path)
+    monkeypatch.setenv(faults.CHAOS_ENV, d)
+    faults.arm("disk_full", directory=d, host=0, quota_bytes=100)
+    faults.check_disk_quota(0, 50, 50)  # exactly at quota: fine
+    with pytest.raises(OSError) as ei:
+        faults.check_disk_quota(0, 51, 50)
+    assert ei.value.errno == errno.ENOSPC
+    # another host is unaffected by a host-targeted quota
+    faults.check_disk_quota(1, 10**9, 0)
+
+
+def test_store_writer_hits_quota(monkeypatch, tmp_path):
+    """End to end through the real write path: ChunkStore.Writer.append
+    raises ENOSPC mid-stream while the fault is armed, and the same
+    append succeeds after disarm (abort-not-corrupt's retry path)."""
+    from repro.checkpoint.store import ChunkStore
+
+    d = str(tmp_path / "chaos")
+    os.makedirs(d)
+    monkeypatch.setenv(faults.CHAOS_ENV, d)
+    store = ChunkStore(str(tmp_path / "ckpt"))
+    faults.arm("disk_full", directory=d, host=0, quota_bytes=1)
+    w = store.writer(2, 0)
+    with pytest.raises(OSError) as ei:
+        w.append(b"x" * 4096, "none", index=0, digest=1)
+    assert ei.value.errno == errno.ENOSPC
+    w.close(fsync=False)
+    faults.disarm("disk_full", directory=d)
+    w2 = store.writer(2, 0)
+    rec = w2.append(b"x" * 4096, "none", index=0, digest=1)
+    w2.close(fsync=False)
+    assert store.read_chunk(rec) == b"x" * 4096
+
+
+def test_arm_is_atomic_replace(tmp_path):
+    d = str(tmp_path)
+    faults.arm("disk_full", directory=d, quota_bytes=1)
+    faults.arm("disk_full", directory=d, quota_bytes=2)
+    with open(os.path.join(d, "disk_full.json")) as f:
+        doc = json.load(f)
+    assert doc["params"]["quota_bytes"] == 2
+    assert not [n for n in os.listdir(d) if ".tmp." in n]

@@ -1,0 +1,201 @@
+"""Per-injector cluster drills: every fault produces exactly the
+evidence its journal line promised, and the run still converges.
+
+Each drill runs a real (small) cluster with the injection engine wired
+through ``run_cluster(chaos=...)``, then closes the loop with the soak
+verdict: the injection must be evidenced and every alert explained.
+Marked ``integration`` (spawns OS processes)."""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.coord.supervisor import run_cluster
+
+pytestmark = pytest.mark.integration
+
+
+def _chaos_hook(run_dir, chaos_dir, fire):
+    """Adapter: run ``fire(engine, handles)`` on a thread once up."""
+    from repro.chaos.injectors import InjectionEngine
+
+    def hook(handles):
+        eng = InjectionEngine(
+            handles, os.path.join(run_dir, "INJECT_LOG.jsonl"),
+            chaos_dir=chaos_dir,
+        )
+        th = threading.Thread(target=fire, args=(eng, handles),
+                              daemon=True)
+        th.start()
+
+        class _Ctl:
+            def stop(self):
+                th.join(timeout=30)
+                eng.stop()
+
+        return _Ctl()
+
+    return hook
+
+
+def _wait_first_commit(handles, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if handles.coordinator.committed_rounds():
+            return True
+        if handles.coordinator.done.is_set():
+            return False
+        time.sleep(0.05)
+    return False
+
+
+def _verdict(run_dir):
+    from repro.obs.soak import verdict
+
+    return verdict(run_dir)
+
+
+def test_torn_frame_is_eof_not_poison(tmp_path):
+    """A valid length prefix + partial payload + hangup must be treated
+    as a dead stranger: the coordinator keeps committing rounds."""
+    run_dir = str(tmp_path)
+
+    def fire(eng, handles):
+        assert _wait_first_commit(handles)
+        eng.torn_frame()
+
+    report = run_cluster(
+        root=os.path.join(run_dir, "ckpt"), n_hosts=2, total_steps=6,
+        # the probe's evidence is a commit *after* it fires: keep the
+        # steps slow enough that rounds are still landing post-probe
+        ckpt_every=2, backend="thread", loop="numpy", step_time_s=0.2,
+        deadline_s=180.0, chaos=_chaos_hook(run_dir, None, fire),
+    )
+    assert report.latest_committed == 6
+    assert report.lockstep()
+    assert report.alerts == []  # the probe must not trip anything
+    doc = _verdict(run_dir)
+    assert doc["n_injections"] == 1
+    assert doc["checks"]["all_injections_evidenced"], doc["injections"]
+    assert doc["checks"]["no_unexplained_alerts"]
+    assert doc["pass"], doc["checks"]
+
+
+def test_disk_full_aborts_then_commits(tmp_path, monkeypatch):
+    """ENOSPC mid-persist aborts the round (abort-not-corrupt); once the
+    quota window expires the retried round commits cleanly."""
+    from repro.chaos.faults import CHAOS_ENV
+
+    run_dir = str(tmp_path)
+    chaos_dir = os.path.join(run_dir, "chaos")
+    os.makedirs(chaos_dir)
+    monkeypatch.setenv(CHAOS_ENV, chaos_dir)
+
+    def fire(eng, handles):
+        eng.disk_full(host=0, quota_bytes=1, duration_s=2.5)
+
+    report = run_cluster(
+        root=os.path.join(run_dir, "ckpt"), n_hosts=2, total_steps=6,
+        ckpt_every=2, backend="thread", loop="numpy", step_time_s=0.05,
+        deadline_s=180.0, chaos=_chaos_hook(run_dir, chaos_dir, fire),
+    )
+    aborted = [r for r in report.aborted if "persist" in r.reason]
+    assert aborted, f"no persist abort: {report.rounds}"
+    assert "host 0" in aborted[0].reason
+    assert report.latest_committed == 6      # the retry committed
+    assert report.lockstep()
+    assert report.restarts == {0: 0, 1: 0}   # a full disk kills nobody
+    doc = _verdict(run_dir)
+    assert doc["checks"]["all_injections_evidenced"], doc["injections"]
+    assert doc["checks"]["no_unexplained_alerts"], doc["alerts"]
+    assert doc["checks"]["converged"]
+    assert doc["pass"], doc
+
+
+def test_clock_skew_alert_fires_and_is_explained(tmp_path, monkeypatch):
+    """An armed skew shim pushes the heartbeat wall clock out; the
+    watchdog's clock_skew rule names the host; the verdict explains it."""
+    from repro.chaos.faults import CHAOS_ENV
+    from repro.obs.watch import WatchConfig
+
+    run_dir = str(tmp_path)
+    chaos_dir = os.path.join(run_dir, "chaos")
+    os.makedirs(chaos_dir)
+    monkeypatch.setenv(CHAOS_ENV, chaos_dir)
+
+    def fire(eng, handles):
+        eng.clock_skew(host=1, skew_s=120.0, duration_s=2.0)
+
+    report = run_cluster(
+        root=os.path.join(run_dir, "ckpt"), n_hosts=2, total_steps=30,
+        ckpt_every=10, backend="thread", loop="numpy", step_time_s=0.1,
+        deadline_s=180.0, watch_cfg=WatchConfig(max_clock_skew_s=10.0),
+        chaos=_chaos_hook(run_dir, chaos_dir, fire),
+    )
+    skews = [a for a in report.alerts if a["kind"] == "clock_skew"]
+    assert skews and skews[0]["host"] == 1
+    assert report.lockstep()
+    doc = _verdict(run_dir)
+    assert doc["checks"]["all_injections_evidenced"], doc["injections"]
+    assert doc["checks"]["no_unexplained_alerts"], doc["alerts"]
+    assert doc["pass"], doc
+
+
+def test_partition_reschedules_onto_survivor(tmp_path):
+    """A SIGSTOPped proxy host looks exactly like a network partition;
+    the worker's op timeout detects it and the coordinator reschedules
+    the proxy onto the survivor."""
+    run_dir = str(tmp_path)
+
+    def fire(eng, handles):
+        assert _wait_first_commit(handles)
+        # partition the daemon actually serving worker 0
+        name = handles.coordinator.placement.history[0][1]
+        index = next(i for i, d in enumerate(handles.daemons)
+                     if d.name == name)
+        eng.partition(index, window_s=30.0)
+
+    report = run_cluster(
+        root=os.path.join(run_dir, "ckpt"), n_hosts=1, total_steps=9,
+        ckpt_every=3, backend="thread", loop="numpy", step_time_s=0.25,
+        device_runner="proxy", proxy_hosts=2, persist_timeout_s=3.0,
+        deadline_s=240.0, chaos=_chaos_hook(run_dir, None, fire),
+    )
+    # the worker was re-placed: two placements, second on the survivor
+    assert len(report.proxy_placements) >= 2
+    first, second = report.proxy_placements[0], report.proxy_placements[-1]
+    assert first[0] == second[0] == 0 and first[1] != second[1]
+    assert report.latest_committed == 9
+    assert report.lockstep()
+    doc = _verdict(run_dir)
+    assert doc["checks"]["all_injections_evidenced"], doc["injections"]
+    assert doc["checks"]["no_unexplained_alerts"], doc["alerts"]
+    assert doc["pass"], doc
+
+
+def test_inject_log_is_written_before_the_fault(tmp_path):
+    """The journal-first discipline: the INJECT_LOG line (with its
+    expected-evidence spec) exists even when the fault itself no-ops."""
+    from repro.chaos.injectors import ClusterHandles, InjectionEngine
+
+    class _NoProcs:
+        procs: dict = {}
+
+    eng = InjectionEngine(
+        ClusterHandles(coordinator=None, supervisor=_NoProcs(),
+                       daemons=[], root=str(tmp_path)),
+        os.path.join(str(tmp_path), "INJECT_LOG.jsonl"),
+        chaos_dir=str(tmp_path / "chaos"),
+    )
+    doc = eng.kill_worker(0)          # host 0 does not exist: fault no-ops
+    eng.journal.close()
+    assert doc["seq"] == 1
+    with open(os.path.join(str(tmp_path), "INJECT_LOG.jsonl")) as f:
+        [line] = [json.loads(x) for x in f]
+    assert line["schema"] == "crum-inject/1"
+    assert line["event"] == "inject"
+    assert line["kind"] == "kill_worker"
+    assert line["expect"]["any"]
+    assert "worker_death" in line["expect"]["explains"]

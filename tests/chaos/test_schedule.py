@@ -1,0 +1,59 @@
+"""Seeded chaos schedules: determinism, safety caps, shape validation."""
+import pytest
+
+from repro.chaos.schedule import build_schedule
+
+
+def test_same_seed_same_plan():
+    kw = dict(duration_s=120.0, n_hosts=3, n_proxy_hosts=3)
+    a = build_schedule(seed=42, **kw)
+    b = build_schedule(seed=42, **kw)
+    assert a == b
+    assert a, "a two-minute soak must plan at least one injection"
+
+
+def test_different_seed_different_plan():
+    kw = dict(duration_s=120.0, n_hosts=3, n_proxy_hosts=3)
+    plans = {tuple((p.kind, p.offset_s) for p in
+             build_schedule(seed=s, **kw)) for s in range(6)}
+    assert len(plans) > 1
+
+
+def test_worker_kill_cap_respected():
+    plan = build_schedule(seed=1, duration_s=600.0, n_hosts=2,
+                          kinds=("kill_worker",),
+                          max_worker_kills_per_host=1)
+    kills: dict[int, int] = {}
+    for p in plan:
+        kills[p.params["host"]] = kills.get(p.params["host"], 0) + 1
+    assert kills and max(kills.values()) <= 1
+
+
+def test_proxy_host_kills_leave_a_survivor():
+    plan = build_schedule(seed=3, duration_s=600.0, n_hosts=2,
+                          n_proxy_hosts=3,
+                          kinds=("kill_proxy_host", "partition"))
+    killed = {p.params["index"] for p in plan
+              if p.kind == "kill_proxy_host"}
+    assert len(killed) <= 2  # of 3: always one survivor
+    # a partitioned daemon is never one already killed earlier
+    dead: set[int] = set()
+    for p in plan:
+        if p.kind == "partition":
+            assert p.params["index"] not in dead
+        elif p.kind == "kill_proxy_host":
+            dead.add(p.params["index"])
+
+
+def test_proxy_kinds_need_daemons():
+    with pytest.raises(ValueError):
+        build_schedule(seed=0, duration_s=60.0, n_hosts=2,
+                       n_proxy_hosts=0, kinds=("partition",))
+
+
+def test_tail_is_fault_free():
+    plan = build_schedule(seed=5, duration_s=90.0, n_hosts=2,
+                          n_proxy_hosts=2)
+    assert plan
+    # the last third of the run is reserved for convergence
+    assert max(p.offset_s for p in plan) < 90.0 - 20.0

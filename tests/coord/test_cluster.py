@@ -3,6 +3,8 @@ coordinator + restart supervisor. Marked ``integration`` (spawns N OS
 processes per test; each imports jax)."""
 import json
 import os
+import signal
+import threading
 
 import pytest
 
@@ -82,6 +84,55 @@ def test_kill_and_respawn_converges(tmp_path):
                      if e["event"] == "round" and e["step"] == 6
                      and e["status"] == "committed")
     assert alert_i < commit6_i
+
+
+def test_supervisor_respawns_pre_reaped_death(tmp_path):
+    """Reap-race regression: a worker that is already dead — and whose exit
+    status ``is_alive()`` has already collected via waitpid — before the
+    watch loop's first pass must still be respawned. The old loop only
+    reaped deaths whose sentinel fired inside its own ``sentinel_wait``
+    call, so a death noticed by ``is_alive()`` first was dropped forever
+    and the cluster hung at the barrier until the coordinator deadline
+    (the order-dependent timeout seen when this file runs sequentially
+    under load)."""
+    from repro.coord.coordinator import Coordinator
+    from repro.coord.supervisor import ClusterSupervisor
+    from repro.coord.worker import WorkerConfig
+
+    root = str(tmp_path / "cluster")
+    coord = Coordinator(root, n_hosts=1).start()
+    host_addr, port = coord.address
+    cfg = WorkerConfig(
+        host=0, n_hosts=1, coord_host=host_addr, coord_port=port,
+        root=root, total_steps=2, ckpt_every=2, backend="thread",
+        loop="numpy", deadline_s=120.0,
+    )
+    sup = ClusterSupervisor([cfg])
+    sup.start()
+    # kill AND fully reap before watch() runs: no sentinel event is left
+    # for the watch loop to observe, only the is_alive() fact
+    os.kill(sup.procs[0].pid, signal.SIGKILL)
+    sup.procs[0].join()
+    assert not sup.procs[0].is_alive()
+
+    coord_err = {}
+
+    def drive():
+        try:
+            coord.run(deadline_s=120.0)
+        except Exception as e:  # surfaced below
+            coord_err["e"] = e
+
+    driver = threading.Thread(target=drive, daemon=True)
+    driver.start()
+    try:
+        sup.watch(coord.done, deadline_s=120.0)
+    finally:
+        sup.terminate()
+    driver.join(timeout=30)
+    assert "e" not in coord_err, coord_err
+    assert sup.restarts[0] == 1
+    assert coord.latest_committed == 2
 
 
 @pytest.mark.parametrize("backend", BACKENDS)

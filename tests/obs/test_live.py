@@ -210,3 +210,65 @@ def test_maybe_snapshot_rate_limited(tmp_path):
 
 def test_default_ring_is_sane():
     assert DEFAULT_RING >= 60  # a few minutes at heartbeat cadence
+
+
+# -- tiered rollups ----------------------------------------------------------
+
+def test_rollup_buckets_fold_and_close():
+    s = SeriesStore(ring=8, rollups=(10.0,))
+    for i, v in enumerate([1.0, 5.0, 3.0]):
+        s.append(0, "fd", 100.0 + i, v)     # all inside bucket 100
+    s.append(0, "fd", 112.0, 9.0)           # bucket 110 opens, 100 closes
+    pts = s.rollup(0, "fd", 10.0)
+    # closed bucket: [t, last, min, max, n]; open bucket rides along
+    assert pts == [[100.0, 3.0, 1.0, 5.0, 3], [110.0, 9.0, 9.0, 9.0, 1]]
+
+
+def test_rollup_open_bucket_is_provisional():
+    s = SeriesStore(rollups=(60.0,))
+    s.append(1, "x", 30.0, 2.0)
+    assert s.rollup(1, "x", 60.0) == [[0.0, 2.0, 2.0, 2.0, 1]]
+    s.append(1, "x", 40.0, 7.0)
+    assert s.rollup(1, "x", 60.0) == [[0.0, 7.0, 2.0, 7.0, 2]]
+
+
+def test_rollup_outlives_the_raw_ring():
+    """The whole point: a spike the wrapped raw ring forgot is still in
+    the rollup's min/max envelope."""
+    s = SeriesStore(ring=4, rollups=(10.0,))
+    s.append(0, "fd", 100.0, 99.0)          # the spike
+    for i in range(8):
+        s.append(0, "fd", 111.0 + i, 1.0)   # wraps the 4-point raw ring
+    raw = s.series(0, "fd")
+    assert len(raw) == 4 and all(v == 1.0 for _, v in raw)
+    [closed, _open] = s.rollup(0, "fd", 10.0)
+    assert closed[3] == 99.0                # max survived the wrap
+
+
+def test_rollup_ring_is_bounded():
+    s = SeriesStore(rollups=(1.0,), rollup_ring=3)
+    for i in range(10):
+        s.append(0, "x", float(i), float(i))
+    pts = s.rollup(0, "x", 1.0)
+    assert len(pts) == 4  # 3 closed (ring) + 1 open
+    assert pts[0][0] == 6.0
+
+
+def test_aggregator_snapshot_carries_rollups():
+    agg = LiveAggregator()
+    agg.observe(-1, "coord_fd", 10.0, t=5.0)
+    agg.observe(-1, "coord_fd", 12.0, t=25.0)
+    doc = agg.snapshot()
+    pts = doc["rollups"]["10"]["-1"]["coord_fd"]
+    assert pts == [[0.0, 10.0, 10.0, 10.0, 1], [20.0, 12.0, 12.0, 12.0, 1]]
+    # 60s tier folds both into one (still-open) bucket
+    assert doc["rollups"]["60"]["-1"]["coord_fd"] == \
+        [[0.0, 12.0, 10.0, 12.0, 2]]
+
+
+def test_drop_host_drops_rollups():
+    s = SeriesStore(rollups=(10.0,))
+    s.append(3, "x", 5.0, 1.0)
+    s.append(3, "x", 15.0, 2.0)
+    s.drop_host(3)
+    assert s.rollup(3, "x", 10.0) == []

@@ -285,3 +285,46 @@ def test_default_sampler_excludes_obs_fds():
 
     wd = Watchdog()
     assert wd._sampler is leakcheck.watchdog_sample
+
+
+def test_clock_skew_rule_rearms():
+    """A skewed heartbeat wall clock alerts once, recovers, re-arms."""
+    import time as _time
+
+    wd = Watchdog(WatchConfig(max_clock_skew_s=5.0))
+    wd.on_heartbeat(0, 1, wt=_time.time() + 60.0)
+    [a] = wd.alerts
+    assert a.kind == "clock_skew" and a.host == 0
+    assert a.value > 5.0 and a.limit == 5.0
+    # still skewed: no duplicate while the alert is armed
+    wd.on_heartbeat(0, 2, wt=_time.time() + 60.0)
+    assert len(wd.alerts) == 1
+    # recovered: the rule re-arms…
+    wd.on_heartbeat(0, 3, wt=_time.time())
+    assert len(wd.alerts) == 1
+    # …so a second skew window alerts again
+    wd.on_heartbeat(0, 4, wt=_time.time() - 60.0)  # |skew| counts both ways
+    assert [x.kind for x in wd.alerts] == ["clock_skew", "clock_skew"]
+
+
+def test_clock_skew_disabled_by_default():
+    import time as _time
+
+    wd = Watchdog()
+    wd.on_heartbeat(0, 1, wt=_time.time() + 1e6)
+    wd.on_heartbeat(0, 2)  # wt-less heartbeats always fine
+    assert wd.alerts == []
+
+
+def test_tick_returns_the_leak_sample():
+    seen = {"n": 0}
+
+    def sampler():
+        seen["n"] += 1
+        return {"supported": True, "fd": 10 + seen["n"], "shm": 2}
+
+    wd = Watchdog(WatchConfig(leak_sample_every_s=10.0), sampler=sampler)
+    s = wd.tick(now=0.0)
+    assert s == {"supported": True, "fd": 11, "shm": 2}
+    assert wd.tick(now=1.0) is None  # inside the sampling interval
+    assert wd.tick(now=20.0)["fd"] == 12
